@@ -1,0 +1,32 @@
+"""Paper Figure 5: inference-task time and peak memory, 5 problems x
+3 configurations (eager / lazy / lazy+single-reference)."""
+
+from __future__ import annotations
+
+from repro.core.config import ALL_MODES
+from repro.smc.programs import PROBLEMS
+
+from benchmarks.common import build_runner, csv_row, time_run
+
+
+def run(n: int = 128, t: int = 48, reps: int = 3):
+    rows = []
+    for name in PROBLEMS:
+        for mode in ALL_MODES:
+            runner, cfg = build_runner(name, mode, n, t, simulate=False)
+            secs, peak, logz = time_run(runner, reps)
+            block_bytes = cfg.block_size * 4  # f32 items
+            rows.append(
+                csv_row(
+                    f"fig5_inference_{name}_{mode.value}",
+                    secs,
+                    f"peak_blocks={peak};peak_kb={peak * block_bytes // 1024};"
+                    f"logZ={logz:.2f};N={n};T={t}",
+                )
+            )
+            print(rows[-1], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Paper Figure 7: time and memory as functions of t.
+
+Theory: eager shows quadratic cumulative time and linear memory in t;
+lazy shows linear time and slower-growing memory (the sparse bound),
+except PCFG (latest-state-only).  We report the per-step memory trace
+(from the filter itself) and cumulative wall time at T/4, T/2, 3T/4, T.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.config import CopyMode
+from repro.smc.programs import PROBLEMS
+
+from benchmarks.common import KEY, build_runner, csv_row, time_run
+
+
+def run(n: int = 128, t: int = 64, problems=("rbpf", "mot")):
+    rows = []
+    for name in problems:
+        for mode in (CopyMode.EAGER, CopyMode.LAZY, CopyMode.LAZY_SR):
+            times = []
+            for frac in (0.25, 0.5, 0.75, 1.0):
+                tt = max(4, int(t * frac))
+                runner, cfg = build_runner(name, mode, n, tt, simulate=False)
+                secs, peak, _ = time_run(runner, reps=2)
+                times.append((tt, secs, peak))
+            trace = ";".join(f"t{tt}:s={s:.3f}:blk={p}" for tt, s, p in times)
+            # growth ratio: time(T) / time(T/2) — ~2 for linear, ~4 quadratic
+            growth = times[-1][1] / max(times[1][1], 1e-9)
+            rows.append(
+                csv_row(
+                    f"fig7_scaling_{name}_{mode.value}",
+                    times[-1][1],
+                    f"growthT/T2={growth:.2f};{trace}",
+                )
+            )
+            print(rows[-1], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

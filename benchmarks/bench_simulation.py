@@ -1,0 +1,30 @@
+"""Paper Figure 6: simulation-task time and memory (no copies occur —
+isolates the bookkeeping overhead of lazy pointers)."""
+
+from __future__ import annotations
+
+from repro.core.config import ALL_MODES
+from repro.smc.programs import PROBLEMS
+
+from benchmarks.common import build_runner, csv_row, time_run
+
+
+def run(n: int = 128, t: int = 48, reps: int = 3):
+    rows = []
+    for name in PROBLEMS:
+        for mode in ALL_MODES:
+            runner, cfg = build_runner(name, mode, n, t, simulate=True)
+            secs, peak, _ = time_run(runner, reps)
+            rows.append(
+                csv_row(
+                    f"fig6_simulation_{name}_{mode.value}",
+                    secs,
+                    f"peak_blocks={peak};N={n};T={t}",
+                )
+            )
+            print(rows[-1], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Jacob, Murray & Rubenthaler (2015): reachable-set bound.
+
+Measures live blocks of the lazy store across (N, t) under per-step
+multinomial resampling against the t + c N log N bound — the theory that
+predicts the platform's O(DT + DN log DN) memory.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import CopyMode
+from repro.core import store as store_lib
+from repro.core.store import StoreConfig
+
+from benchmarks.common import csv_row
+
+
+def run(t: int = 100):
+    rows = []
+    rng = np.random.default_rng(0)
+    for n in (32, 128, 512):
+        cfg = StoreConfig(
+            mode=CopyMode.LAZY_SR, n=n, block_size=1, max_blocks=t, num_blocks=n * t
+        )
+        s = store_lib.create(cfg)
+        worst_ratio = 0.0
+        append = jax.jit(store_lib.append, static_argnums=0)
+        clone = jax.jit(store_lib.clone, static_argnums=0)
+        for step in range(t):
+            s = append(cfg, s, jnp.zeros((n,)))
+            anc = jnp.asarray(rng.integers(0, n, n), jnp.int32)
+            s = clone(cfg, s, anc)
+            used = int(store_lib.used_blocks(cfg, s))
+            bound = step + 1 + 6 * n * math.log(n)
+            worst_ratio = max(worst_ratio, used / bound)
+        final = int(store_lib.used_blocks(cfg, s))
+        rows.append(
+            csv_row(
+                f"tree_bound_N{n}",
+                0.0,
+                f"final_blocks={final};dense={n * t};"
+                f"worst_used/bound={worst_ratio:.3f};bound_c=6",
+            )
+        )
+        print(rows[-1], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Shared benchmark harness utilities."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import ALL_MODES, CopyMode
+from repro.smc.filters import FilterConfig, ParticleFilter
+from repro.smc.pgibbs import ParticleGibbs
+from repro.smc.programs import PROBLEMS
+
+KEY = jax.random.PRNGKey(0)
+
+
+def build_runner(name: str, mode: CopyMode, n: int, t: int, simulate: bool):
+    mod = PROBLEMS[name]
+    if mod.NAME == "pcfg":
+        ssm, params = mod.build(mode)
+    else:
+        ssm, params = mod.build()
+    obs = mod.gen_data(KEY, t)
+    cfg = FilterConfig(
+        n_particles=n, n_steps=t, mode=mode,
+        max_retries=(6 if mod.METHOD == "alive" else 0),
+    )
+    if mod.METHOD == "pg" and not simulate:
+        pg = ParticleGibbs(ssm, cfg)
+
+        def run(key):
+            out = pg.run(key, params, obs, n_iters=3)
+            return out.peak_blocks, out.log_evidences[-1]
+
+        return run, cfg
+    pf = ParticleFilter(ssm, cfg)
+    fn = pf.jitted(simulate=simulate)
+
+    def run(key):
+        res = fn(key, params, obs)
+        return res.store.peak_blocks, res.log_evidence
+
+    return run, cfg
+
+
+def time_run(run: Callable, reps: int = 3) -> Tuple[float, int, float]:
+    """(median seconds, peak_blocks, logZ) after a warmup call."""
+    peak, logz = run(KEY)  # warmup (compile)
+    jax.block_until_ready(peak)
+    times = []
+    for i in range(reps):
+        t0 = time.time()
+        peak, logz = run(jax.random.PRNGKey(i))
+        jax.block_until_ready(peak)
+        times.append(time.time() - t0)
+    return float(np.median(times)), int(peak), float(logz)
+
+
+def csv_row(name: str, seconds: float, derived: str) -> str:
+    return f"{name},{seconds * 1e6:.0f},{derived}"

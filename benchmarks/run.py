@@ -1,0 +1,54 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+#
+#   fig5  — inference time/memory, 5 problems x 3 copy configurations
+#   fig6  — simulation overhead (no copies)
+#   fig7  — time/memory scaling in t
+#   tree  — Jacob et al. reachable-set bound
+#   serve — beyond-paper: COW-paged KV under SMC decoding
+#
+# ``--quick`` shrinks N/T for CI-speed runs; default sizes run in
+# minutes on a CPU host.  The at-scale numbers live in the dry-run
+# roofline tables (results/, EXPERIMENTS.md), not here.
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument(
+        "--only", default="",
+        help="comma list of {fig5,fig6,fig7,tree,serve,block}",
+    )
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (
+        bench_block_size,
+        bench_inference,
+        bench_scaling,
+        bench_serving,
+        bench_simulation,
+        bench_tree_bound,
+    )
+
+    n, t = (48, 24) if args.quick else (128, 48)
+    print("name,us_per_call,derived")
+    if only is None or "fig5" in only:
+        bench_inference.run(n=n, t=t, reps=2 if args.quick else 3)
+    if only is None or "fig6" in only:
+        bench_simulation.run(n=n, t=t, reps=2 if args.quick else 3)
+    if only is None or "fig7" in only:
+        bench_scaling.run(n=n, t=2 * t)
+    if only is None or "tree" in only:
+        bench_tree_bound.run(t=40 if args.quick else 100)
+    if only is None or "serve" in only:
+        bench_serving.run(steps=16 if args.quick else 32)
+    if only is None or "block" in only:
+        bench_block_size.run(n=n, t=2 * t)
+
+
+if __name__ == "__main__":
+    main()

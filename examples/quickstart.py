@@ -1,0 +1,95 @@
+"""Quickstart: the paper's platform in five minutes.
+
+1. The object-graph semantics (paper Section 2): lazy deep copies,
+   copy-on-write, and the Table 2 cross-reference case.
+2. The array-world platform: a particle filter whose storage strategy is
+   a config switch — identical outputs, very different memory.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import ALL_MODES, CopyMode
+from repro.core.graph import Runtime
+from repro.smc.filters import FilterConfig, ParticleFilter, SSMDef
+
+print("=" * 72)
+print("1. Object-graph lazy copies (paper Section 2, Tables 1-2)")
+print("=" * 72)
+
+rt = Runtime(CopyMode.LAZY_SR)
+x1 = rt.new(value=1)
+rt.write_new(x1, "next", value=2)
+
+x2 = rt.deep_copy(x1)  # O(1): a label and an edge, no payload copied
+print(f"after deep_copy:        payload copies = {rt.stats.payload_copies}")
+
+_ = rt.read(x2, "value")  # reads don't copy
+print(f"after read:             payload copies = {rt.stats.payload_copies}")
+
+rt.write(x2, "value", 10)  # first write copies exactly one node
+print(f"after write:            payload copies = {rt.stats.payload_copies}")
+print(f"original intact:        x1.value = {rt.read(x1, 'value')}")
+print(f"copy diverged:          x2.value = {rt.read(x2, 'value')}")
+
+# Table 2: cross reference -> eager finish, correct result
+rt2 = Runtime(CopyMode.LAZY_SR)
+a1 = rt2.new(value=1)
+a2 = rt2.deep_copy(a1)
+rt2.write(a2, "value", 2)
+rt2.write(a2, "next", a1)  # cross reference
+a3 = rt2.deep_copy(a2)
+rt2.write(a3, "value", 3)
+y3 = rt2.read(a3, "next")
+print(f"Table 2 cross-reference case prints {rt2.read(y3, 'value')} (paper: 1)")
+
+print()
+print("=" * 72)
+print("2. Particle filter: one code path, three storage strategies")
+print("=" * 72)
+
+A, Q, R = 0.9, 0.5, 0.3
+
+
+def lgssm() -> SSMDef:
+    def init(key, n, params):
+        return jax.random.normal(key, (n,))
+
+    def step(key, x, t, y_t, params):
+        x = A * x + math.sqrt(Q) * jax.random.normal(key, x.shape)
+        logw = -0.5 * ((y_t - x) ** 2 / R + math.log(2 * math.pi * R))
+        return x, logw, x[:, None]
+
+    return SSMDef(init=init, step=step, record_shape=(1,))
+
+
+key = jax.random.PRNGKey(0)
+ys = jax.random.normal(key, (64,))  # any observations will do here
+N, T = 256, 64
+
+for mode in ALL_MODES:
+    cfg = FilterConfig(n_particles=N, n_steps=T, mode=mode, block_size=1)
+    pf = ParticleFilter(lgssm(), cfg)
+    fn = pf.jitted()
+    res = fn(key, None, ys)  # compile + run
+    jax.block_until_ready(res.log_evidence)
+    t0 = time.time()
+    res = fn(key, None, ys)
+    jax.block_until_ready(res.log_evidence)
+    dt = time.time() - t0
+    print(
+        f"{mode.value:<8} logZ={float(res.log_evidence):9.3f}  "
+        f"peak_memory={int(res.store.peak_blocks):6d} items  "
+        f"(dense would be {N * T})  time={dt * 1e3:.1f} ms"
+    )
+
+print()
+print(f"sparse bound t + 6 N log N = {T + 6 * N * math.log(N):.0f} items")
+print("identical logZ across modes = the paper's correctness check;")
+print("the lazy modes' peak memory follows the sparse bound, not N*T.")

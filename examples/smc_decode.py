@@ -1,0 +1,63 @@
+"""Population-based LM decoding on the COW-paged KV cache.
+
+This is the paper's motivating pattern running inside a serving stack —
+and the framework's end-to-end serving driver: a small decoder LM serves
+a *population* of N continuations with batched requests; resampling
+forks KV lineages with zero copying (refcount bookkeeping only); appends
+copy-on-write one tail page per diverging lineage.
+
+Run:  PYTHONPATH=src python examples/smc_decode.py [--particles 32]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models.model import LanguageModel
+from repro.serving.smc_decode import SMCDecoder
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--particles", type=int, default=32)
+ap.add_argument("--steps", type=int, default=48)
+ap.add_argument("--prompt-len", type=int, default=12)
+ap.add_argument("--target-temp", type=float, default=0.5)
+args = ap.parse_args()
+
+key = jax.random.PRNGKey(0)
+cfg = smoke_config("musicgen_large")  # small decoder backbone
+lm = LanguageModel(cfg)
+params, _ = lm.init(key)
+
+print(f"model: {cfg.name} (reduced) — {cfg.n_layers}L d{cfg.d_model}")
+print(f"population: {args.particles} particles, {args.steps} tokens, "
+      f"target temperature {args.target_temp}")
+
+dec = SMCDecoder(
+    lm, params,
+    n_particles=args.particles,
+    max_len=args.prompt_len + args.steps + 16,
+    target_temp=args.target_temp,
+    block_size=4,
+)
+prompt = jax.random.randint(key, (args.prompt_len,), 0, cfg.vocab_size)
+
+t0 = time.time()
+res = dec.run(key, prompt, steps=args.steps)
+dt = time.time() - t0
+
+dense = dec.dense_equivalent_blocks(args.steps, args.prompt_len)
+peak = int(np.max(np.asarray(res.used_blocks_trace)))
+print(f"\ndecoded {args.particles}x{args.steps} tokens in {dt:.1f}s "
+      f"({dt / args.steps * 1e3:.0f} ms/step incl. compile)")
+print(f"resampling events: {int(res.resampled.sum())} "
+      f"(each forked {args.particles} KV lineages with ZERO copying)")
+print(f"peak KV blocks:    {peak}  vs dense per-sequence caches: {dense} "
+      f"({dense / peak:.2f}x saving)")
+print(f"log evidence:      {float(res.log_evidence):.2f}")
+print(f"final ESS:         {float(res.ess_trace[-1]):.1f} / {args.particles}")
+best = int(jnp.argmax(res.log_weights))
+print(f"best continuation: {np.asarray(res.tokens[best])[:16]} ...")

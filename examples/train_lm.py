@@ -1,0 +1,51 @@
+"""End-to-end training driver example.
+
+Trains an assigned-architecture model on the synthetic Markov corpus
+with the full substrate: data pipeline -> jitted train step (loss, grads,
+clipping, AdamW) -> async checkpoints -> crash-idempotent resume.
+
+CPU-friendly default: the reduced mamba2 config (~100k params) for 300
+steps — loss visibly approaches the corpus entropy floor in ~a minute.
+``--arch mamba2_130m --full`` trains the real 130M-parameter config
+(sized for a TPU host; identical code path, and the same step function
+the multi-pod dry-run compiles for the 256-chip mesh).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+Resume after a crash: just run the same command again.
+"""
+
+import argparse
+
+from repro.configs import get_config, smoke_config
+from repro.data.pipeline import DataConfig
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_loop import TrainConfig, Trainer
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="mamba2_130m")
+ap.add_argument("--full", action="store_true")
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq-len", type=int, default=128)
+args = ap.parse_args()
+
+model_cfg = get_config(args.arch) if args.full else smoke_config(args.arch)
+data_cfg = DataConfig(
+    vocab_size=model_cfg.vocab_size, seq_len=args.seq_len,
+    global_batch=args.batch,
+)
+trainer = Trainer(
+    model_cfg,
+    data_cfg,
+    AdamWConfig(learning_rate=3e-3, warmup_steps=20, total_steps=args.steps),
+    TrainConfig(
+        total_steps=args.steps,
+        log_every=20,
+        checkpoint_every=100,
+        checkpoint_dir=f"checkpoints/example_{args.arch}",
+    ),
+)
+history = trainer.run()
+floor = trainer.data.entropy_rate
+print(f"\nloss {history['loss'][0]:.3f} -> {history['loss'][-1]:.3f} "
+      f"(corpus entropy floor {floor:.3f} nats/token)")

@@ -1,0 +1,82 @@
+"""Per-instruction byte/FLOP breakdown of a dry-run cell's compiled HLO.
+
+The 'profiler' of the CPU-hosted perf loop: shows which instructions
+(weighted by loop trip counts) dominate the memory / compute / collective
+terms, so each hillclimb iteration has a concrete target.
+
+Usage: PYTHONPATH=src python scripts/hlo_breakdown.py <arch> <shape> [single|multi] [top_n]
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import sys
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    mesh_name = sys.argv[3] if len(sys.argv) > 3 else "single"
+    top_n = int(sys.argv[4]) if len(sys.argv) > 4 else 20
+
+    import jax
+    from repro.distributed import sharding as shd
+    from repro.distributed.hlo import Module
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    cell = build_cell(arch, shape, mesh)
+    with mesh, shd.activation_sharding(mesh, mode=("decode" if cell.shape.kind == "decode" else "train")):
+        compiled = jax.jit(
+            cell.step_fn,
+            in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+            donate_argnums=cell.donate_argnums,
+        ).lower(*cell.args).compile()
+    txt = compiled.as_text()
+    m = Module(txt)
+    mult = m.multiplicities()
+    fused = m._fused_bodies()
+
+    byte_rows, flop_rows, coll_rows = [], [], []
+    skip = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+            "while", "conditional", "iota", "after-all"}
+    for cname, instrs in m.computations.items():
+        mm = mult.get(cname, 0)
+        if mm == 0:
+            continue
+        for ins in instrs:
+            if ins.opcode in ("dot", "convolution"):
+                flop_rows.append(
+                    (m.dot_flops(ins) * mm, mm, cname, ins.opcode, ins.name,
+                     ins.type_str)
+                )
+            if cname in fused:
+                continue
+            if ins.opcode in skip or ins.opcode.endswith("-done"):
+                continue
+            base = ins.opcode[:-6] if ins.opcode.endswith("-start") else ins.opcode
+            if base in ("all-reduce", "all-gather", "reduce-scatter",
+                        "all-to-all", "collective-permute"):
+                coll_rows.append(
+                    (m.operand_bytes(ins) * mm, mm, cname, base, ins.name,
+                     ins.type_str)
+                )
+            byte_rows.append(
+                (m.memory_bytes(ins) * mm, mm, cname, ins.opcode, ins.name,
+                 ins.type_str)
+            )
+
+    for title, rows in (("BYTES", byte_rows), ("FLOPS", flop_rows),
+                        ("COLLECTIVES", coll_rows)):
+        rows.sort(reverse=True)
+        total = sum(r[0] for r in rows)
+        print(f"\n===== {title}: total {total:.3e} =====")
+        for r in rows[:top_n]:
+            frac = r[0] / total if total else 0
+            print(f"{r[0]:.3e} ({frac:5.1%}) mult={r[1]:<7} {r[3]:<22} "
+                  f"{r[4][:44]:<46} {r[5][:70]}")
+
+
+if __name__ == "__main__":
+    main()

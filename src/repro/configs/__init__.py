@@ -1,0 +1,11 @@
+# Assigned-architecture registry: `--arch <id>` resolves here.
+
+from repro.configs.registry import (
+    ARCHS,
+    SHAPES,
+    get_config,
+    smoke_config,
+    shape_cells,
+)
+
+__all__ = ["ARCHS", "SHAPES", "get_config", "smoke_config", "shape_cells"]

@@ -1,0 +1,76 @@
+"""Registry over the per-architecture config modules and input shapes."""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List, Tuple
+
+from repro.models.config import ModelConfig
+
+ARCHS = [
+    "zamba2_7b",
+    "deepseek_moe_16b",
+    "phi35_moe_42b",
+    "starcoder2_3b",
+    "gemma3_12b",
+    "command_r_plus_104b",
+    "qwen25_32b",
+    "llama32_vision_90b",
+    "musicgen_large",
+    "mamba2_130m",
+]
+
+# canonical ids from the assignment -> module names
+ALIASES = {
+    "zamba2-7b": "zamba2_7b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe_42b",
+    "starcoder2-3b": "starcoder2_3b",
+    "gemma3-12b": "gemma3_12b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "qwen2.5-32b": "qwen25_32b",
+    "llama-3.2-vision-90b": "llama32_vision_90b",
+    "musicgen-large": "musicgen_large",
+    "mamba2-130m": "mamba2_130m",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod_name = ALIASES.get(arch, arch.replace("-", "_").replace(".", ""))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def smoke_config(arch: str) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    mod_name = ALIASES.get(arch, arch.replace("-", "_").replace(".", ""))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.SMOKE
+
+
+def shape_cells(arch: str) -> List[str]:
+    """The dry-run cells for an arch: long_500k only for sub-quadratic
+    families (DESIGN.md §4); all archs here are decoder-style so decode
+    shapes always apply."""
+    cfg = get_config(arch)
+    cells = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.sub_quadratic:
+        cells.append("long_500k")
+    return cells

@@ -1,0 +1,20 @@
+# The paper's primary contribution: the lazy object-copy platform.
+#
+#   graph.py  — faithful object-graph semantics (paper Section 2-3)
+#   pool.py   — refcounted block pool (TPU-native adaptation)
+#   store.py  — population store: lazy clone + copy-on-write writes
+#   config.py — the paper's three evaluation configurations
+
+from repro.core.config import ALL_MODES, CopyMode
+from repro.core.graph import Runtime
+from repro.core.pool import BlockPool
+from repro.core.store import ParticleStore, StoreConfig
+
+__all__ = [
+    "ALL_MODES",
+    "CopyMode",
+    "Runtime",
+    "BlockPool",
+    "ParticleStore",
+    "StoreConfig",
+]

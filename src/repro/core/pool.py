@@ -1,0 +1,197 @@
+"""Refcounted block pool — the TPU-native substrate for lazy object copy.
+
+This is the array-world adaptation of the paper's platform (see DESIGN.md
+§2): payload lives in fixed-capacity *blocks* (slabs) of a pre-allocated
+pool; "objects" are block tables holding indices into the pool; the
+paper's operations map as
+
+=====================  ====================================================
+paper                  here
+=====================  ====================================================
+vertex                 block (a row of ``data``)
+edge / lazy pointer    a block-table entry (index into the pool)
+``R`` (read-only set)  ``frozen`` bitmask
+``DEEP-COPY``          refcount increments on a gathered table (O(1) data)
+``GET`` (write)        :func:`~repro.core.store` COW append/write
+``FREEZE``             ``freeze`` (marks blocks read-only)
+reference-count GC     ``refcount``; blocks with refcount 0 are free
+single-reference opt   in-place write when ``refcount == 1``
+=====================  ====================================================
+
+Everything here is functional and jittable: fixed shapes, no host
+round-trips.  Allocation uses ``jnp.nonzero(..., size=n)`` (static size)
+over the free mask; failed allocations surface through the ``oom`` flag
+rather than raising, so the caller can handle exhaustion under jit.
+
+Masked/NULL entries in every scatter are routed to an out-of-bounds
+index and dropped (``mode="drop"``) — never clipped — so duplicate
+indices cannot clobber live blocks.
+
+The pool composes with ``shard_map``: each device shard owns an
+independent pool (per-shard free lists, no cross-device allocation), the
+same way the paper gives each thread its own context stack.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "BlockPool",
+    "init",
+    "alloc",
+    "add_refs",
+    "sub_refs",
+    "freeze",
+    "write_blocks",
+    "read_blocks",
+    "blocks_in_use",
+    "NULL_BLOCK",
+]
+
+NULL_BLOCK = jnp.int32(-1)
+
+
+class BlockPool(NamedTuple):
+    """A pool of reference-counted payload blocks.
+
+    Attributes:
+      data:     ``[num_blocks, *block_shape]`` payload slabs.
+      refcount: ``[num_blocks] int32`` — 0 means free.
+      frozen:   ``[num_blocks] bool`` — the paper's read-only set ``R``.
+                Only consulted in ``CopyMode.LAZY`` (no single-reference
+                optimization); ``LAZY_SR`` uses ``refcount == 1`` instead.
+      oom:      scalar bool, sticky: an allocation ever failed.
+    """
+
+    data: jax.Array
+    refcount: jax.Array
+    frozen: jax.Array
+    oom: jax.Array
+
+    @property
+    def num_blocks(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def block_shape(self) -> Tuple[int, ...]:
+        return self.data.shape[1:]
+
+
+def init(
+    num_blocks: int,
+    block_shape: Sequence[int],
+    dtype: jnp.dtype = jnp.float32,
+) -> BlockPool:
+    """Create an empty pool of ``num_blocks`` blocks."""
+    return BlockPool(
+        data=jnp.zeros((num_blocks, *block_shape), dtype=dtype),
+        refcount=jnp.zeros((num_blocks,), dtype=jnp.int32),
+        frozen=jnp.zeros((num_blocks,), dtype=jnp.bool_),
+        oom=jnp.zeros((), dtype=jnp.bool_),
+    )
+
+
+def _scatter_ids(num_blocks: int, ids: jax.Array, mask: jax.Array | None = None) -> jax.Array:
+    """Route NULL/masked entries out of bounds so drop-mode scatters skip them."""
+    ok = ids >= 0
+    if mask is not None:
+        ok = ok & mask
+    return jnp.where(ok, ids, num_blocks)
+
+
+def _gather_ids(ids: jax.Array) -> jax.Array:
+    """Clip NULL entries to 0 for gathers (callers mask the result)."""
+    return jnp.where(ids >= 0, ids, 0)
+
+
+def alloc(pool: BlockPool, n: int, commit: jax.Array | None = None) -> Tuple[BlockPool, jax.Array]:
+    """Allocate up to ``n`` blocks (static ``n``).
+
+    Returns the first ``n`` free block indices.  ``commit`` (``[n] bool``,
+    default all-true) selects which candidates are actually committed
+    (refcount set to 1, unfrozen); uncommitted candidates stay free, which
+    lets callers over-provision candidates for data-dependent allocation
+    counts without host synchronization.
+
+    Committed entries of the returned index vector are valid block ids;
+    uncommitted entries come back as ``NULL_BLOCK``.  If fewer blocks are
+    free than committed requests, the ``oom`` flag goes sticky and the
+    unsatisfied entries come back as ``NULL_BLOCK``.
+    """
+    if commit is None:
+        commit = jnp.ones((n,), dtype=jnp.bool_)
+    free = pool.refcount == 0
+    cand = jnp.nonzero(free, size=n, fill_value=-1)[0].astype(jnp.int32)
+    ok = (cand >= 0) & commit
+    sids = _scatter_ids(pool.num_blocks, cand, ok)
+    refcount = pool.refcount.at[sids].add(1, mode="drop")
+    frozen = pool.frozen.at[sids].set(False, mode="drop")
+    oom = pool.oom | jnp.any(commit & (cand < 0))
+    out_ids = jnp.where(ok, cand, NULL_BLOCK)
+    return pool._replace(refcount=refcount, frozen=frozen, oom=oom), out_ids
+
+
+def add_refs(pool: BlockPool, ids: jax.Array, amount: jax.Array | int = 1) -> BlockPool:
+    """Increment refcounts (the bookkeeping half of a lazy deep copy).
+
+    ``ids`` may contain repeats and ``NULL_BLOCK`` entries (ignored).
+    """
+    ids = ids.reshape(-1)
+    amt = jnp.broadcast_to(jnp.asarray(amount, jnp.int32), ids.shape)
+    sids = _scatter_ids(pool.num_blocks, ids)
+    refcount = pool.refcount.at[sids].add(amt, mode="drop")
+    return pool._replace(refcount=refcount)
+
+
+def sub_refs(pool: BlockPool, ids: jax.Array, amount: jax.Array | int = 1) -> BlockPool:
+    """Decrement refcounts; blocks hitting zero are implicitly freed.
+
+    (Freeing is implicit: ``refcount == 0`` *is* the free list — rule 4 of
+    the paper's count scheme collapses to this in a cycle-free pool.)
+    """
+    ids = ids.reshape(-1)
+    amt = jnp.broadcast_to(jnp.asarray(amount, jnp.int32), ids.shape)
+    sids = _scatter_ids(pool.num_blocks, ids)
+    refcount = pool.refcount.at[sids].add(-amt, mode="drop")
+    return pool._replace(refcount=refcount)
+
+
+def freeze(pool: BlockPool, ids: jax.Array) -> BlockPool:
+    """Mark blocks read-only — Algorithm 7's FREEZE over a table.
+
+    Used by ``CopyMode.LAZY``; ``LAZY_SR`` relies on refcounts alone
+    (Remark 1 makes the frozen bit redundant for in-degree-1 blocks, which
+    is every exclusively-owned block).
+    """
+    sids = _scatter_ids(pool.num_blocks, ids.reshape(-1))
+    frozen = pool.frozen.at[sids].set(True, mode="drop")
+    return pool._replace(frozen=frozen)
+
+
+def write_blocks(
+    pool: BlockPool, ids: jax.Array, values: jax.Array, mask: jax.Array | None = None
+) -> BlockPool:
+    """Overwrite whole blocks (``values: [k, *block_shape]``), masked.
+
+    Valid (unmasked, non-NULL) ids must be distinct; masked/NULL rows are
+    dropped rather than written.
+    """
+    ids = ids.reshape(-1)
+    sids = _scatter_ids(pool.num_blocks, ids, mask)
+    data = pool.data.at[sids].set(values, mode="drop")
+    return pool._replace(data=data)
+
+
+def read_blocks(pool: BlockPool, ids: jax.Array) -> jax.Array:
+    """Gather whole blocks; NULL ids return block 0 (callers mask)."""
+    out = pool.data[_gather_ids(ids.reshape(-1))]
+    return out.reshape(ids.shape + pool.block_shape)
+
+
+def blocks_in_use(pool: BlockPool) -> jax.Array:
+    """Number of live blocks — the memory metric of the paper's Figures 5-7."""
+    return jnp.sum(pool.refcount > 0)

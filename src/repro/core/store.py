@@ -1,0 +1,331 @@
+"""ParticleStore: population state with lazy-copy semantics, in JAX.
+
+This is the platform the paper builds, specialized to the array world: a
+population of N particles, each owning an append-only (but mutable —
+see :func:`write_at`) sequence of items, cloned wholesale at every
+resampling step.  Three storage strategies implement the paper's three
+evaluation configurations (Section 4):
+
+``CopyMode.EAGER``
+    Dense storage ``[N, capacity, *item]``.  ``clone`` physically gathers
+    full trajectories (``O(N·T·D)`` per generation — the paper's eager
+    deep copy), appends are trivially in place.
+
+``CopyMode.LAZY``
+    Block-pool storage.  ``clone`` gathers block *tables* and bumps
+    refcounts (O(N·T/B) bookkeeping, zero payload movement — the lazy
+    deep copy of Algorithm 3), and *freezes* every block reachable from
+    the new generation (Algorithm 7).  A write to a frozen block copies
+    it first (Algorithm 5's GET→COPY), even when the writer is the sole
+    owner.
+
+``CopyMode.LAZY_SR``
+    As LAZY, plus the single-reference optimization of Remark 1: blocks
+    with ``refcount == 1`` are written in place (no frozen bit, no copy),
+    which is exactly the "thaw for reuse" of Section 3.
+
+The correspondence to the object-graph semantics of
+:mod:`repro.core.graph` is: a particle's block table is its fully-Pulled
+edge set; because resampling always clones *live* particles (the paper's
+motivating tree-structured pattern), the memo chase of Algorithm 4 can be
+pre-resolved at clone time, and cross references cannot arise.  The eager
+escape hatch that the paper needs for particle-Gibbs reference
+trajectories (its VBD experiment) is :func:`materialize`.
+
+All operations are functional, fixed-shape, and jittable; the store
+config is a hashable static argument.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pool as pool_lib
+from repro.core.config import CopyMode
+from repro.core.pool import NULL_BLOCK, BlockPool
+
+__all__ = [
+    "StoreConfig",
+    "ParticleStore",
+    "create",
+    "append",
+    "write_at",
+    "clone",
+    "read_at",
+    "read_last",
+    "trajectory",
+    "materialize",
+    "used_blocks",
+    "used_bytes",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreConfig:
+    """Static configuration (hashable; safe as a jit static arg)."""
+
+    mode: CopyMode
+    n: int  # number of particles
+    block_size: int  # items per block (the COW granularity)
+    max_blocks: int  # blocks per particle trajectory
+    item_shape: Tuple[int, ...] = ()
+    dtype: str = "float32"
+    num_blocks: int = 0  # pool capacity; 0 = auto
+
+    @property
+    def capacity(self) -> int:
+        return self.block_size * self.max_blocks
+
+    @property
+    def pool_blocks(self) -> int:
+        if self.num_blocks:
+            return self.num_blocks
+        # Generous default: the sparse bound T/B + c·N·log N blocks, padded.
+        t_term = self.max_blocks
+        n_term = int(10 * self.n * max(1.0, math.log(max(self.n, 2)))) // self.block_size
+        return min(self.n * self.max_blocks, max(t_term + n_term + 2 * self.n, 64))
+
+
+class ParticleStore(NamedTuple):
+    """The population state (a pytree; shapes fixed by StoreConfig)."""
+
+    pool: BlockPool  # lazy modes ([0]-block dummy under EAGER)
+    dense: jax.Array  # eager mode ([N,0]-shaped dummy under lazy modes)
+    tables: jax.Array  # [N, max_blocks] int32 block ids (NULL_BLOCK = unset)
+    lengths: jax.Array  # [N] int32
+    peak_blocks: jax.Array  # running peak of used_blocks (the memory metric)
+
+
+def create(cfg: StoreConfig) -> ParticleStore:
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.mode is CopyMode.EAGER:
+        pool = pool_lib.init(1, (cfg.block_size, *cfg.item_shape), dtype)
+        dense = jnp.zeros((cfg.n, cfg.capacity, *cfg.item_shape), dtype)
+    else:
+        pool = pool_lib.init(
+            cfg.pool_blocks, (cfg.block_size, *cfg.item_shape), dtype
+        )
+        dense = jnp.zeros((cfg.n, 0, *cfg.item_shape), dtype)
+    return ParticleStore(
+        pool=pool,
+        dense=dense,
+        tables=jnp.full((cfg.n, cfg.max_blocks), NULL_BLOCK, dtype=jnp.int32),
+        lengths=jnp.zeros((cfg.n,), dtype=jnp.int32),
+        peak_blocks=jnp.zeros((), dtype=jnp.int32),
+    )
+
+
+def _bump_peak(cfg: StoreConfig, store: ParticleStore) -> ParticleStore:
+    return store._replace(
+        peak_blocks=jnp.maximum(store.peak_blocks, used_blocks(cfg, store))
+    )
+
+
+# ---------------------------------------------------------------------------
+# writes
+# ---------------------------------------------------------------------------
+
+
+def append(cfg: StoreConfig, store: ParticleStore, values: jax.Array) -> ParticleStore:
+    """Append one item per particle (``values: [N, *item]``).
+
+    The write path is the paper's GET: blocks that must not be mutated in
+    place are copied first (copy-on-write); fresh blocks are allocated at
+    block boundaries.
+    """
+    store = _write_impl(cfg, store, store.lengths, values, advance=True)
+    return _bump_peak(cfg, store)
+
+
+def write_at(
+    cfg: StoreConfig,
+    store: ParticleStore,
+    positions: jax.Array,
+    values: jax.Array,
+    mask: jax.Array | None = None,
+) -> ParticleStore:
+    """Mutate an existing item per particle (COW applies).
+
+    Supports the "mutation of previous states" usage from the paper's
+    Section 1 model list.  ``positions: [N]`` must be < lengths.
+    """
+    if mask is None:
+        mask = jnp.ones((cfg.n,), dtype=jnp.bool_)
+    store = _write_impl(cfg, store, positions, values, advance=False, mask=mask)
+    return _bump_peak(cfg, store)
+
+
+def _write_impl(
+    cfg: StoreConfig,
+    store: ParticleStore,
+    positions: jax.Array,
+    values: jax.Array,
+    advance: bool,
+    mask: jax.Array | None = None,
+) -> ParticleStore:
+    n = cfg.n
+    rows = jnp.arange(n, dtype=jnp.int32)
+    if mask is None:
+        mask = jnp.ones((n,), dtype=jnp.bool_)
+    if cfg.mode is CopyMode.EAGER:
+        cur = store.dense[rows, positions]
+        sel = jnp.where(_expand(mask, values.ndim), values, cur)
+        dense = store.dense.at[rows, positions].set(sel)
+        lengths = store.lengths + jnp.where(mask, 1, 0) if advance else store.lengths
+        return store._replace(dense=dense, lengths=lengths)
+
+    pool = store.pool
+    bs = cfg.block_size
+    idx = positions // bs
+    pos = positions % bs
+    cur_bid = store.tables[rows, idx]
+    fresh = (cur_bid == NULL_BLOCK) & mask
+    if cfg.mode is CopyMode.LAZY:
+        # Algorithm 5: any write to a frozen block copies it.
+        shared = pool.frozen[jnp.where(cur_bid >= 0, cur_bid, 0)]
+    else:
+        # Remark 1: only genuinely shared blocks (refcount > 1) copy.
+        shared = pool.refcount[jnp.where(cur_bid >= 0, cur_bid, 0)] > 1
+    need_copy = (~fresh) & shared & mask
+    need_block = fresh | need_copy
+
+    pool, new_bid = pool_lib.alloc(pool, n, commit=need_block)
+    # Transient peak: COW sources and their copies coexist until the
+    # writer's reference is released below (a real allocator pays this).
+    store = store._replace(
+        peak_blocks=jnp.maximum(store.peak_blocks, pool_lib.blocks_in_use(pool))
+    )
+    # COW: initialize copied blocks from their originals.
+    src = jnp.where(need_copy, cur_bid, 0)
+    copied = pool.data[src]
+    pool = pool_lib.write_blocks(pool, new_bid, copied, mask=need_copy)
+    # Release the writer's reference on blocks it copied away from.
+    pool = pool_lib.sub_refs(pool, jnp.where(need_copy, cur_bid, NULL_BLOCK))
+
+    bid = jnp.where(need_block, new_bid, cur_bid)
+    tables = store.tables.at[rows, idx].set(
+        jnp.where(mask, bid, store.tables[rows, idx])
+    )
+    # Write the item itself: masked/NULL rows are routed out of bounds and
+    # dropped (two unmasked writers can never share a block: either the
+    # block was exclusively owned, or COW just gave each its own copy).
+    write_bid = jnp.where(mask & (bid >= 0), bid, pool.num_blocks)
+    data = pool.data.at[write_bid, pos].set(values, mode="drop")
+    pool = pool._replace(data=data)
+    lengths = store.lengths + jnp.where(mask, 1, 0) if advance else store.lengths
+    return store._replace(pool=pool, tables=tables, lengths=lengths)
+
+
+def _expand(mask: jax.Array, ndim: int) -> jax.Array:
+    return mask.reshape(mask.shape + (1,) * (ndim - mask.ndim))
+
+
+# ---------------------------------------------------------------------------
+# clone (the deep copy at resampling)
+# ---------------------------------------------------------------------------
+
+
+def clone(cfg: StoreConfig, store: ParticleStore, ancestors: jax.Array) -> ParticleStore:
+    """Replace the population by copies of ``ancestors`` (``[N] int32``).
+
+    EAGER: physical gather of whole trajectories (O(N·T·D)).
+    LAZY/LAZY_SR: gather of block tables + refcount delta (O(N·T/B)
+    bookkeeping, no payload movement) — the lazy deep copy.  LAZY
+    additionally freezes every block reachable from the new generation.
+    """
+    lengths = store.lengths[ancestors]
+    if cfg.mode is CopyMode.EAGER:
+        dense = store.dense[ancestors]
+        store = store._replace(dense=dense, lengths=lengths)
+        return _bump_peak(cfg, store)
+
+    pool = store.pool
+    new_tables = store.tables[ancestors]
+    # refcount += multiplicity(new) - multiplicity(old); blocks dropping
+    # to zero are thereby freed (reference-counting GC).
+    pool = pool_lib.add_refs(pool, new_tables)
+    pool = pool_lib.sub_refs(pool, store.tables)
+    if cfg.mode is CopyMode.LAZY:
+        pool = pool_lib.freeze(pool, new_tables)
+    store = store._replace(pool=pool, tables=new_tables, lengths=lengths)
+    return _bump_peak(cfg, store)
+
+
+# ---------------------------------------------------------------------------
+# reads (Pull — never copies)
+# ---------------------------------------------------------------------------
+
+
+def read_at(cfg: StoreConfig, store: ParticleStore, positions: jax.Array) -> jax.Array:
+    """Read one item per particle at ``positions: [N]`` (or scalar)."""
+    positions = jnp.broadcast_to(positions, (cfg.n,))
+    rows = jnp.arange(cfg.n, dtype=jnp.int32)
+    if cfg.mode is CopyMode.EAGER:
+        return store.dense[rows, positions]
+    bs = cfg.block_size
+    bid = store.tables[rows, positions // bs]
+    return store.pool.data[jnp.where(bid >= 0, bid, 0), positions % bs]
+
+
+def read_last(cfg: StoreConfig, store: ParticleStore) -> jax.Array:
+    return read_at(cfg, store, jnp.maximum(store.lengths - 1, 0))
+
+
+def trajectory(cfg: StoreConfig, store: ParticleStore, i: int | jax.Array) -> jax.Array:
+    """Full path of particle ``i`` as ``[capacity, *item]`` (entries past
+    ``lengths[i]`` are unspecified)."""
+    if cfg.mode is CopyMode.EAGER:
+        return store.dense[i]
+    tab = store.tables[i]
+    blocks = store.pool.data[jnp.where(tab >= 0, tab, 0)]
+    blocks = jnp.where(
+        _expand(tab >= 0, blocks.ndim), blocks, jnp.zeros_like(blocks)
+    )
+    return blocks.reshape((cfg.capacity, *cfg.item_shape))
+
+
+def materialize(cfg: StoreConfig, store: ParticleStore, i: int | jax.Array) -> jax.Array:
+    """Eager deep copy of one particle's trajectory, outside the pool.
+
+    This is the escape hatch the paper uses for the particle-Gibbs
+    reference trajectory in its VBD experiment ("a deep copy of a single
+    particle between iterations that must be completed eagerly").
+    """
+    return trajectory(cfg, store, i)
+
+
+# ---------------------------------------------------------------------------
+# accounting
+# ---------------------------------------------------------------------------
+
+
+def used_blocks(cfg: StoreConfig, store: ParticleStore) -> jax.Array:
+    """Live blocks — the memory metric (paper Figures 5-7).
+
+    EAGER physically owns every element of every trajectory; lazy modes
+    own only the pool blocks with nonzero refcount.
+    """
+    if cfg.mode is CopyMode.EAGER:
+        per = (store.lengths + cfg.block_size - 1) // cfg.block_size
+        return jnp.sum(per)
+    return pool_lib.blocks_in_use(store.pool)
+
+
+def used_bytes(cfg: StoreConfig, store: ParticleStore) -> jax.Array:
+    item_bytes = jnp.dtype(cfg.dtype).itemsize
+    for d in cfg.item_shape:
+        item_bytes *= d
+    block_bytes = item_bytes * cfg.block_size
+    table_bytes = 4 * cfg.n * cfg.max_blocks if cfg.mode.is_lazy else 0
+    return used_blocks(cfg, store) * block_bytes + table_bytes
+
+
+# Convenience jitted entry points (static cfg).
+append_jit = partial(jax.jit, static_argnums=0)(append)
+clone_jit = partial(jax.jit, static_argnums=0)(clone)

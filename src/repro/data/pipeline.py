@@ -1,0 +1,91 @@
+"""Deterministic synthetic token pipeline — sharded, resumable, elastic.
+
+Batches are a pure function of ``(seed, step)``: the *global* batch for a
+step is generated statelessly, and each data-parallel rank takes its
+slice.  Consequences that matter at scale:
+
+  * **resume** needs only the step counter (stored in checkpoint extra);
+  * **elastic**: changing world size re-slices the *same* global batch,
+    so training curves are reproducible across reconfigurations;
+  * **no host state** to migrate on preemption.
+
+The token distribution is a fixed random first-order Markov chain (per
+seed), so cross-entropy has a known floor (the chain's entropy rate) and
+small models show real learning curves on CPU — good for integration
+tests and the quickstart example.  Swapping in a real corpus reader only
+changes this module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    markov_alpha: float = 0.3  # concentration: lower = more predictable
+
+
+class TokenPipeline:
+    def __init__(self, cfg: DataConfig, rank: int = 0, world: int = 1):
+        assert cfg.global_batch % world == 0
+        self.cfg = cfg
+        self.rank = rank
+        self.world = world
+        rng = np.random.default_rng(cfg.seed)
+        # fixed Markov transition matrix (row-stochastic)
+        probs = rng.dirichlet(
+            np.full(cfg.vocab_size, cfg.markov_alpha), size=cfg.vocab_size
+        )
+        self._logits = jnp.asarray(np.log(probs + 1e-9), jnp.float32)
+        self._entropy_rate = float(-np.mean(np.sum(probs * np.log(probs + 1e-9), -1)))
+        self._gen = jax.jit(self._generate)
+
+    @property
+    def entropy_rate(self) -> float:
+        """The CE floor a perfect model reaches (nats/token)."""
+        return self._entropy_rate
+
+    def _generate(self, step: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+        k0, kscan = jax.random.split(key)
+        first = jax.random.randint(k0, (cfg.global_batch,), 0, cfg.vocab_size)
+
+        def body(tok, k):
+            nxt = jax.random.categorical(k, self._logits[tok])
+            return nxt, nxt
+
+        keys = jax.random.split(kscan, cfg.seq_len)
+        _, rest = jax.lax.scan(body, first, keys)
+        return jnp.concatenate([first[None], rest], 0).T  # [B, S+1]
+
+    def batch(self, step: int) -> Dict[str, jax.Array]:
+        """Tokens/labels for this rank at ``step`` (labels = next token)."""
+        cfg = self.cfg
+        full = self._gen(jnp.asarray(step, jnp.int32))
+        per = cfg.global_batch // self.world
+        mine = full[self.rank * per : (self.rank + 1) * per]
+        return {
+            "tokens": mine[:, :-1].astype(jnp.int32),
+            "labels": mine[:, 1:].astype(jnp.int32),
+        }
+
+    def global_batch(self, step: int) -> Dict[str, jax.Array]:
+        full = self._gen(jnp.asarray(step, jnp.int32))
+        return {
+            "tokens": full[:, :-1].astype(jnp.int32),
+            "labels": full[:, 1:].astype(jnp.int32),
+        }
+
+    def state(self, step: int) -> Dict:
+        return {"data_step": step, "seed": self.cfg.seed}

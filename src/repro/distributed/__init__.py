@@ -1,0 +1,10 @@
+# Distribution layer: logical-axis sharding rules, mesh helpers, and the
+# HLO analysis used by the roofline report.
+
+from repro.distributed.sharding import (
+    ShardingRules,
+    default_rules,
+    shardings_for,
+)
+
+__all__ = ["ShardingRules", "default_rules", "shardings_for"]

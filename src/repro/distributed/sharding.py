@@ -1,0 +1,254 @@
+"""Logical-axis sharding rules with per-architecture divisibility fallback.
+
+Parameters carry logical axis names recorded at init
+(:class:`repro.models.layers.ParamBuilder`); this module maps those names
+onto mesh axes:
+
+    embed      -> FSDP axes ("pod","data")   (ZeRO-3 style full sharding)
+    heads      -> TP axis  ("model",)        if divisible, else replicated
+    kv_heads   -> TP axis  if divisible (GQA often is not), else replicated
+    mlp        -> TP axis
+    experts    -> EP over the TP axis
+    vocab      -> TP axis
+    layers / head_dim / expert_mlp / None -> replicated
+
+Divisibility fallback happens *per parameter dimension*: starcoder2's 24
+heads do not divide a 16-way model axis, so its attention projections
+fall back to FSDP-only sharding while its 12288-wide MLP still uses TP —
+no per-arch hand-tuning required, and every fallback is recorded for the
+dry-run report.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical axis name -> preferred mesh axes (in fallback order)."""
+
+    rules: Tuple[Tuple[str, Tuple[str, ...]], ...]
+
+    def lookup(self, name: Optional[str]) -> Tuple[str, ...]:
+        if name is None:
+            return ()
+        for key, axes in self.rules:
+            if key == name:
+                return axes
+        return ()
+
+
+def default_rules(mesh: Mesh) -> ShardingRules:
+    fsdp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    tp = ("model",) if "model" in mesh.axis_names else ()
+    return ShardingRules(
+        rules=(
+            ("embed", fsdp),
+            ("heads", tp),
+            ("kv_heads", tp),
+            ("head_dim", ()),
+            ("mlp", tp),
+            ("expert_mlp", ()),
+            ("experts", tp),
+            ("vocab", tp),
+            ("layers", ()),
+        )
+    )
+
+
+def inference_rules(mesh: Mesh) -> ShardingRules:
+    """Decode-time rules: weights resident, TP-only.
+
+    Per-token FSDP weight gathers dwarf a decode step's useful traffic;
+    with bf16 serving weights every assigned arch fits TP-sharded
+    (<= 13 GB/chip at 104B params over a 16-way model axis), so the
+    ``embed`` dimension is left unsharded across the DP axes
+    (§Perf decode iteration 4).
+
+    ``head_dim`` is a *fallback* TP dimension: when the head count does
+    not divide the TP axis (qwen's 40, starcoder2's 24), the projection
+    weights shard on head_dim (128 % 16 == 0) instead of being fully
+    replicated; decode activations are KB-sized, so the per-layer
+    reshards this induces are negligible (§Perf decode iteration 6).
+    The `used`-axis bookkeeping in spec_for makes this automatic: when
+    "heads" takes the model axis, "head_dim" cannot.
+    """
+    tp = ("model",) if "model" in mesh.axis_names else ()
+    return ShardingRules(
+        rules=(
+            ("embed", ()),
+            ("heads", tp),
+            ("kv_heads", tp),
+            ("head_dim", tp),
+            ("mlp", tp),
+            ("expert_mlp", ()),
+            ("experts", tp),
+            ("vocab", tp),
+            ("layers", ()),
+        )
+    )
+
+
+def _axis_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def spec_for(
+    mesh: Mesh,
+    rules: ShardingRules,
+    shape: Sequence[int],
+    logical: Sequence[Optional[str]],
+    fallbacks: Optional[List[str]] = None,
+) -> P:
+    """PartitionSpec for one parameter, with divisibility fallback."""
+    used: set = set()
+    parts: List[Any] = []
+    for dim, name in zip(shape, logical):
+        axes = rules.lookup(name)
+        axes = tuple(a for a in axes if a not in used)
+        if axes and dim % _axis_size(mesh, axes) == 0:
+            parts.append(axes if len(axes) > 1 else axes[0])
+            used.update(axes)
+        else:
+            if axes and fallbacks is not None:
+                fallbacks.append(f"{name}:{dim}%{_axis_size(mesh, axes)}")
+            parts.append(None)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def shardings_for(
+    mesh: Mesh,
+    rules: ShardingRules,
+    params: Any,
+    axes_tree: Any,
+    report: Optional[List[str]] = None,
+) -> Any:
+    """NamedSharding pytree matching ``params`` via its logical axes."""
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_a = treedef.flatten_up_to(axes_tree)
+    out = []
+    for p, a in zip(flat_p, flat_a):
+        spec = spec_for(mesh, rules, p.shape, a, fallbacks=report)
+        out.append(NamedSharding(mesh, spec))
+    return treedef.unflatten(out)
+
+
+def batch_spec(mesh: Mesh, extra_dims: int = 1) -> P:
+    """Batch-leading arrays: batch over all data-parallel axes."""
+    fsdp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(fsdp if len(fsdp) > 1 else (fsdp[0] if fsdp else None))
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# activation constraints (the "logical activation axes" mechanism)
+# ---------------------------------------------------------------------------
+#
+# Model code calls ``constrain(x, names)`` at a handful of strategic points
+# (KV tensors, MoE dispatch).  Outside a sharding context this is a no-op,
+# so single-device tests and examples are untouched.  Assignment is
+# priority-aware: e.g. KV *heads* get the "model" axis when divisible;
+# otherwise KV *sequence* takes it (context-parallel attention) — exactly
+# the fallback GQA archs like qwen2.5 (40 heads) and starcoder2 (2 KV
+# heads) need on a 16-way TP axis.
+
+import contextlib
+import threading
+
+_TLS = threading.local()
+
+ACT_RULES: Dict[str, Tuple[Tuple[str, ...], int]] = {
+    # name: (mesh axes, priority — lower wins contested axes)
+    "act_batch": (("pod", "data"), 0),
+    "act_kv_heads": (("model",), 1),
+    "act_heads": (("model",), 1),
+    "act_experts": (("model",), 1),
+    "act_mlp": (("model",), 1),
+    # decode-only fallback: shard head_dim when head counts don't divide
+    # the TP axis (see inference_rules) — inactive in train mode.
+    "act_head_dim": (("model",), 2),
+    # KV sequence takes the TP axis when heads can't (context parallelism);
+    # with batch=1 (long-context decode) it also absorbs the idle DP axes.
+    "act_kv_seq": (("model", "pod", "data"), 3),
+    "act_seq": (("pod", "data", "model"), 4),
+    "act_vocab": (("model",), 1),
+}
+
+_DECODE_ONLY = {"act_head_dim"}
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, mode: str = "train"):
+    prev = getattr(_TLS, "mesh", None)
+    prev_mode = getattr(_TLS, "mode", "train")
+    _TLS.mesh = mesh
+    _TLS.mode = mode
+    try:
+        yield
+    finally:
+        _TLS.mesh = prev
+        _TLS.mode = prev_mode
+
+
+def constrain(x: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
+    mesh: Optional[Mesh] = getattr(_TLS, "mesh", None)
+    if mesh is None:
+        return x
+    mode = getattr(_TLS, "mode", "train")
+    assert len(names) == x.ndim, (names, x.shape)
+    names = [
+        None if (n in _DECODE_ONLY and mode != "decode") else n for n in names
+    ]
+    order = sorted(
+        (i for i, n in enumerate(names) if n is not None),
+        key=lambda i: ACT_RULES.get(names[i], ((), 99))[1],
+    )
+    used: set = set()
+    parts: List[Any] = [None] * x.ndim
+    for i in order:
+        axes, _ = ACT_RULES.get(names[i], ((), 99))
+        axes = tuple(a for a in axes if a in mesh.axis_names and a not in used)
+        if axes and x.shape[i] % _axis_size(mesh, axes) == 0 and x.shape[i] > 0:
+            parts[i] = axes if len(axes) > 1 else axes[0]
+            used.update(axes)
+    spec = P(*parts)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tp_size() -> int:
+    mesh: Optional[Mesh] = getattr(_TLS, "mesh", None)
+    if mesh is None or "model" not in mesh.axis_names:
+        return 1
+    return mesh.shape["model"]
+
+
+def sharding_mode() -> str:
+    return getattr(_TLS, "mode", "train")
+
+
+def gather_weight(w: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
+    """Weight-gather FSDP: pin a (casted) weight to its TP-only sharding
+    inside the layer body.
+
+    Without this, GSPMD keeps the FSDP ("embed"-over-data) sharding on the
+    contracting dimension of every matmul and produces *activation-sized
+    partial-sum all-reduces* per matmul per layer per microbatch — the
+    dominant collective term of the dense-train baseline.  Pinning the
+    weight to P(None-on-embed, TP...) makes XLA all-gather the bf16
+    weight once per layer (ZeRO-3 semantics) and reduce-scatter grads in
+    backward (§Perf train iteration 1)."""
+    return constrain(w, names)

@@ -1,0 +1,13 @@
+# Pallas TPU kernels for the framework's compute hot spots.
+#
+#   cow_gather       — block-table gather / pool compaction (the COW
+#                      platform's data-movement primitive)
+#   resample         — systematic resampling (tiled inverse-CDF counts)
+#   flash_attention  — train/prefill attention (causal + window + GQA)
+#   paged_attention  — decode attention over the COW block pool
+#   ssd_scan         — Mamba2 SSD chunked scan
+#
+# Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jitted
+# wrapper with interpret fallback), ref.py (pure-jnp oracle).  All are
+# validated in interpret mode on CPU; on TPU the same BlockSpecs tile
+# VMEM.

@@ -1,0 +1,3 @@
+from repro.kernels.cow_gather.ops import cow_gather
+
+__all__ = ["cow_gather"]

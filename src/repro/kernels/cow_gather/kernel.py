@@ -1,0 +1,60 @@
+"""Pallas kernel: gather blocks from the COW pool by a block table.
+
+The data-movement primitive of the lazy-copy platform: materializing a
+particle trajectory / compacting a fragmented pool / eager deep copies
+(``materialize``) are all "gather rows of a [num_blocks, block_elems]
+pool by an index vector".  The block table arrives via **scalar
+prefetch**, so the index is known before the DMA for each grid step is
+issued — the pool block is streamed HBM->VMEM directly at its final
+position; NULL (-1) entries produce zero blocks.
+
+Grid: one step per table entry.  Block shape = one pool block (padded to
+lane width by the caller's choice of block_elems).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(table_ref, pool_ref, out_ref):
+    i = pl.program_id(0)
+    bid = table_ref[i]
+    # NULL entries (bid < 0) were clamped to 0 in the index map; zero them.
+    valid = bid >= 0
+    block = pool_ref[...]
+    out_ref[...] = jnp.where(valid, block, jnp.zeros_like(block))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cow_gather_pallas(
+    pool: jax.Array,  # [num_blocks, block_elems]
+    table: jax.Array,  # [k] int32 (NULL_BLOCK = -1 allowed)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    k = table.shape[0]
+    block_elems = pool.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec(
+                (1, block_elems),
+                lambda i, table_ref: (jnp.maximum(table_ref[i], 0), 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, block_elems), lambda i, table_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((k, block_elems), pool.dtype),
+        interpret=interpret,
+    )(table, pool)

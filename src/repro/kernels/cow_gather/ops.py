@@ -1,0 +1,35 @@
+"""Public entry point for the COW block gather.
+
+On TPU this dispatches to the Pallas kernel; elsewhere (CPU hosts, and
+whenever ``force_ref``) it falls back to the jnp oracle.  ``interpret``
+runs the kernel body in interpret mode (used by the test sweeps).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.cow_gather.kernel import cow_gather_pallas
+from repro.kernels.cow_gather.ref import cow_gather_ref
+
+
+def cow_gather(
+    pool: jax.Array,
+    table: jax.Array,
+    *,
+    use_kernel: bool | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Gather pool blocks by table; -1 entries yield zero blocks.
+
+    pool: [num_blocks, *block_shape]; table: [k] int32.
+    Returns [k, *block_shape].
+    """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu" or interpret
+    if not use_kernel:
+        return cow_gather_ref(pool, table)
+    shape = pool.shape
+    flat = pool.reshape(shape[0], -1)
+    out = cow_gather_pallas(flat, table, interpret=interpret)
+    return out.reshape((table.shape[0],) + shape[1:])

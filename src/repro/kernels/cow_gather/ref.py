@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for cow_gather."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cow_gather_ref(pool: jax.Array, table: jax.Array) -> jax.Array:
+    out = pool[jnp.maximum(table, 0)]
+    valid = (table >= 0).reshape((-1,) + (1,) * (pool.ndim - 1))
+    return jnp.where(valid, out, jnp.zeros_like(out))

@@ -1,0 +1,134 @@
+"""Pallas flash attention (train/prefill): causal, sliding-window, GQA.
+
+Tiling: grid (B, H, Sq/bq, Sk/bk), kv-block dimension minor — TPU
+iterates the minor grid dimension sequentially per core, so the running
+softmax state (row max ``m``, normalizer ``l``, accumulator ``acc``)
+lives in VMEM scratch across kv steps and the [S, S] score matrix never
+exists in HBM.  Scores/accumulation are f32 on the MXU; inputs may be
+bf16.  Causal and window bounds skip whole kv blocks (``pl.when``), so
+compute is the true triangle, not rectangle-with-mask.
+
+Block sizes default to (512, 512) and must divide the (padded) sequence;
+``d`` should be a multiple of 128 for MXU alignment (all assigned archs:
+64/112/128/256 — 64 and 112 pad to 128 lanes on TPU; fine for v5e).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref,  # [1, 1, bq, d], [1, 1, bk, d] x2
+    o_ref,  # [1, 1, bq, d]
+    m_ref, l_ref, acc_ref,  # scratch [bq, 128], [bq, 128], [bq, d]
+    *,
+    scale: float,
+    window: int,
+    bq: int,
+    bk: int,
+    nk: int,
+):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_first = i * bq  # first query position in this block
+    q_last = i * bq + bq - 1
+    k_first = j * bk
+    k_last = j * bk + bk - 1
+    needed = k_first <= q_last  # causal: some k in block is visible
+    if window > 0:
+        needed = jnp.logical_and(needed, k_last > q_first - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [bq, bk]
+        q_pos = q_first + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_first + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = q_pos >= k_pos
+        if window > 0:
+            mask = jnp.logical_and(mask, q_pos - k_pos < window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[:, :1]  # [bq, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)  # [bq, bk]
+        alpha = jnp.exp(m_prev - m_new)  # [bq, 1]
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # [B, H, Sq, d]
+    k: jax.Array,  # [B, KVH, Sk, d]
+    v: jax.Array,  # [B, KVH, Sk, d]
+    *,
+    scale: float | None = None,
+    window: int = 0,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    g = h // kvh
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
+    nk = sk // bk
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, window=window, bq=bq, bk=bk, nk=nk
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, sq // bq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bb, hh, i, j: (bb, hh, i, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bb, hh, i, j: (bb, hh // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bb, hh, i, j: (bb, hh // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda bb, hh, i, j: (bb, hh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,36 @@
+"""Public flash-attention entry point (model layout [B, S, H, d])."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def flash_attention(
+    q: jax.Array,  # [B, S, H, d]
+    k: jax.Array,  # [B, S, KVH, d]
+    v: jax.Array,
+    *,
+    window: int = 0,
+    scale: float | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    use_kernel: bool | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu" or interpret
+    qt = q.swapaxes(1, 2)
+    kt = k.swapaxes(1, 2)
+    vt = v.swapaxes(1, 2)
+    if use_kernel:
+        out = flash_attention_pallas(
+            qt, kt, vt,
+            scale=scale, window=window,
+            block_q=block_q, block_k=block_k, interpret=interpret,
+        )
+    else:
+        out = flash_attention_ref(qt, kt, vt, scale=scale, window=window)
+    return out.swapaxes(1, 2)

@@ -1,0 +1,136 @@
+"""Pallas paged attention: single-token decode over the COW block pool.
+
+This is the paper's lazy-copy platform meeting the MXU: sequences share
+KV blocks through refcounted tables (O(1) fork during population-based
+decoding), and attention reads KV *through the block table* — the table
+arrives via scalar prefetch so each block's HBM->VMEM DMA is issued at
+its pool address with no gather materialization.
+
+Grid (B, KVH, n_blocks); the block dimension is minor (sequential), so
+the flash running-softmax state for the G = H/KVH query-head group lives
+in VMEM scratch.  Blocks past a sequence's length — and NULL (-1) table
+entries — are skipped entirely (``pl.when``), so ragged batches cost
+their true lengths, not the padded maximum.
+
+Pool layout: [num_blocks, block_size, KVH, d].
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    tables_ref, lens_ref,  # scalar prefetch: [B, nb], [B]
+    q_ref,  # [1, 1, G, d]
+    k_ref, v_ref,  # [1, bs, 1, d]
+    o_ref,  # [1, 1, G, d]
+    m_ref, l_ref, acc_ref,  # scratch [G, 128], [G, 128], [G, d]
+    *,
+    scale: float,
+    bs: int,
+    nb: int,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lens_ref[b]
+    valid_block = jnp.logical_and(j * bs < length, tables_ref[b, j] >= 0)
+
+    @pl.when(valid_block)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # [G, d]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # [bs, d]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [G, bs]
+        pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(j == nb - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_attention_pallas(
+    q: jax.Array,  # [B, H, d]
+    k_pool: jax.Array,  # [num_blocks, bs, KVH, d]
+    v_pool: jax.Array,
+    tables: jax.Array,  # [B, nb] int32
+    lengths: jax.Array,  # [B] int32
+    *,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, d = q.shape
+    nb = tables.shape[1]
+    bs, kvh = k_pool.shape[1], k_pool.shape[2]
+    g = h // kvh
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, kvh, g, d)
+
+    kernel = functools.partial(_kernel, scale=scale, bs=bs, nb=nb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, nb),
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, g, d), lambda bb, hh, j, tables_ref, lens_ref: (bb, hh, 0, 0)
+            ),
+            pl.BlockSpec(
+                (1, bs, 1, d),
+                lambda bb, hh, j, tables_ref, lens_ref: (
+                    jnp.maximum(tables_ref[bb, j], 0), 0, hh, 0
+                ),
+            ),
+            pl.BlockSpec(
+                (1, bs, 1, d),
+                lambda bb, hh, j, tables_ref, lens_ref: (
+                    jnp.maximum(tables_ref[bb, j], 0), 0, hh, 0
+                ),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, d), lambda bb, hh, j, tables_ref, lens_ref: (bb, hh, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
+        interpret=interpret,
+    )(tables, lengths, qg, k_pool, v_pool)
+    return out.reshape(b, h, d)

@@ -1,0 +1,27 @@
+"""Public paged-attention entry point."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention_pallas
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+def paged_attention(
+    q: jax.Array,  # [B, H, d]
+    k_pool: jax.Array,  # [num_blocks, block_size, KVH, d]
+    v_pool: jax.Array,
+    tables: jax.Array,  # [B, n_blocks_per_seq] int32 (-1 = NULL)
+    lengths: jax.Array,  # [B] int32 valid positions per sequence
+    *,
+    use_kernel: bool | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu" or interpret
+    if use_kernel:
+        return paged_attention_pallas(
+            q, k_pool, v_pool, tables, lengths, interpret=interpret
+        )
+    return paged_attention_ref(q, k_pool, v_pool, tables, lengths)

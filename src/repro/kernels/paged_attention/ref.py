@@ -1,0 +1,37 @@
+"""Pure-jnp oracle: gather blocks to dense KV, masked attention."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(
+    q: jax.Array,  # [B, H, d]
+    k_pool: jax.Array,  # [num_blocks, bs, KVH, d]
+    v_pool: jax.Array,
+    tables: jax.Array,  # [B, nb]
+    lengths: jax.Array,  # [B]
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    b, h, d = q.shape
+    nb = tables.shape[1]
+    bs, kvh = k_pool.shape[1], k_pool.shape[2]
+    g = h // kvh
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    tab = jnp.maximum(tables, 0)
+    k = k_pool[tab].reshape(b, nb * bs, kvh, d)
+    v = v_pool[tab].reshape(b, nb * bs, kvh, d)
+    qg = q.reshape(b, kvh, g, d).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32)) * scale
+    pos = jnp.arange(nb * bs)[None, :]
+    ok = pos < lengths[:, None]
+    ok = ok & jnp.repeat(tables >= 0, bs, axis=1)
+    s = jnp.where(ok[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)

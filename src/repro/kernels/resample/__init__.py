@@ -1,0 +1,3 @@
+from repro.kernels.resample.ops import resample_systematic_kernel
+
+__all__ = ["resample_systematic_kernel"]

@@ -1,0 +1,71 @@
+"""Pallas kernel: systematic resampling (tiled inverse-CDF search).
+
+ancestor[j] = #{ i : cum[i] < (j + u) / N } — the inverse-CDF lookup of
+the systematic comb against the inclusive weight CDF.  Tiled as grid
+(out_tiles, cdf_tiles) with the CDF dimension minor: per output tile an
+int32 count accumulates in VMEM scratch over CDF tiles (a [bo, bw]
+broadcast compare per step — pure VPU work, no HBM score matrix).
+
+The population sizes of the paper's experiments (N up to 16384) make the
+O(N^2 / tile) compare trivially cheap next to model propagation, but on
+TPU the naive jnp ``searchsorted`` lowers to a serial while loop — this
+kernel is the vectorized replacement.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(u_ref, cum_ref, out_ref, cnt_ref, *, bo, bw, n, nw):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    u = u_ref[0]
+    t = (i * bo + jax.lax.broadcasted_iota(jnp.float32, (bo, 1), 0) + u) / n
+    c = cum_ref[...].reshape(1, bw)  # [1, bw]
+    cnt_ref[...] += jnp.sum(
+        (c < t).astype(jnp.int32), axis=1, keepdims=True
+    )
+
+    @pl.when(j == nw - 1)
+    def _final():
+        out_ref[...] = jnp.clip(cnt_ref[:, 0], 0, n - 1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_out", "block_w", "interpret"))
+def resample_systematic_pallas(
+    cum: jax.Array,  # [N] inclusive CDF, cum[-1] == 1
+    u: jax.Array,  # [1] uniform in [0, 1)
+    *,
+    block_out: int = 256,
+    block_w: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    n = cum.shape[0]
+    bo = min(block_out, n)
+    bw = min(block_w, n)
+    assert n % bo == 0 and n % bw == 0
+    nw = n // bw
+    kernel = functools.partial(_kernel, bo=bo, bw=bw, n=n, nw=nw)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bo, nw),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((bw,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bo,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bo, 1), jnp.int32)],
+        interpret=interpret,
+    )(u, cum)

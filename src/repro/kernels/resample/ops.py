@@ -1,0 +1,28 @@
+"""Public systematic-resampling entry point (log-weights -> ancestors)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.resample.kernel import resample_systematic_pallas
+from repro.kernels.resample.ref import resample_systematic_ref
+
+
+def resample_systematic_kernel(
+    key: jax.Array,
+    logw: jax.Array,
+    *,
+    use_kernel: bool | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Drop-in for repro.smc.resampling.resample_systematic."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu" or interpret
+    w = jax.nn.softmax(logw)
+    cum = jnp.cumsum(w)
+    cum = cum / cum[-1]
+    u = jax.random.uniform(key, (1,))
+    if use_kernel:
+        return resample_systematic_pallas(cum, u, interpret=interpret)
+    return resample_systematic_ref(cum, u)

@@ -1,0 +1,12 @@
+"""Oracle: the jnp systematic resampler from the SMC substrate."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def resample_systematic_ref(cum: jax.Array, u: jax.Array) -> jax.Array:
+    n = cum.shape[0]
+    positions = (jnp.arange(n) + u[0]) / n
+    return jnp.searchsorted(cum, positions, side="left").astype(jnp.int32)

@@ -1,0 +1,130 @@
+"""Pallas kernel: Mamba2 SSD chunked scan.
+
+Grid (B, H, n_chunks) with the chunk dimension minor: TPU executes it
+sequentially, so the inter-chunk SSM state ``h [P, N]`` lives in VMEM
+scratch across chunk steps — the linear recurrence never round-trips
+HBM.  Within a chunk the dual quadratic form runs on the MXU:
+
+    cum    = tril_ones @ (dt * a)                     (cumsum as matmul)
+    L      = exp(cum_i - cum_j) . (i >= j)
+    y_diag = ((C B^T) * L * dt_j) @ x
+    y_off  = (C h^T) * exp(cum_i)
+    h'     = exp(cum_Q) h + x^T ((dt * exp(cum_Q - cum)) B)
+
+B/C are group-shared (G=1), so their blocks are fetched once per (b,
+chunk) and reused across the H grid dimension.  All accumulation in f32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    x_ref,  # [1, Q, 1, P]
+    dt_ref,  # [1, Q, 1]
+    a_ref,  # [1]
+    b_ref,  # [1, Q, N]
+    c_ref,  # [1, Q, N]
+    y_ref,  # [1, Q, 1, P]
+    hout_ref,  # [1, 1, P, N]
+    h_ref,  # scratch [P, N] f32
+    *,
+    q: int,
+    nc: int,
+):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)  # [Q, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # [Q]
+    a = a_ref[0].astype(jnp.float32)
+    bm = b_ref[0].astype(jnp.float32)  # [Q, N]
+    cm = c_ref[0].astype(jnp.float32)  # [Q, N]
+
+    da = dt * a  # [Q]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    tril = (ii >= jj).astype(jnp.float32)
+    # cumsum via lower-triangular ones matmul (MXU-friendly)
+    cum = jax.lax.dot_general(
+        tril, da[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0]  # [Q]
+    seg = cum[:, None] - cum[None, :]
+    l_mat = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+    cb = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [Q, Q]
+    scores = cb * l_mat * dt[None, :]
+    y_diag = jax.lax.dot_general(
+        scores, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [Q, P]
+    h = h_ref[...]
+    y_off = jax.lax.dot_general(
+        cm, h, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * jnp.exp(cum)[:, None]  # [Q, P]
+    y_ref[0, :, 0, :] = (y_diag + y_off).astype(y_ref.dtype)
+
+    # state update
+    total = cum[q - 1]
+    decay = dt * jnp.exp(total - cum)  # [Q]
+    contrib = jax.lax.dot_general(
+        x, bm * decay[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [P, N]
+    h_ref[...] = jnp.exp(total) * h + contrib
+
+    @pl.when(c_idx == nc - 1)
+    def _final():
+        hout_ref[0, 0] = h_ref[...].astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(
+    x: jax.Array,  # [B, S, H, P]
+    dt: jax.Array,  # [B, S, H] (post-softplus)
+    a: jax.Array,  # [H] (negative)
+    bmat: jax.Array,  # [B, S, N] (G=1)
+    cmat: jax.Array,  # [B, S, N]
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+):
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0
+    nc = s // q
+
+    kernel = functools.partial(_kernel, q=q, nc=nc)
+    y, hout = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda bb, hh, cc: (bb, cc, hh, 0)),
+            pl.BlockSpec((1, q, 1), lambda bb, hh, cc: (bb, cc, hh)),
+            pl.BlockSpec((1,), lambda bb, hh, cc: (hh,)),
+            pl.BlockSpec((1, q, n), lambda bb, hh, cc: (bb, cc, 0)),
+            pl.BlockSpec((1, q, n), lambda bb, hh, cc: (bb, cc, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda bb, hh, cc: (bb, cc, hh, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bb, hh, cc: (bb, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, bmat, cmat)
+    return y, hout

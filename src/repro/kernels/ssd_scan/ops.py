@@ -1,0 +1,27 @@
+"""Public SSD-scan entry point."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+def ssd_scan(
+    x: jax.Array,
+    dt: jax.Array,
+    a: jax.Array,
+    bmat: jax.Array,
+    cmat: jax.Array,
+    *,
+    chunk: int = 64,
+    use_kernel: bool | None = None,
+    interpret: bool = False,
+):
+    """Chunked SSD scan; returns (y [B,S,H,P] f32, h_final [B,H,P,N] f32)."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu" or interpret
+    if use_kernel:
+        return ssd_scan_pallas(x, dt, a, bmat, cmat, chunk=chunk, interpret=interpret)
+    return ssd_scan_ref(x, dt, a, bmat, cmat, chunk=chunk)

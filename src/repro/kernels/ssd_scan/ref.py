@@ -1,0 +1,15 @@
+"""Oracle: the pure-jnp chunked SSD scan from the model layer."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_scan_ref(x, dt, a, bmat, cmat, *, chunk: int = 64):
+    """x [B,S,H,P], dt [B,S,H], a [H], bmat/cmat [B,S,N] (G=1)."""
+    y, h = ssd_chunked(
+        x, dt, a, bmat[:, :, None, :], cmat[:, :, None, :], chunk=chunk
+    )
+    return y, h

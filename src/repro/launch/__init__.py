@@ -1,0 +1,3 @@
+# Launchers: mesh construction, dry-run driver, training/serving drivers.
+# NOTE: repro.launch.dryrun must be executed as __main__ (it sets
+# XLA_FLAGS before importing jax); import it only in fresh subprocesses.

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — required by the dry-run, which
+must set XLA_FLAGS before the first jax initialization.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The target deployment mesh.
+
+    single pod: 16 x 16 = 256 chips, axes (data, model)
+    multi pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model) — the
+    ``pod`` axis composes with ``data`` for batch/FSDP sharding so only
+    gradient/weight collectives cross the (DCN) pod boundary.  The config
+    generalizes to k pods by widening that axis.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices the current host actually has, as a 1-D data mesh
+    (used by tests and the CPU-hosted examples)."""
+    n = jax.device_count()
+    return jax.make_mesh((n,), ("data",))

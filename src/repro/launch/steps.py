@@ -1,0 +1,429 @@
+"""Jittable step functions + shape/sharding specs for the production mesh.
+
+``build_cell(arch, shape, mesh)`` returns everything the dry-run (and a
+real launcher) needs for one (architecture × input shape) cell:
+
+  * the step function (train_step / prefill_step / serve_step),
+  * ShapeDtypeStruct stand-ins for every argument (no allocation),
+  * in/out NamedShardings (params via logical axes, batch via DP axes,
+    KV caches via the KV policy in distributed.sharding),
+  * donated argument indices (so memory_analysis reflects steady state).
+
+train_step includes gradient accumulation over microbatches (sized to
+keep per-device tokens-per-microbatch near a target), global-norm
+clipping, and the AdamW update — the real training semantics, not a toy
+forward.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.configs.registry import ShapeSpec
+from repro.distributed import sharding as shd
+from repro.models.config import ModelConfig
+from repro.models.model import DecodeCache, LanguageModel
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+TOKENS_PER_MICROBATCH = 8192  # per-device target
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    cfg: ModelConfig
+    step_fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    fallbacks: List[str]
+    n_microbatches: int = 1
+
+
+def _named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _bspec(mesh: Mesh, batch: int, ndim: int) -> P:
+    dp = shd.data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    if batch % dp_size == 0 and batch > 0:
+        lead = dp if len(dp) > 1 else dp[0]
+        return P(lead, *([None] * (ndim - 1)))
+    return P(*([None] * ndim))
+
+
+def cache_shardings(mesh: Mesh, cfg: ModelConfig, cache: DecodeCache) -> DecodeCache:
+    """Shardings for every DecodeCache field (see DESIGN.md §5)."""
+    dp = shd.data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    tp = mesh.shape.get("model", 1)
+
+    def batch_part(b):
+        if b % dp_size == 0 and b > 0:
+            return dp if len(dp) > 1 else dp[0]
+        return None
+
+    def kv(field):  # [L, B, S, KVH, hd]
+        if field.ndim < 5 or field.size == 0:
+            return _named(mesh, P())
+        _, b, s, kvh, _ = field.shape
+        bp = batch_part(b)
+        heads_ok = kvh % tp == 0 and kvh >= tp
+        if heads_ok:
+            return _named(mesh, P(None, bp, None, "model", None))
+        # context-parallel KV: sequence over model (and idle DP for b==1)
+        seq_axes: Tuple[str, ...] = ("model",)
+        if bp is None:
+            seq_axes = ("model", *dp)
+        if s % _size(mesh, seq_axes) == 0 and s > 0:
+            return _named(mesh, P(None, bp, seq_axes, None, None))
+        return _named(mesh, P(None, bp, None, None, None))
+
+    def ring(field):  # [U, nl, B, W, KVH, hd]
+        if field.ndim < 6 or field.size == 0:
+            return _named(mesh, P())
+        b = field.shape[2]
+        w = field.shape[3]
+        bp = batch_part(b)
+        wp = "model" if w % tp == 0 else None
+        return _named(mesh, P(None, None, bp, wp, None, None))
+
+    def ssm_state(field):  # [L, B, H, P, N]
+        if field.ndim < 5 or field.size == 0:
+            return _named(mesh, P())
+        b, h = field.shape[1], field.shape[2]
+        return _named(
+            mesh,
+            P(None, batch_part(b), "model" if h % tp == 0 else None, None, None),
+        )
+
+    def ssm_conv(field):  # [L, B, 3, C]
+        if field.ndim < 4 or field.size == 0:
+            return _named(mesh, P())
+        b, c = field.shape[1], field.shape[3]
+        return _named(
+            mesh,
+            P(None, batch_part(b), None, "model" if c % tp == 0 else None),
+        )
+
+    def img(field):  # [B, n, D]
+        if field.ndim < 3 or field.size == 0:
+            return _named(mesh, P())
+        return _named(mesh, P(batch_part(field.shape[0]), None, None))
+
+    def shared(field):  # [NI, B, S, KVH, hd] — same policy as kv
+        return kv(field)
+
+    return DecodeCache(
+        k=kv(cache.k),
+        v=kv(cache.v),
+        k_loc=ring(cache.k_loc),
+        v_loc=ring(cache.v_loc),
+        ssm_conv=ssm_conv(cache.ssm_conv),
+        ssm_state=ssm_state(cache.ssm_state),
+        shared_k=shared(cache.shared_k),
+        shared_v=shared(cache.shared_v),
+        img_feats=img(cache.img_feats),
+        position=_named(mesh, _bspec(mesh, cache.position.shape[0], 1)),
+    )
+
+
+def _size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def abstract_cache(lm: LanguageModel, batch: int, max_len: int) -> DecodeCache:
+    """ShapeDtypeStruct version of init_cache (no allocation)."""
+    cfg = lm.cfg
+    img = (
+        jax.ShapeDtypeStruct((batch, cfg.n_img_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+        if cfg.family == "vlm"
+        else None
+    )
+    shapes = jax.eval_shape(
+        lambda: lm.init_cache(batch, max_len, img_feats=None)
+    )
+    if img is not None:
+        shapes = shapes._replace(img_feats=img)
+    return shapes
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(
+    lm: LanguageModel,
+    opt_cfg: AdamWConfig,
+    n_micro: int,
+    param_shardings: Any = None,
+    grad_comm_dtype: str = "bfloat16",
+) -> Callable:
+    """Gradient-accumulated train step.
+
+    Per-microbatch gradients are (a) cast to ``grad_comm_dtype`` — the
+    cross-replica reduction then moves half the bytes (bf16 gradient
+    compression; accumulation stays f32) — and (b) pinned to the FSDP
+    param shardings, which lets XLA lower the reduction as a
+    reduce-scatter into the local shard instead of a full f32 all-reduce
+    (§Perf train iterations 2-3).
+    """
+    cfg = lm.cfg
+    comm_dt = jnp.dtype(grad_comm_dtype)
+    compute_dt = jnp.dtype(cfg.dtype)
+
+    def pin(g_tree):
+        if param_shardings is None:
+            return g_tree
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s),
+            g_tree,
+            param_shardings,
+        )
+
+    def cast_params(params):
+        # Cast master weights to the compute dtype ONCE per step and
+        # differentiate w.r.t. the bf16 copy: backward then produces bf16
+        # gradients, so the cross-data gradient reductions move bf16 —
+        # half the bytes of the naive f32 path, with f32 accumulation and
+        # f32 master weights preserved (§Perf train iteration 2).
+        return jax.tree.map(
+            lambda p: p.astype(compute_dt)
+            if jnp.issubdtype(p.dtype, jnp.floating) and p.dtype != compute_dt
+            else p,
+            params,
+        )
+
+    def train_step(params, opt_state, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        img = batch.get("img")
+        params_c = cast_params(params)
+
+        def loss_of(p, tok, lab, im):
+            loss, metrics = lm.loss(p, tok, lab, im)
+            return loss, metrics
+
+        if n_micro > 1:
+            b = tokens.shape[0]
+            mb = b // n_micro
+            tok_m = tokens.reshape(n_micro, mb, -1)
+            lab_m = labels.reshape(n_micro, mb, -1)
+            img_m = (
+                img.reshape(n_micro, mb, *img.shape[1:]) if img is not None else None
+            )
+
+            def acc_fn(grads_acc, inputs):
+                tok, lab, im = inputs
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_of, has_aux=True
+                )(params_c, tok, lab, im)
+                grads = pin(grads)
+                # accumulate in the comm dtype: any f32 convert before the
+                # cross-data reduction would get hoisted ahead of it by the
+                # simplifier, doubling reduction bytes (measured; §Perf
+                # train iteration 2) — the one-time f32 convert happens
+                # after the microbatch scan instead.
+                grads_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(a.dtype), grads_acc, grads
+                )
+                return grads_acc, loss
+
+            zero = pin(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, comm_dt), params
+            ))
+            xs = (tok_m, lab_m, img_m) if img is not None else (
+                tok_m, lab_m, jnp.zeros((n_micro, 0)),
+            )
+            if img is None:
+                def acc_fn2(g, inp):
+                    tok, lab, _ = inp
+                    return acc_fn(g, (tok, lab, None))
+                grads, losses = jax.lax.scan(acc_fn2, zero, xs)
+            else:
+                grads, losses = jax.lax.scan(acc_fn, zero, xs)
+            grads = jax.tree.map(
+                lambda g: g.astype(jnp.float32) / n_micro, grads
+            )
+            loss = jnp.mean(losses)
+        else:
+            (loss, _), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                params_c, tokens, labels, img
+            )
+            grads = pin(jax.tree.map(lambda g: g.astype(jnp.float32), grads))
+        params, opt_state, om = adamw_update(opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(lm: LanguageModel, max_len: int) -> Callable:
+    def prefill_step(params, batch):
+        logits, cache = lm.prefill(
+            params, batch["tokens"], max_len, batch.get("img")
+        )
+        # return only the last-position logits (the serving handoff)
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_serve_step(lm: LanguageModel) -> Callable:
+    def serve_step(params, cache, tokens):
+        logits, cache = lm.decode_step(params, tokens, cache)
+        return logits, cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# cell assembly
+# ---------------------------------------------------------------------------
+
+
+def pick_microbatches(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh) -> int:
+    dp = _size(mesh, shd.data_axes(mesh))
+    per_dp = max(shape.global_batch // dp, 1)
+    tokens_per = per_dp * shape.seq_len
+    n = max(1, tokens_per // TOKENS_PER_MICROBATCH)
+    while per_dp % n != 0 and n > 1:
+        n -= 1
+    return n
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind != "train":
+        # Inference serves compute-dtype weights (no master copies): halves
+        # weight HBM reads and FSDP gathers, and removes f32->bf16 converts
+        # (§Perf iteration 1 of the decode hillclimb).
+        cfg = cfg.scaled(param_dtype=cfg.dtype)
+    lm = LanguageModel(cfg)
+    # decode: weights resident (TP-only) when they fit next to the KV
+    # cache (§Perf decode iteration 4); giant models (command-r 104B,
+    # llama-vision 90B) keep FSDP-sharded weights with per-token gathers.
+    rules = shd.default_rules(mesh)
+    if shape.kind == "decode":
+        tp = mesh.shape.get("model", 1)
+        dp = 1
+        for a in shd.data_axes(mesh):
+            dp *= mesh.shape[a]
+        param_gb = cfg.param_count() * 2 / tp / 1e9
+        kv_per_seq = (
+            cfg.n_layers * shape.seq_len * cfg.n_kv_heads * cfg.hd * 2 * 2
+        )
+        seqs_per_chip = max(shape.global_batch // dp, 1)
+        kv_gb = kv_per_seq * seqs_per_chip / min(tp, max(cfg.n_kv_heads, 1)) / 1e9
+        if param_gb + kv_gb <= 14.0:
+            rules = shd.inference_rules(mesh)
+    fallbacks: List[str] = []
+
+    params, axes = lm.abstract_init()
+    param_sh = shd.shardings_for(mesh, rules, params, axes, report=fallbacks)
+
+    b, s = shape.global_batch, shape.seq_len
+    tok_sd = jax.ShapeDtypeStruct((b, s if shape.kind != "decode" else 1), jnp.int32)
+    tok_sh = _named(mesh, _bspec(mesh, b, 2))
+    img_sd = (
+        jax.ShapeDtypeStruct((b, cfg.n_img_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+        if cfg.family == "vlm"
+        else None
+    )
+    img_sh = _named(mesh, _bspec(mesh, b, 3)) if img_sd is not None else None
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig()
+        n_micro = pick_microbatches(cfg, shape, mesh)
+        step = make_train_step(lm, opt_cfg, n_micro, param_shardings=param_sh)
+        opt_state = jax.eval_shape(adamw_init, params)
+        opt_sh = jax.tree.map(
+            lambda _: None, opt_state,
+        )
+        # moments mirror param shardings; step scalar replicated
+        from repro.train.optimizer import OptState
+
+        opt_sh = OptState(
+            step=_named(mesh, P()),
+            mu=param_sh,
+            nu=param_sh,
+        )
+        batch_sd = {"tokens": tok_sd, "labels": tok_sd}
+        batch_sh = {"tokens": tok_sh, "labels": tok_sh}
+        if img_sd is not None:
+            batch_sd["img"] = img_sd
+            batch_sh["img"] = img_sh
+        metrics_sh = {
+            "loss": _named(mesh, P()),
+            "grad_norm": _named(mesh, P()),
+            "learning_rate": _named(mesh, P()),
+        }
+        return Cell(
+            arch=arch,
+            shape=shape,
+            cfg=cfg,
+            step_fn=step,
+            args=(params, opt_state, batch_sd),
+            in_shardings=(param_sh, opt_sh, batch_sh),
+            out_shardings=(param_sh, opt_sh, metrics_sh),
+            donate_argnums=(0, 1),
+            fallbacks=fallbacks,
+            n_microbatches=n_micro,
+        )
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(lm, max_len=s)
+        cache_sd = abstract_cache(lm, b, s)
+        cache_sh = cache_shardings(mesh, cfg, cache_sd)
+        batch_sd = {"tokens": tok_sd}
+        batch_sh = {"tokens": tok_sh}
+        if img_sd is not None:
+            batch_sd["img"] = img_sd
+            batch_sh["img"] = img_sh
+        logits_sh = _named(mesh, _bspec(mesh, b, 2))
+        return Cell(
+            arch=arch,
+            shape=shape,
+            cfg=cfg,
+            step_fn=step,
+            args=(params, batch_sd),
+            in_shardings=(param_sh, batch_sh),
+            out_shardings=(logits_sh, cache_sh),
+            donate_argnums=(),
+            fallbacks=fallbacks,
+        )
+
+    # decode
+    step = make_serve_step(lm)
+    cache_sd = abstract_cache(lm, b, s)
+    # decode against a cache of seq_len context: position = s (full)
+    cache_sh = cache_shardings(mesh, cfg, cache_sd)
+    logits_sh = _named(mesh, _bspec(mesh, b, 2))
+    return Cell(
+        arch=arch,
+        shape=shape,
+        cfg=cfg,
+        step_fn=step,
+        args=(params, cache_sd, tok_sd),
+        in_shardings=(param_sh, cache_sh, tok_sh),
+        out_shardings=(logits_sh, cache_sh),
+        donate_argnums=(1,),
+        fallbacks=fallbacks,
+    )

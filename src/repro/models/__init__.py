@@ -1,0 +1,8 @@
+# LM model zoo: one composable decoder covering the ten assigned
+# architectures (dense / local:global / MoE / hybrid SSM / pure SSM /
+# VLM cross-attention / audio-token backbones).
+
+from repro.models.config import ModelConfig
+from repro.models.model import LanguageModel
+
+__all__ = ["ModelConfig", "LanguageModel"]

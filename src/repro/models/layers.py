@@ -1,0 +1,210 @@
+"""Shared neural-net layers with logical-axis-annotated parameters.
+
+Parameters are plain nested dicts of arrays.  Initialization goes through
+:class:`ParamBuilder`, which records a parallel pytree of *logical axis
+names* per parameter dimension ("embed", "heads", "mlp", "vocab",
+"experts", "layers", ...).  The distribution layer
+(:mod:`repro.distributed.sharding`) maps logical axes onto mesh axes with
+per-architecture divisibility fallbacks.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+Axes = Dict[str, Any]
+
+
+class ParamBuilder:
+    """Records parameters and their logical axes during init.
+
+    With ``abstract=True`` no arrays are allocated: leaves are
+    ``jax.ShapeDtypeStruct`` stand-ins, which is how the multi-pod
+    dry-run builds 100B-parameter pytrees on a laptop-class host.
+    """
+
+    def __init__(
+        self, key: jax.Array | None, param_dtype: str = "float32", abstract: bool = False
+    ):
+        self._key = key
+        self.dtype = jnp.dtype(param_dtype)
+        self.abstract = abstract
+        self.params: Params = {}
+        self.axes: Axes = {}
+
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def param(
+        self,
+        path: str,
+        shape: Sequence[int],
+        axes: Sequence[Optional[str]],
+        init: str = "normal",
+        scale: float | None = None,
+    ) -> jax.Array:
+        assert len(shape) == len(axes), (path, shape, axes)
+        if self.abstract:
+            value = jax.ShapeDtypeStruct(tuple(shape), self.dtype)
+        elif init == "zeros":
+            value = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            value = jnp.ones(shape, self.dtype)
+        elif init == "normal":
+            fan_in = shape[0] if len(shape) > 1 else max(shape[-1], 1)
+            std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+            value = std * jax.random.normal(self._next_key(), tuple(shape), self.dtype)
+        else:
+            raise ValueError(init)
+        self._set(self.params, path, value)
+        self._set(self.axes, path, tuple(axes))
+        return value
+
+    @staticmethod
+    def _set(tree: Dict[str, Any], path: str, value: Any) -> None:
+        parts = path.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = value
+
+    def scope(self, prefix: str) -> "ScopedBuilder":
+        return ScopedBuilder(self, prefix)
+
+
+class ScopedBuilder:
+    def __init__(self, base: ParamBuilder, prefix: str):
+        self.base = base
+        self.prefix = prefix
+
+    def param(self, path: str, *args, **kwargs) -> jax.Array:
+        return self.base.param(f"{self.prefix}/{path}", *args, **kwargs)
+
+    def scope(self, prefix: str) -> "ScopedBuilder":
+        return ScopedBuilder(self.base, f"{self.prefix}/{prefix}")
+
+
+def stack_layer_params(
+    init_fn: Callable[[ParamBuilder], None],
+    key: jax.Array | None,
+    n_layers: int,
+    param_dtype: str,
+    abstract: bool = False,
+) -> Tuple[Params, Axes]:
+    """Initialize a layer stack for ``lax.scan``: every leaf gets a
+    leading "layers" axis of size ``n_layers``."""
+    proto = ParamBuilder(key, param_dtype, abstract=True)
+    init_fn(proto)
+    axes = jax.tree.map(
+        lambda a: ("layers", *a),
+        proto.axes,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+    if abstract:
+        stacked = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_layers, *s.shape), s.dtype),
+            proto.params,
+        )
+        return stacked, axes
+
+    def single(k):
+        b = ParamBuilder(k, param_dtype)
+        init_fn(b)
+        return b.params
+
+    keys = jax.random.split(key, n_layers)
+    stacked = jax.vmap(single)(keys)
+    return stacked, axes
+
+
+# ---------------------------------------------------------------------------
+# functional layers
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def init_rms_norm(b, path: str, dim: int) -> None:
+    b.param(f"{path}/scale", (dim,), ("embed",), init="zeros")
+
+
+def act_fn(name: str) -> Callable[[jax.Array], jax.Array]:
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "relu": jax.nn.relu,
+    }[name]
+
+
+def init_mlp(b, path: str, d_model: int, d_ff: int, gated: bool = True) -> None:
+    s = b.scope(path)
+    if gated:
+        s.param("w_gate", (d_model, d_ff), ("embed", "mlp"))
+    s.param("w_up", (d_model, d_ff), ("embed", "mlp"))
+    s.param("w_down", (d_ff, d_model), ("mlp", "embed"))
+
+
+def mlp(params: Params, x: jax.Array, act: str = "silu") -> jax.Array:
+    from repro.distributed.sharding import gather_weight
+
+    w_up = gather_weight(params["w_up"].astype(x.dtype), (None, "act_mlp"))
+    up = x @ w_up
+    if "w_gate" in params:
+        w_gate = gather_weight(
+            params["w_gate"].astype(x.dtype), (None, "act_mlp")
+        )
+        hidden = act_fn(act)(x @ w_gate) * up
+    else:
+        hidden = act_fn(act)(up)
+    w_down = gather_weight(params["w_down"].astype(x.dtype), ("act_mlp", None))
+    return hidden @ w_down
+
+
+def init_embedding(b, path: str, vocab: int, d_model: int) -> None:
+    b.param(path, (vocab, d_model), ("vocab", "embed"), scale=1.0)
+
+
+def embed(table: jax.Array, tokens: jax.Array, dtype: jnp.dtype) -> jax.Array:
+    return table.astype(dtype)[tokens]
+
+
+def unembed(table: jax.Array, x: jax.Array) -> jax.Array:
+    """Logits = x @ table^T (float32 for stable softmax/loss)."""
+    return jnp.einsum(
+        "...d,vd->...v", x.astype(jnp.float32), table.astype(jnp.float32)
+    )
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float
+) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    freqs = rope_frequencies(x.shape[-1], theta)  # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,839 @@
+"""The composable decoder LM: one implementation, ten architectures.
+
+Families and their scan structure (HLO size stays O(1) in depth):
+
+  dense / audio     uniform block (attn + MLP), lax.scan over L
+  local_global      gemma3: scan over pattern units (5 local + 1 global);
+                    local layers keep a bounded ring KV cache
+  moe               uniform block (attn + MoE), optional unrolled dense
+                    layer 0 (deepseek); experts carry the "experts" axis
+  ssm               mamba2: uniform SSD mixer blocks
+  hybrid            zamba2: scan over SSD blocks with a *shared*
+                    attention block (one param set, per-invocation KV
+                    caches) invoked every `attn_every` layers via lax.cond
+  vlm               llama-3.2-vision: scan over units of
+                    (cross_every - 1) self blocks + 1 self+cross block;
+                    image features arrive precomputed (frontend stub)
+
+Three entry points per model:
+  ``forward``      training forward -> logits (no caches)
+  ``prefill``      forward + populated decode caches + last-position logits
+  ``decode_step``  one token against the caches (dense ring buffers here;
+                   the COW-paged serving path lives in repro.serving)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    ParamBuilder,
+    init_embedding,
+    init_mlp,
+    init_rms_norm,
+    embed,
+    mlp,
+    rms_norm,
+    stack_layer_params,
+    unembed,
+)
+
+Params = Dict[str, Any]
+
+
+class DecodeCache(NamedTuple):
+    """Decode-time state. Unused fields are size-0 arrays.
+
+    k/v:         [n_full_layers, B, S_max, KVH, hd]   full-attention caches
+    k_loc/v_loc: [n_units, n_local, B, window, KVH, hd] ring caches (gemma)
+    ssm_conv:    [L, B, 3, conv_ch]; ssm_state: [L, B, H, P, N]
+    shared_k/v:  [n_invocations, B, S_max, KVH, hd]   zamba2 shared block
+    img_feats:   [B, n_img, D] (vlm cross-attention source)
+    position:    [B] current length
+    """
+
+    k: jax.Array
+    v: jax.Array
+    k_loc: jax.Array
+    v_loc: jax.Array
+    ssm_conv: jax.Array
+    ssm_state: jax.Array
+    shared_k: jax.Array
+    shared_v: jax.Array
+    img_feats: jax.Array
+    position: jax.Array
+
+
+def _z(*shape, dtype=jnp.bfloat16):
+    return jnp.zeros(shape, dtype)
+
+
+@dataclasses.dataclass
+class LanguageModel:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+    def init(
+        self, key: jax.Array | None, abstract: bool = False
+    ) -> Tuple[Params, Dict[str, Any]]:
+        cfg = self.cfg
+        if abstract:
+            k_embed = k_blocks = k_extra = None
+        else:
+            k_embed, k_blocks, k_extra, _ = jax.random.split(key, 4)
+        b = ParamBuilder(k_embed, cfg.param_dtype, abstract=abstract)
+        init_embedding(b, "embed", cfg.padded_vocab, cfg.d_model)
+        init_rms_norm(b, "final_norm", cfg.d_model)
+        if not cfg.tie_embeddings:
+            b.param(
+                "unembed", (cfg.padded_vocab, cfg.d_model), ("vocab", "embed")
+            )
+        params, axes = b.params, b.axes
+
+        blocks, blocks_axes = stack_layer_params(
+            lambda bb: self._init_block(bb), k_blocks, self._n_scan,
+            cfg.param_dtype, abstract=abstract,
+        )
+        params["blocks"], axes["blocks"] = blocks, blocks_axes
+
+        if cfg.family == "hybrid":
+            bb = ParamBuilder(k_extra, cfg.param_dtype, abstract=abstract)
+            init_rms_norm(bb, "pre", cfg.d_model)
+            attn_lib.init_attention(bb.scope("attn"), cfg)
+            init_rms_norm(bb, "mid", cfg.d_model)
+            init_mlp(bb, "mlp", cfg.d_model, cfg.d_ff, cfg.gated_mlp)
+            params["shared_attn"], axes["shared_attn"] = bb.params, bb.axes
+        if cfg.family == "moe" and cfg.first_layer_dense:
+            bb = ParamBuilder(k_extra, cfg.param_dtype, abstract=abstract)
+            self._init_dense_block(bb, d_ff=self._dense_ff)
+            params["block0"], axes["block0"] = bb.params, bb.axes
+        return params, axes
+
+    def abstract_init(self) -> Tuple[Params, Dict[str, Any]]:
+        """Shape-only params (ShapeDtypeStructs) + logical axes — no
+        allocation; used by the multi-pod dry-run."""
+        return self.init(None, abstract=True)
+
+    @property
+    def _n_scan(self) -> int:
+        cfg = self.cfg
+        if cfg.family == "local_global":
+            return cfg.n_layers // (cfg.local_ratio + 1)
+        if cfg.family == "vlm":
+            return cfg.n_layers // cfg.cross_every
+        if cfg.family == "moe" and cfg.first_layer_dense:
+            return cfg.n_layers - 1
+        return cfg.n_layers
+
+    @property
+    def _dense_ff(self) -> int:
+        # deepseek's dense layer-0 FFN width: match total MoE active width
+        cfg = self.cfg
+        e_ff = cfg.expert_d_ff or cfg.d_ff
+        return e_ff * (cfg.top_k + cfg.n_shared_experts)
+
+    def _init_dense_block(self, b, d_ff: Optional[int] = None) -> None:
+        cfg = self.cfg
+        init_rms_norm(b, "ln1", cfg.d_model)
+        attn_lib.init_attention(b.scope("attn"), cfg)
+        init_rms_norm(b, "ln2", cfg.d_model)
+        init_mlp(b, "mlp", cfg.d_model, d_ff or cfg.d_ff, cfg.gated_mlp)
+
+    def _init_block(self, b) -> None:
+        cfg = self.cfg
+        fam = cfg.family
+        if fam in ("dense", "audio"):
+            self._init_dense_block(b)
+        elif fam == "local_global":
+            for i in range(cfg.local_ratio):
+                self._init_dense_block(b.scope(f"local{i}"))
+            self._init_dense_block(b.scope("global"))
+        elif fam == "moe":
+            init_rms_norm(b, "ln1", cfg.d_model)
+            attn_lib.init_attention(b.scope("attn"), cfg)
+            init_rms_norm(b, "ln2", cfg.d_model)
+            moe_lib.init_moe(b.scope("moe"), cfg)
+        elif fam in ("ssm", "hybrid"):
+            init_rms_norm(b, "ln", cfg.d_model)
+            ssm_lib.init_ssm(b.scope("ssm"), cfg)
+        elif fam == "vlm":
+            for i in range(cfg.cross_every - 1):
+                self._init_dense_block(b.scope(f"self{i}"))
+            self._init_dense_block(b.scope("anchor"))
+            init_rms_norm(b, "ln_cross", cfg.d_model)
+            attn_lib.init_attention(b.scope("cross"), cfg, cross=True)
+        else:
+            raise ValueError(fam)
+
+    # ------------------------------------------------------------------
+    # training forward
+    # ------------------------------------------------------------------
+    def forward(
+        self,
+        params: Params,
+        tokens: jax.Array,  # [B, S]
+        img_feats: Optional[jax.Array] = None,  # [B, n_img, D] (vlm stub)
+    ) -> jax.Array:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = embed(params["embed"], tokens, dt)
+        # pin activations to batch sharding (otherwise GSPMD propagates the
+        # embedding table's layout into the whole residual stream)
+        x = constrain(x, ("act_batch", None, None))
+        positions = jnp.broadcast_to(
+            jnp.arange(tokens.shape[1], dtype=jnp.int32), tokens.shape
+        )
+        x = self._run_blocks_train(params, x, positions, img_feats)
+        x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        table = params.get("unembed", params["embed"])
+        logits = unembed(table, x)
+        return constrain(logits, ("act_batch", None, "act_vocab"))
+
+    def loss(
+        self,
+        params: Params,
+        tokens: jax.Array,
+        labels: jax.Array,
+        img_feats: Optional[jax.Array] = None,
+    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        logits = self.forward(params, tokens, img_feats)
+        mask = labels >= 0
+        safe = jnp.maximum(labels, 0)
+        # vocab-sharding-friendly cross entropy: logsumexp + one-hot dot
+        # (take_along_axis over a TP-sharded vocab axis forces gathers).
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(safe, logits.shape[-1], dtype=logits.dtype)
+        picked = jnp.einsum("bsv,bsv->bs", logits, onehot)
+        nll = lse - picked
+        denom = jnp.maximum(jnp.sum(mask), 1)
+        loss = jnp.sum(jnp.where(mask, nll, 0.0)) / denom
+        acc = jnp.sum(jnp.where(mask, jnp.argmax(logits, -1) == safe, False)) / denom
+        return loss, {"loss": loss, "accuracy": acc, "tokens": denom}
+
+    # -- per-family training block runners ------------------------------
+    def _run_blocks_train(self, params, x, positions, img_feats):
+        cfg = self.cfg
+        fam = cfg.family
+
+        def dense_block(p, h, window=0):
+            h = h + attn_lib.attention_train(
+                p["attn"], rms_norm(h, p["ln1"]["scale"], cfg.norm_eps), cfg,
+                positions, window=window,
+            )
+            h = h + mlp(p["mlp"], rms_norm(h, p["ln2"]["scale"], cfg.norm_eps), cfg.act)
+            return h
+
+        def moe_block(p, h):
+            h = h + attn_lib.attention_train(
+                p["attn"], rms_norm(h, p["ln1"]["scale"], cfg.norm_eps), cfg, positions
+            )
+            h = h + moe_lib.moe_layer(p["moe"], rms_norm(h, p["ln2"]["scale"], cfg.norm_eps), cfg)
+            return h
+
+        def ssm_block(p, h):
+            return h + ssm_lib.ssm_layer(p["ssm"], rms_norm(h, p["ln"]["scale"], cfg.norm_eps), cfg)
+
+        def shared_attn(h):
+            p = params["shared_attn"]
+            h = h + attn_lib.attention_train(
+                p["attn"], rms_norm(h, p["pre"]["scale"], cfg.norm_eps), cfg, positions
+            )
+            h = h + mlp(p["mlp"], rms_norm(h, p["mid"]["scale"], cfg.norm_eps), cfg.act)
+            return h
+
+        blocks = params["blocks"]
+
+        if fam in ("dense", "audio"):
+            def body(h, p):
+                return dense_block(p, h), None
+        elif fam == "moe":
+            def body(h, p):
+                return moe_block(p, h), None
+        elif fam == "ssm":
+            def body(h, p):
+                return ssm_block(p, h), None
+        elif fam == "hybrid":
+            every = cfg.attn_every
+
+            def body(carry, inp):
+                h, idx = carry
+                p = inp
+                h = ssm_block(p, h)
+                h = jax.lax.cond(
+                    (idx % every) == (every - 1), shared_attn, lambda v: v, h
+                )
+                return (h, idx + 1), None
+        elif fam == "local_global":
+            def body(h, p):
+                for i in range(cfg.local_ratio):
+                    h = dense_block(p[f"local{i}"], h, window=cfg.window)
+                h = dense_block(p["global"], h, window=0)
+                return h, None
+        elif fam == "vlm":
+            feats = img_feats
+            assert feats is not None, "vlm requires img_feats"
+
+            def body(h, p):
+                for i in range(cfg.cross_every - 1):
+                    h = dense_block(p[f"self{i}"], h)
+                h = dense_block(p["anchor"], h)
+                h = h + attn_lib.cross_attention(
+                    p["cross"],
+                    rms_norm(h, p["ln_cross"]["scale"], cfg.norm_eps),
+                    feats.astype(h.dtype),
+                    cfg,
+                )
+                return h, None
+        else:
+            raise ValueError(fam)
+
+        if fam == "moe" and cfg.first_layer_dense:
+            x = dense_block(params["block0"], x)
+        scan_body = body
+        if cfg.remat:
+            scan_body = jax.checkpoint(body)
+        if fam == "hybrid":
+            (x, _), _ = jax.lax.scan(scan_body, (x, jnp.int32(0)), blocks)
+        else:
+            x, _ = jax.lax.scan(scan_body, x, blocks)
+        return x
+
+    # ------------------------------------------------------------------
+    # decode caches
+    # ------------------------------------------------------------------
+    def init_cache(
+        self, batch: int, max_len: int, img_feats: Optional[jax.Array] = None
+    ) -> DecodeCache:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        kvh, hd = cfg.n_kv_heads, cfg.hd
+        e = lambda *s: _z(*s, dtype=dt)
+        zero = e(0)
+        k = v = k_loc = v_loc = ssm_conv = ssm_state = shared_k = shared_v = zero
+        fam = cfg.family
+        if fam in ("dense", "audio", "moe", "vlm"):
+            n_full = cfg.n_layers if fam != "vlm" else cfg.n_layers
+            k = e(n_full, batch, max_len, kvh, hd)
+            v = e(n_full, batch, max_len, kvh, hd)
+        if fam == "local_global":
+            units = cfg.n_layers // (cfg.local_ratio + 1)
+            k = e(units, batch, max_len, kvh, hd)
+            v = e(units, batch, max_len, kvh, hd)
+            k_loc = e(units, cfg.local_ratio, batch, cfg.window, kvh, hd)
+            v_loc = e(units, cfg.local_ratio, batch, cfg.window, kvh, hd)
+        if fam in ("ssm", "hybrid"):
+            conv_ch = cfg.d_inner + 2 * ssm_lib.N_GROUPS * cfg.ssm_state
+            ssm_conv = e(cfg.n_layers, batch, 3, conv_ch)
+            ssm_state = jnp.zeros(
+                (cfg.n_layers, batch, cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                jnp.float32,
+            )
+        if fam == "hybrid":
+            n_inv = cfg.n_layers // cfg.attn_every
+            shared_k = e(n_inv, batch, max_len, kvh, hd)
+            shared_v = e(n_inv, batch, max_len, kvh, hd)
+        img = img_feats if img_feats is not None else e(batch, 0, cfg.d_model)
+        return DecodeCache(
+            k=k, v=v, k_loc=k_loc, v_loc=v_loc,
+            ssm_conv=ssm_conv, ssm_state=ssm_state,
+            shared_k=shared_k, shared_v=shared_v,
+            img_feats=img,
+            position=jnp.zeros((batch,), jnp.int32),
+        )
+
+    # ------------------------------------------------------------------
+    # decode step (dense ring caches; paged COW path in repro.serving)
+    # ------------------------------------------------------------------
+    def decode_step(
+        self, params: Params, tokens: jax.Array, cache: DecodeCache
+    ) -> Tuple[jax.Array, DecodeCache]:
+        """tokens: [B, 1] -> (logits [B, V], updated cache)."""
+        cfg = self.cfg
+        fam = cfg.family
+        dt = jnp.dtype(cfg.dtype)
+        b = tokens.shape[0]
+        pos = cache.position  # [B]
+        x = embed(params["embed"], tokens, dt)
+        x = constrain(x, ("act_batch", None, None))
+        rows = jnp.arange(b)
+
+        def put(c, new):  # insert [B,1,KVH,hd] at pos into [B,S,KVH,hd]
+            return c.at[rows, pos].set(new[:, 0])
+
+        def put_ring(c, new, window):
+            return c.at[rows, pos % window].set(new[:, 0])
+
+        def attn_step(p, h, k_c, v_c, window=0):
+            hn = rms_norm(h, p["ln1"]["scale"], cfg.norm_eps)
+            out, k_new, v_new = attn_lib.attention_decode(
+                p["attn"], hn, k_c, v_c, pos, cfg, window=window
+            )
+            h = h + out
+            h = h + mlp(p["mlp"], rms_norm(h, p["ln2"]["scale"], cfg.norm_eps), cfg.act)
+            return h, put(k_c, k_new), put(v_c, v_new)
+
+        def ring_attn_step(p, h, k_c, v_c):
+            """Sliding-window layer against a ring cache of size window."""
+            w = cfg.window
+            hn = rms_norm(h, p["ln1"]["scale"], cfg.norm_eps)
+            # Reconstruct absolute positions of ring slots.
+            slot = jnp.arange(w, dtype=jnp.int32)[None, :]
+            age = (pos[:, None] - 1 - slot) % w  # distance of each slot
+            k_pos = pos[:, None] - 1 - age
+            q, k_new, v_new = attn_lib.qkv_proj(p["attn"], hn, cfg)
+            q = attn_lib.apply_rope(q, pos[:, None], cfg.rope_theta)
+            k_new = attn_lib.apply_rope(k_new, pos[:, None], cfg.rope_theta)
+            scores = attn_lib._grouped_scores(q, k_c).astype(jnp.float32)
+            ok = (k_pos >= 0) & (k_pos < pos[:, None]) & (pos[:, None] - k_pos < w)
+            self_s = attn_lib._grouped_scores(q, k_new).astype(jnp.float32)
+            scores = jnp.where(ok[:, None, None, None, :], scores, attn_lib.NEG_INF)
+            allp = jax.nn.softmax(
+                jnp.concatenate([scores, self_s], -1), axis=-1
+            ).astype(dt)
+            out = attn_lib._grouped_out(allp[..., :w], v_c) + attn_lib._grouped_out(
+                allp[..., w:], v_new
+            )
+            h = h + attn_lib.out_proj(p["attn"], out)
+            h = h + mlp(p["mlp"], rms_norm(h, p["ln2"]["scale"], cfg.norm_eps), cfg.act)
+            return h, put_ring(k_c, k_new, w), put_ring(v_c, v_new, w)
+
+        def moe_step(p, h, k_c, v_c):
+            hn = rms_norm(h, p["ln1"]["scale"], cfg.norm_eps)
+            out, k_new, v_new = attn_lib.attention_decode(
+                p["attn"], hn, k_c, v_c, pos, cfg
+            )
+            h = h + out
+            h = h + moe_lib.moe_layer(
+                p["moe"], rms_norm(h, p["ln2"]["scale"], cfg.norm_eps), cfg
+            )
+            return h, put(k_c, k_new), put(v_c, v_new)
+
+        def ssm_step(p, h, conv, state):
+            out, new_cache = ssm_lib.ssm_decode(
+                p["ssm"], rms_norm(h, p["ln"]["scale"], cfg.norm_eps),
+                ssm_lib.SSMCache(conv, state), cfg,
+            )
+            return h + out, new_cache.conv, new_cache.state
+
+        blocks = params["blocks"]
+        # The full-attention caches are *carried whole* through the layer
+        # scan and updated in place at [layer, row, pos] — only the new
+        # token's K/V is written.  (Scanning per-layer cache slices as
+        # xs/ys re-materializes the whole slice every layer: 2x the
+        # attention's intrinsic read traffic — §Perf decode iteration 5.)
+
+        def token_write(all_c, layer_idx, new):
+            return all_c.at[layer_idx, rows, pos].set(new[:, 0])
+
+        def attn_inplace(p, h, k_all, v_all, layer_idx, window=0):
+            hn = rms_norm(h, p["ln1"]["scale"], cfg.norm_eps)
+            k_l = jax.lax.dynamic_index_in_dim(k_all, layer_idx, 0, False)
+            v_l = jax.lax.dynamic_index_in_dim(v_all, layer_idx, 0, False)
+            out, k_new, v_new = attn_lib.attention_decode(
+                p["attn"], hn, k_l, v_l, pos, cfg, window=window
+            )
+            h = h + out
+            return h, token_write(k_all, layer_idx, k_new), token_write(
+                v_all, layer_idx, v_new
+            )
+
+        if fam in ("dense", "audio", "moe"):
+            off = 1 if (fam == "moe" and cfg.first_layer_dense) else 0
+            k_all, v_all = cache.k, cache.v
+            if off:
+                p0 = params["block0"]
+                x, k_all, v_all = attn_inplace(p0, x, k_all, v_all, 0)
+                x = x + mlp(
+                    p0["mlp"], rms_norm(x, p0["ln2"]["scale"], cfg.norm_eps),
+                    cfg.act,
+                )
+
+            def body(carry, p):
+                h, k_all, v_all, idx = carry
+                h, k_all, v_all = attn_inplace(p, h, k_all, v_all, idx)
+                hn = rms_norm(h, p["ln2"]["scale"], cfg.norm_eps)
+                if fam == "moe":
+                    h = h + moe_lib.moe_layer(p["moe"], hn, cfg)
+                else:
+                    h = h + mlp(p["mlp"], hn, cfg.act)
+                return (h, k_all, v_all, idx + 1), None
+
+            (x, k_all, v_all, _), _ = jax.lax.scan(
+                body, (x, k_all, v_all, jnp.int32(off)), blocks
+            )
+            cache = cache._replace(k=k_all, v=v_all)
+        elif fam == "ssm":
+            def body(h, inp):
+                p, conv, state = inp
+                h, conv, state = ssm_step(p, h, conv, state)
+                return h, (conv, state)
+
+            x, (conv, state) = jax.lax.scan(
+                body, x, (blocks, cache.ssm_conv, cache.ssm_state)
+            )
+            cache = cache._replace(ssm_conv=conv, ssm_state=state)
+        elif fam == "hybrid":
+            every = cfg.attn_every
+            sp = params["shared_attn"]
+
+            def body(carry, inp):
+                h, idx, sk, sv = carry
+                p, conv, state = inp
+                h, conv, state = ssm_step(p, h, conv, state)
+                inv = idx // every
+
+                def with_attn(operand):
+                    # in-place token write on the carried invocation
+                    # caches (never rewrite the [B,S,...] slice — §Perf
+                    # decode iteration 5, the zamba2 dominant term).
+                    h, sk, sv = operand
+                    hn = rms_norm(h, sp["pre"]["scale"], cfg.norm_eps)
+                    k_l = jax.lax.dynamic_index_in_dim(sk, inv, 0, False)
+                    v_l = jax.lax.dynamic_index_in_dim(sv, inv, 0, False)
+                    out, k_new, v_new = attn_lib.attention_decode(
+                        sp["attn"], hn, k_l, v_l, pos, cfg
+                    )
+                    h2 = h + out
+                    h2 = h2 + mlp(
+                        sp["mlp"],
+                        rms_norm(h2, sp["mid"]["scale"], cfg.norm_eps),
+                        cfg.act,
+                    )
+                    sk = sk.at[inv, rows, pos].set(k_new[:, 0])
+                    sv = sv.at[inv, rows, pos].set(v_new[:, 0])
+                    return h2, sk, sv
+
+                h, sk, sv = jax.lax.cond(
+                    (idx % every) == (every - 1),
+                    with_attn,
+                    lambda o: o,
+                    (h, sk, sv),
+                )
+                return (h, idx + 1, sk, sv), (conv, state)
+
+            (x, _, sk, sv), (conv, state) = jax.lax.scan(
+                body,
+                (x, jnp.int32(0), cache.shared_k, cache.shared_v),
+                (blocks, cache.ssm_conv, cache.ssm_state),
+            )
+            cache = cache._replace(
+                ssm_conv=conv, ssm_state=state, shared_k=sk, shared_v=sv
+            )
+        elif fam == "local_global":
+            # global caches carried whole + in-place token writes (§Perf
+            # decode iteration 5); bounded ring caches stay as scan xs/ys
+            # (their slice traffic is O(window), already proportional to
+            # the attention's own reads).
+            def ring_write(rc, new, w):
+                return rc.at[rows, pos % w].set(new[:, 0])
+
+            def body(carry, inp):
+                h, k_all, v_all, idx = carry
+                p, k_l, v_l = inp
+                new_kl, new_vl = [], []
+                for i in range(cfg.local_ratio):
+                    h, ki, vi = ring_attn_step(p[f"local{i}"], h, k_l[i], v_l[i])
+                    new_kl.append(ki)
+                    new_vl.append(vi)
+                hn = rms_norm(h, p["global"]["ln1"]["scale"], cfg.norm_eps)
+                k_g = jax.lax.dynamic_index_in_dim(k_all, idx, 0, False)
+                v_g = jax.lax.dynamic_index_in_dim(v_all, idx, 0, False)
+                out, k_new, v_new = attn_lib.attention_decode(
+                    p["global"]["attn"], hn, k_g, v_g, pos, cfg
+                )
+                h = h + out
+                h = h + mlp(
+                    p["global"]["mlp"],
+                    rms_norm(h, p["global"]["ln2"]["scale"], cfg.norm_eps),
+                    cfg.act,
+                )
+                k_all = token_write(k_all, idx, k_new)
+                v_all = token_write(v_all, idx, v_new)
+                return (h, k_all, v_all, idx + 1), (
+                    jnp.stack(new_kl), jnp.stack(new_vl)
+                )
+
+            (x, k, v, _), (k_loc, v_loc) = jax.lax.scan(
+                body,
+                (x, cache.k, cache.v, jnp.int32(0)),
+                (blocks, cache.k_loc, cache.v_loc),
+            )
+            cache = cache._replace(k=k, v=v, k_loc=k_loc, v_loc=v_loc)
+        elif fam == "vlm":
+            feats = cache.img_feats
+            n_self = cfg.cross_every
+
+            def body(carry, p):
+                h, k_all, v_all, idx = carry
+                for i in range(cfg.cross_every - 1):
+                    h, k_all, v_all = attn_inplace(
+                        p[f"self{i}"], h, k_all, v_all, idx * n_self + i
+                    )
+                    h = h + mlp(
+                        p[f"self{i}"]["mlp"],
+                        rms_norm(h, p[f"self{i}"]["ln2"]["scale"], cfg.norm_eps),
+                        cfg.act,
+                    )
+                h, k_all, v_all = attn_inplace(
+                    p["anchor"], h, k_all, v_all, idx * n_self + n_self - 1
+                )
+                h = h + mlp(
+                    p["anchor"]["mlp"],
+                    rms_norm(h, p["anchor"]["ln2"]["scale"], cfg.norm_eps),
+                    cfg.act,
+                )
+                h = h + attn_lib.cross_attention(
+                    p["cross"],
+                    rms_norm(h, p["ln_cross"]["scale"], cfg.norm_eps),
+                    feats.astype(h.dtype),
+                    cfg,
+                )
+                return (h, k_all, v_all, idx + 1), None
+
+            (x, k, v, _), _ = jax.lax.scan(
+                body, (x, cache.k, cache.v, jnp.int32(0)), blocks
+            )
+            cache = cache._replace(k=k, v=v)
+        else:
+            raise ValueError(fam)
+
+        x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        table = params.get("unembed", params["embed"])
+        logits = unembed(table, x)[:, 0]
+        cache = cache._replace(position=cache.position + 1)
+        return logits, cache
+
+    # ------------------------------------------------------------------
+    # prefill = training forward + cache population via decode replay
+    # ------------------------------------------------------------------
+    def prefill(
+        self,
+        params: Params,
+        tokens: jax.Array,
+        max_len: int,
+        img_feats: Optional[jax.Array] = None,
+    ) -> Tuple[jax.Array, DecodeCache]:
+        """Process a prompt [B, S]; returns (logits [B, S, V], cache).
+
+        Uses the chunked training path for the transformer stack and
+        computes per-layer K/V once more for the cache (keeps the code
+        path single-source; a fused variant is a serving optimization).
+        """
+        cfg = self.cfg
+        logits = self.forward(params, tokens, img_feats)
+        cache = self.init_cache(tokens.shape[0], max_len, img_feats)
+        cache = self._fill_cache(params, tokens, cache, img_feats)
+        return logits, cache
+
+    def _fill_cache(self, params, tokens, cache, img_feats):
+        """Populate decode caches by replaying the embed/proj path.
+
+        K/V only depend on layer *inputs*; to keep this simple and
+        correct we replay the full forward per family, collecting K/V as
+        scan outputs.  (Cost ~ one extra forward; acceptable for the
+        dry-run and tests; the serving engine fuses it.)
+        """
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        b, s = tokens.shape
+        x = embed(params["embed"], tokens, dt)
+        x = constrain(x, ("act_batch", None, None))
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        fam = cfg.family
+        max_len = cache.k.shape[2] if cache.k.ndim >= 3 else 0
+
+        def kv_of(p, h, window=0):
+            hn = rms_norm(h, p["ln1"]["scale"], cfg.norm_eps)
+            _, k_new, v_new = attn_lib.qkv_proj(p["attn"], hn, cfg)
+            k_new = attn_lib.apply_rope(k_new, positions, cfg.rope_theta)
+            h2 = h + attn_lib.attention_train(p["attn"], hn, cfg, positions, window)
+            h2 = h2 + mlp(p["mlp"], rms_norm(h2, p["ln2"]["scale"], cfg.norm_eps), cfg.act)
+            return h2, k_new, v_new
+
+        def pad_to(a, n):
+            return jnp.pad(a, ((0, 0), (0, n - a.shape[1]), (0, 0), (0, 0)))
+
+        if fam in ("dense", "audio", "moe", "vlm"):
+            # collect K/V per full layer through a scan mirror of forward
+            def body(h, p):
+                if fam == "moe":
+                    hn = rms_norm(h, p["ln1"]["scale"], cfg.norm_eps)
+                    _, k_new, v_new = attn_lib.qkv_proj(p["attn"], hn, cfg)
+                    k_new = attn_lib.apply_rope(k_new, positions, cfg.rope_theta)
+                    h = h + attn_lib.attention_train(p["attn"], hn, cfg, positions)
+                    h = h + moe_lib.moe_layer(
+                        p["moe"], rms_norm(h, p["ln2"]["scale"], cfg.norm_eps), cfg
+                    )
+                    return h, (k_new, v_new)
+                if fam == "vlm":
+                    ks, vs = [], []
+                    for i in range(cfg.cross_every - 1):
+                        h, k_i, v_i = kv_of(p[f"self{i}"], h)
+                        ks.append(k_i)
+                        vs.append(v_i)
+                    h, k_a, v_a = kv_of(p["anchor"], h)
+                    ks.append(k_a)
+                    vs.append(v_a)
+                    h = h + attn_lib.cross_attention(
+                        p["cross"],
+                        rms_norm(h, p["ln_cross"]["scale"], cfg.norm_eps),
+                        cache.img_feats.astype(h.dtype),
+                        cfg,
+                    )
+                    return h, (jnp.stack(ks), jnp.stack(vs))
+                h, k_new, v_new = kv_of(p, h)
+                return h, (k_new, v_new)
+
+            if fam == "moe" and cfg.first_layer_dense:
+                hn = rms_norm(x, params["block0"]["ln1"]["scale"], cfg.norm_eps)
+                _, k0, v0 = attn_lib.qkv_proj(params["block0"]["attn"], hn, cfg)
+                k0 = attn_lib.apply_rope(k0, positions, cfg.rope_theta)
+                x = x + attn_lib.attention_train(
+                    params["block0"]["attn"], hn, cfg, positions
+                )
+                x = x + mlp(
+                    params["block0"]["mlp"],
+                    rms_norm(x, params["block0"]["ln2"]["scale"], cfg.norm_eps),
+                    cfg.act,
+                )
+            x, (k_all, v_all) = jax.lax.scan(body, x, params["blocks"])
+            if fam == "vlm":
+                k_all = k_all.reshape(cfg.n_layers, b, s, cfg.n_kv_heads, cfg.hd)
+                v_all = v_all.reshape(cfg.n_layers, b, s, cfg.n_kv_heads, cfg.hd)
+            if fam == "moe" and cfg.first_layer_dense:
+                k_all = jnp.concatenate([k0[None], k_all], 0)
+                v_all = jnp.concatenate([v0[None], v_all], 0)
+            k_pad = jax.vmap(lambda a: pad_to(a, max_len))(k_all)
+            v_pad = jax.vmap(lambda a: pad_to(a, max_len))(v_all)
+            cache = cache._replace(k=k_pad, v=v_pad)
+        elif fam == "ssm":
+            def body(h, p):
+                hn = rms_norm(h, p["ln"]["scale"], cfg.norm_eps)
+                conv, state = _ssm_prefill_cache(p["ssm"], hn, cfg)
+                h2 = h + ssm_lib.ssm_layer(p["ssm"], hn, cfg)
+                return h2, (conv, state)
+
+            x, (conv, state) = jax.lax.scan(body, x, params["blocks"])
+            cache = cache._replace(ssm_conv=conv, ssm_state=state)
+        elif fam == "hybrid":
+            every = cfg.attn_every
+            sp = params["shared_attn"]
+            n_inv = cfg.n_layers // every
+            sk = cache.shared_k
+            sv = cache.shared_v
+
+            def body(carry, p):
+                h, idx, sk, sv = carry
+                hn = rms_norm(h, p["ln"]["scale"], cfg.norm_eps)
+                conv, state = _ssm_prefill_cache(p["ssm"], hn, cfg)
+                h = h + ssm_lib.ssm_layer(p["ssm"], hn, cfg)
+
+                def with_attn(operand):
+                    h, sk, sv = operand
+                    inv = idx // every
+                    hh = rms_norm(h, sp["pre"]["scale"], cfg.norm_eps)
+                    _, k_new, v_new = attn_lib.qkv_proj(sp["attn"], hh, cfg)
+                    k_new = attn_lib.apply_rope(k_new, positions, cfg.rope_theta)
+                    h = h + attn_lib.attention_train(sp["attn"], hh, cfg, positions)
+                    h = h + mlp(
+                        sp["mlp"], rms_norm(h, sp["mid"]["scale"], cfg.norm_eps), cfg.act
+                    )
+                    sk = sk.at[inv, :, :s].set(k_new)
+                    sv = sv.at[inv, :, :s].set(v_new)
+                    return h, sk, sv
+
+                h, sk, sv = jax.lax.cond(
+                    (idx % every) == (every - 1), with_attn, lambda o: o, (h, sk, sv)
+                )
+                return (h, idx + 1, sk, sv), (conv, state)
+
+            (x, _, sk, sv), (conv, state) = jax.lax.scan(
+                body, (x, jnp.int32(0), sk, sv), params["blocks"]
+            )
+            cache = cache._replace(
+                ssm_conv=conv, ssm_state=state, shared_k=sk, shared_v=sv
+            )
+        elif fam == "local_global":
+            w = cfg.window
+
+            def body(h, p):
+                kls, vls = [], []
+                for i in range(cfg.local_ratio):
+                    hn = rms_norm(h, p[f"local{i}"]["ln1"]["scale"], cfg.norm_eps)
+                    _, k_new, v_new = attn_lib.qkv_proj(p[f"local{i}"]["attn"], hn, cfg)
+                    k_new = attn_lib.apply_rope(k_new, positions, cfg.rope_theta)
+                    h, _, _ = kv_of(p[f"local{i}"], h, window=w)
+                    # ring layout: slot = pos % w for the last w positions
+                    kr = _to_ring(k_new, s, w)
+                    vr = _to_ring(v_new, s, w)
+                    kls.append(kr)
+                    vls.append(vr)
+                h, k_g, v_g = kv_of(p["global"], h)
+                return h, (k_g, v_g, jnp.stack(kls), jnp.stack(vls))
+
+            x, (k_g, v_g, k_l, v_l) = jax.lax.scan(body, x, params["blocks"])
+            k_pad = jax.vmap(lambda a: pad_to(a, max_len))(k_g)
+            v_pad = jax.vmap(lambda a: pad_to(a, max_len))(v_g)
+            cache = cache._replace(k=k_pad, v=v_pad, k_loc=k_l, v_loc=v_l)
+        cache = cache._replace(
+            position=jnp.full((b,), s, jnp.int32)
+        )
+        return cache
+
+
+def _to_ring(k_new: jax.Array, s: int, w: jax.Array) -> jax.Array:
+    """Place the last `w` of s positions into ring slots pos % w."""
+    b = k_new.shape[0]
+    slots = jnp.arange(w)
+    # absolute position currently living in each slot after s tokens
+    abs_pos = jnp.where(
+        s >= w,
+        slots + ((s - 1 - slots) // w) * w,
+        slots,
+    )
+    abs_pos = jnp.clip(abs_pos, 0, s - 1)
+    out = k_new[:, abs_pos]
+    valid = abs_pos < s
+    return jnp.where(valid[None, :, None, None], out, 0)
+
+
+def _ssm_prefill_cache(params, x, cfg: ModelConfig):
+    """Final (conv window, ssm state) after prefilling x [B,S,D]."""
+    dt_ = x.dtype
+    b, s, d = x.shape
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    xbc = jnp.concatenate(
+        [
+            x @ params["w_in_x"].astype(dt_),
+            x @ params["w_in_b"].astype(dt_),
+            x @ params["w_in_c"].astype(dt_),
+        ],
+        axis=-1,
+    )
+    conv_tail = xbc[:, -3:]
+    conv_tail = jnp.pad(conv_tail, ((0, 0), (max(0, 3 - s), 0), (0, 0)))[:, -3:]
+    act = jax.nn.silu(ssm_lib._conv1d(xbc, params["conv_w"], params["conv_b"]))
+    xs = act[..., :di].reshape(b, s, h, p)
+    bmat = act[..., di : di + n].reshape(b, s, 1, n)
+    cmat = act[..., di + n :].reshape(b, s, 1, n)
+    dt = jax.nn.softplus(
+        (x @ params["w_in_dt"].astype(dt_)).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32)
+    )
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    _, h_last = ssm_lib.ssd_chunked(
+        xs, dt, a, bmat.astype(jnp.float32), cmat.astype(jnp.float32),
+        chunk=min(64, s),
+    )
+    return conv_tail, h_last

@@ -1,0 +1,154 @@
+"""Mixture-of-experts layer: shared + routed experts with top-k routing
+and fixed-capacity scatter dispatch (fully static shapes, EP-shardable).
+
+Covers deepseek-moe (2 shared + 64 routed, top-6, fine-grained experts)
+and phi3.5-moe (16 routed, top-2).  Dispatch uses the Switch-style
+capacity scheme: each expert processes at most
+``capacity = ceil(tokens * top_k / n_experts * capacity_factor)`` tokens;
+overflow tokens are dropped from that expert (their combine weight is 0),
+keeping every shape static.  The dispatched activations tensor
+``[experts, capacity, d]`` carries the "experts" logical axis, so expert
+parallelism falls out of the sharding rules (GSPMD inserts the
+all-to-alls).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, act_fn
+
+
+def moe_capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    cap = int(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor) + 1
+    # round to a lane-friendly multiple
+    return max(8, (cap + 7) // 8 * 8)
+
+
+def init_moe(b, cfg: ModelConfig) -> None:
+    d = cfg.d_model
+    e_ff = cfg.expert_d_ff or cfg.d_ff
+    b.param("router", (d, cfg.n_experts), ("embed", "experts"))
+    s = b.scope("experts")
+    s.param("w_gate", (cfg.n_experts, d, e_ff), ("experts", "embed", "expert_mlp"))
+    s.param("w_up", (cfg.n_experts, d, e_ff), ("experts", "embed", "expert_mlp"))
+    s.param("w_down", (cfg.n_experts, e_ff, d), ("experts", "expert_mlp", "embed"))
+    if cfg.n_shared_experts:
+        sh = b.scope("shared")
+        sh_ff = e_ff * cfg.n_shared_experts
+        sh.param("w_gate", (d, sh_ff), ("embed", "mlp"))
+        sh.param("w_up", (d, sh_ff), ("embed", "mlp"))
+        sh.param("w_down", (sh_ff, d), ("mlp", "embed"))
+
+
+def _routed_tokens(
+    router, we_gate, we_up, we_down, tokens: jax.Array, cfg: ModelConfig
+) -> jax.Array:
+    """Route + dispatch + expert-compute + combine for tokens [T, D]."""
+    n_tok, d = tokens.shape
+    dt = tokens.dtype
+    e, k = cfg.n_experts, cfg.top_k
+    cap = moe_capacity(cfg, n_tok)
+
+    # --- routing ----------------------------------------------------------
+    logits = tokens.astype(jnp.float32) @ router.astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)  # [T, E]
+    top_w, top_e = jax.lax.top_k(gates, k)  # [T, k]
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # --- capacity assignment ------------------------------------------------
+    # position of each (token, k) within its expert's queue
+    onehot = jax.nn.one_hot(top_e, e, dtype=jnp.int32)  # [T, k, E]
+    flat = onehot.reshape(n_tok * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=0) - flat).reshape(n_tok, k, e)
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1)  # [T, k]
+    keep = pos < cap
+    top_w = jnp.where(keep, top_w, 0.0)
+
+    # --- dispatch: scatter tokens into [E, cap, D] --------------------------
+    eid = jnp.where(keep, top_e, e)  # drop -> OOB expert
+    slot = jnp.where(keep, pos, 0)
+    dispatched = jnp.zeros((e + 1, cap, d), dt)
+    tok_rep = jnp.broadcast_to(tokens[:, None, :], (n_tok, k, d))
+    dispatched = dispatched.at[eid.reshape(-1), slot.reshape(-1)].set(
+        tok_rep.reshape(-1, d), mode="drop"
+    )
+    dispatched = dispatched[:e]  # [E, cap, D] ("experts" axis shardable)
+    dispatched = constrain(dispatched, ("act_experts", None, None))
+
+    # --- expert computation ---------------------------------------------------
+    act = act_fn(cfg.act)
+    gate = act(jnp.einsum("ecd,edf->ecf", dispatched, we_gate))
+    up = jnp.einsum("ecd,edf->ecf", dispatched, we_up)
+    expert_out = jnp.einsum("ecf,efd->ecd", gate * up, we_down)
+
+    # --- combine: gather back and weight -------------------------------------
+    gathered = expert_out[jnp.clip(eid, 0, e - 1).reshape(-1), slot.reshape(-1)]
+    gathered = gathered.reshape(n_tok, k, d)
+    return jnp.sum(gathered * top_w[..., None].astype(dt), axis=1)
+
+
+def moe_layer(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: [B, S, D] -> [B, S, D].
+
+    When the token count exceeds ``cfg.moe_route_chunk``, routing runs in
+    token chunks under a scan: the [T, k, E] dispatch intermediates (and
+    the [E, cap, D] buffers) are bounded by the chunk size instead of the
+    full sequence — the dominant memory item of MoE prefill at 32k
+    context (EXPERIMENTS §Perf fleet notes).  Expert weights are gathered
+    once, outside the chunk scan.
+    """
+    from repro.distributed.sharding import gather_weight
+
+    b, s, d = x.shape
+    dt = x.dtype
+    tokens = x.reshape(b * s, d)
+    n_tok = b * s
+    we_gate = gather_weight(
+        params["experts"]["w_gate"].astype(dt), ("act_experts", None, None)
+    )
+    we_up = gather_weight(
+        params["experts"]["w_up"].astype(dt), ("act_experts", None, None)
+    )
+    we_down = gather_weight(
+        params["experts"]["w_down"].astype(dt), ("act_experts", None, None)
+    )
+    chunk = cfg.moe_route_chunk
+    if chunk and n_tok > chunk and n_tok % chunk == 0:
+        def one(_, tc):
+            return None, _routed_tokens(
+                params["router"], we_gate, we_up, we_down, tc, cfg
+            )
+
+        _, outs = jax.lax.scan(
+            one, None, tokens.reshape(n_tok // chunk, chunk, d)
+        )
+        combined = outs.reshape(n_tok, d)
+    else:
+        combined = _routed_tokens(
+            params["router"], we_gate, we_up, we_down, tokens, cfg
+        )
+
+    # --- shared experts (deepseek) --------------------------------------------
+    if "shared" in params:
+        act = act_fn(cfg.act)
+        sp = params["shared"]
+        g = act(tokens @ sp["w_gate"].astype(dt)) * (tokens @ sp["w_up"].astype(dt))
+        combined = combined + g @ sp["w_down"].astype(dt)
+
+    return combined.reshape(b, s, d)
+
+
+def load_balance_loss(logits: jax.Array, top_e: jax.Array, n_experts: int) -> jax.Array:
+    """Switch-style auxiliary loss (exported for the training loop)."""
+    gates = jax.nn.softmax(logits, axis=-1)
+    me = jnp.mean(gates, axis=0)
+    ce = jnp.mean(
+        jax.nn.one_hot(top_e[:, 0], n_experts, dtype=jnp.float32), axis=0
+    )
+    return n_experts * jnp.sum(me * ce)

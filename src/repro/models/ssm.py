@@ -1,0 +1,205 @@
+"""Mamba2 SSD (state-space duality) mixer — pure-JAX chunked scan.
+
+Implements the SSD algorithm of Dao & Gu (2024, arXiv:2405.21060):
+within-chunk computation is a masked quadratic form (the "attention-like"
+dual), across chunks a linear state recurrence carries
+``h in [B, H, P, N]``.  The chunked structure is exactly what the Pallas
+kernel (:mod:`repro.kernels.ssd_scan`) tiles into VMEM; this module is
+its oracle and the CPU/dry-run path.
+
+Single-token decode carries (conv_state, ssm_state) and costs O(1) per
+step — the attention-free long-context story of the assigned mamba2 and
+zamba2 architectures.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, rms_norm
+
+N_GROUPS = 1  # B/C shared across heads (mamba2 default)
+
+
+def init_ssm(b, cfg: ModelConfig) -> None:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h = cfg.n_ssm_heads
+    conv_ch = di + 2 * N_GROUPS * n
+    b.param("w_in_z", (d, di), ("embed", "mlp"))
+    b.param("w_in_x", (d, di), ("embed", "mlp"))
+    b.param("w_in_b", (d, N_GROUPS * n), ("embed", None))
+    b.param("w_in_c", (d, N_GROUPS * n), ("embed", None))
+    b.param("w_in_dt", (d, h), ("embed", "heads"))
+    b.param("conv_w", (4, conv_ch), (None, "mlp"), scale=0.5)
+    b.param("conv_b", (conv_ch,), ("mlp",), init="zeros")
+    b.param("a_log", (h,), ("heads",), init="zeros")
+    b.param("dt_bias", (h,), ("heads",), init="zeros")
+    b.param("d_skip", (h,), ("heads",), init="ones")
+    b.param("norm_scale", (di,), ("mlp",), init="zeros")
+    b.param("w_out", (di, d), ("mlp", "embed"))
+
+
+def _conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width 4: x [B,S,C] -> [B,S,C]."""
+    pads = [jnp.pad(x, ((0, 0), (k, 0), (0, 0)))[:, : x.shape[1]] for k in range(4)]
+    out = sum(w[3 - k].astype(x.dtype) * pads[k] for k in range(4))
+    return out + b.astype(x.dtype)
+
+
+def ssd_chunked(
+    xh: jax.Array,  # [B, S, H, P]
+    dt: jax.Array,  # [B, S, H] (post-softplus)
+    a: jax.Array,  # [H] (negative)
+    bmat: jax.Array,  # [B, S, G, N]
+    cmat: jax.Array,  # [B, S, G, N]
+    chunk: int = 64,
+    h0: jax.Array | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y [B,S,H,P], final state [B,H,P,N])."""
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+    xc = xh.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    bc = bmat.reshape(b, nc, q, N_GROUPS, n)
+    cc = cmat.reshape(b, nc, q, N_GROUPS, n)
+
+    da = dtc * a  # [b,nc,q,h]
+    da_cs = jnp.cumsum(da, axis=2)
+    da_sum = da_cs[:, :, -1, :]  # [b,nc,h]
+
+    # ---- intra-chunk (masked quadratic dual) -----------------------------
+    diff = da_cs[:, :, :, None, :] - da_cs[:, :, None, :, :]  # [b,nc,qi,qj,h]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    l_mat = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcign,bcjgn->bcij", cc, bc)  # G=1 shared across heads
+    y_diag = jnp.einsum(
+        "bcij,bcijh,bcjh,bcjhp->bcihp", cb, l_mat, dtc, xc.astype(jnp.float32)
+    )
+
+    # ---- chunk states and inter-chunk recurrence -------------------------
+    decay_to_end = jnp.exp(da_sum[:, :, None, :] - da_cs)  # [b,nc,q,h]
+    states = jnp.einsum(
+        "bcjh,bcjh,bcjhp,bcjgn->bchpn", decay_to_end, dtc, xc.astype(jnp.float32), bc
+    )
+
+    def scan_fn(hstate, inp):
+        st, dsum = inp  # [b,h,p,n], [b,h]
+        new = hstate * jnp.exp(dsum)[:, :, None, None] + st
+        return new, hstate  # emit the state *entering* the chunk
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    h_last, h_in = jax.lax.scan(
+        scan_fn,
+        h0,
+        (states.swapaxes(0, 1), da_sum.swapaxes(0, 1)),
+    )
+    h_in = h_in.swapaxes(0, 1)  # [b,nc,h,p,n]
+
+    y_off = jnp.einsum(
+        "bcign,bchpn,bcih->bcihp", cc, h_in, jnp.exp(da_cs)
+    )
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, h_last
+
+
+def ssm_layer(
+    params: Params, x: jax.Array, cfg: ModelConfig, chunk: int = 64
+) -> jax.Array:
+    """Training/prefill forward: x [B,S,D] -> [B,S,D]."""
+    from repro.distributed.sharding import gather_weight
+
+    dt_ = x.dtype
+    b, s, d = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    p = cfg.ssm_head_dim
+    z = x @ gather_weight(params["w_in_z"].astype(dt_), (None, "act_mlp"))
+    xbc = jnp.concatenate(
+        [
+            x @ gather_weight(params["w_in_x"].astype(dt_), (None, "act_mlp")),
+            x @ gather_weight(params["w_in_b"].astype(dt_), (None, None)),
+            x @ gather_weight(params["w_in_c"].astype(dt_), (None, None)),
+        ],
+        axis=-1,
+    )
+    xbc = jax.nn.silu(_conv1d(xbc, params["conv_w"], params["conv_b"]))
+    xs = xbc[..., :di].reshape(b, s, h, p)
+    bmat = xbc[..., di : di + N_GROUPS * n].reshape(b, s, N_GROUPS, n)
+    cmat = xbc[..., di + N_GROUPS * n :].reshape(b, s, N_GROUPS, n)
+    dt = jax.nn.softplus(
+        (x @ params["w_in_dt"].astype(dt_)).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32)
+    )
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    y, _ = ssd_chunked(xs, dt, a, bmat.astype(jnp.float32), cmat.astype(jnp.float32), chunk)
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * xs.astype(
+        jnp.float32
+    )
+    y = y.reshape(b, s, di).astype(dt_)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_scale"], cfg.norm_eps)
+    return y @ gather_weight(params["w_out"].astype(dt_), ("act_mlp", None))
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array  # [B, 3, conv_channels] last inputs
+    state: jax.Array  # [B, H, P, N]
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    conv_ch = cfg.d_inner + 2 * N_GROUPS * cfg.ssm_state
+    return SSMCache(
+        conv=jnp.zeros((batch, 3, conv_ch), dtype),
+        state=jnp.zeros(
+            (batch, cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        ),
+    )
+
+
+def ssm_decode(
+    params: Params, x: jax.Array, cache: SSMCache, cfg: ModelConfig
+) -> Tuple[jax.Array, SSMCache]:
+    """One-token decode: x [B,1,D]; O(1) state update."""
+    dt_ = x.dtype
+    b = x.shape[0]
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    z = x @ params["w_in_z"].astype(dt_)
+    xbc_new = jnp.concatenate(
+        [
+            x @ params["w_in_x"].astype(dt_),
+            x @ params["w_in_b"].astype(dt_),
+            x @ params["w_in_c"].astype(dt_),
+        ],
+        axis=-1,
+    )[:, 0]
+    window = jnp.concatenate([cache.conv, xbc_new[:, None]], axis=1)  # [B,4,C]
+    conv_out = (
+        jnp.einsum("bkc,kc->bc", window, params["conv_w"].astype(dt_))
+        + params["conv_b"].astype(dt_)
+    )
+    xbc = jax.nn.silu(conv_out)
+    xs = xbc[..., :di].reshape(b, h, p).astype(jnp.float32)
+    bmat = xbc[..., di : di + n].astype(jnp.float32)  # G=1
+    cmat = xbc[..., di + n :].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        (x[:, 0] @ params["w_in_dt"].astype(dt_)).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32)
+    )  # [B,H]
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a)  # [B,H]
+    state = cache.state * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xs, bmat
+    )
+    y = jnp.einsum("bn,bhpn->bhp", cmat, state)
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xs
+    y = y.reshape(b, 1, di).astype(dt_)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_scale"], cfg.norm_eps)
+    out = y @ params["w_out"].astype(dt_)
+    return out, SSMCache(conv=window[:, 1:], state=state)

@@ -1,0 +1,3 @@
+from repro.roofline.analysis import TPU_V5E, Roofline, analyze_compiled
+
+__all__ = ["TPU_V5E", "Roofline", "analyze_compiled"]

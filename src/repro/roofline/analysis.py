@@ -1,0 +1,155 @@
+"""Roofline terms from a compiled dry-run artifact (no hardware needed).
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs          / peak_FLOP/s          (per chip)
+    memory     = HLO_bytes_accessed / HBM_bandwidth        (per chip)
+    collective = collective operand bytes / ICI link bandwidth (per chip)
+
+``compiled.cost_analysis()`` operates on the *partitioned per-device*
+module (verified empirically in tests/test_dryrun.py), so its FLOPs and
+bytes are already per-chip — no division by chip count.  Collective bytes
+come from the loop-aware HLO parse
+(:func:`repro.distributed.hlo.collective_bytes_loop_aware`).
+
+Also reported: MODEL_FLOPS (6·N_active·tokens for training,
+2·N_active·tokens for inference) and the usefulness ratio
+MODEL_FLOPS / (HLO_FLOPs × chips), which exposes remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+from repro.distributed.hlo import collective_bytes_loop_aware
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float  # FLOP/s per chip (bf16)
+    hbm_bw: float  # bytes/s per chip
+    ici_bw: float  # bytes/s per link
+
+
+TPU_V5E = Hardware(name="tpu_v5e", peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9)
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    collective_breakdown: Dict[str, int]
+    model_flops: float
+    useful_ratio: float  # MODEL_FLOPS / (HLO_FLOPs * chips)
+    dominant: str
+    step_time_lower_bound_s: float
+    roofline_fraction: float  # max-term time vs pure-compute ideal
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def model_flops_for(cfg: ModelConfig, kind: str, batch: int, seq: int) -> float:
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        return 6.0 * n_active * batch * seq
+    if kind == "prefill":
+        return 2.0 * n_active * batch * seq
+    # decode: one token per sequence
+    return 2.0 * n_active * batch
+
+
+def model_bytes_for(cfg: ModelConfig, kind: str, batch: int, seq: int) -> float:
+    """Unavoidable HBM traffic for one step (bf16), across all chips.
+
+    Training/prefill: read the (active) weights once per microbatch pass
+    — we charge the single-read floor.  Decode additionally reads the
+    whole KV cache (or SSM states) once per token: the intrinsic
+    memory-bound floor that makes a pure-compute ideal meaningless for
+    decode shapes.
+    """
+    wb = 2.0 * cfg.active_param_count()
+    if kind != "decode":
+        return wb
+    if cfg.family == "ssm":
+        state = cfg.n_layers * cfg.n_ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4
+        return wb + batch * state
+    kv_layers = cfg.n_layers
+    window_layers = 0
+    if cfg.family == "local_global":
+        units = cfg.n_layers // (cfg.local_ratio + 1)
+        kv_layers = units
+        window_layers = units * cfg.local_ratio
+    if cfg.family == "hybrid":
+        kv_layers = cfg.n_layers // max(cfg.attn_every, 1)
+    kv = kv_layers * seq * cfg.n_kv_heads * cfg.hd * 2 * 2
+    kv += window_layers * min(seq, cfg.window) * cfg.n_kv_heads * cfg.hd * 2 * 2
+    if cfg.family == "hybrid":
+        kv += cfg.n_layers * cfg.n_ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4
+    return wb + batch * kv
+
+
+def analyze_compiled(
+    cost: Dict[str, float],
+    hlo_text: str,
+    n_chips: int,
+    cfg: ModelConfig,
+    kind: str,
+    batch: int,
+    seq: int,
+    hw: Hardware = TPU_V5E,
+) -> Roofline:
+    from repro.distributed.hlo import loop_aware_costs
+
+    la = loop_aware_costs(hlo_text)
+    # Loop-aware parsed numbers (HloCostAnalysis counts loop bodies once,
+    # so `cost` underestimates scanned models), with TPU-native dtype and
+    # layout accounting (see distributed/hlo.py) — the CPU-host numbers
+    # are kept alongside in the dry-run JSON for reference.
+    flops = max(float(la["flops"]), float(cost.get("flops", 0.0)))
+    bytes_accessed = float(la["bytes"])
+    coll_total = int(la["collective_bytes"])
+    per_kind = {k: int(v) for k, v in la["collective_breakdown"].items()}
+
+    compute_s = flops / hw.peak_flops
+    memory_s = bytes_accessed / hw.hbm_bw
+    collective_s = coll_total / hw.ici_bw
+
+    mf = model_flops_for(cfg, kind, batch, seq)
+    useful = mf / max(flops * n_chips, 1.0)
+    terms = {
+        "compute": compute_s,
+        "memory": memory_s,
+        "collective": collective_s,
+    }
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    # ideal: useful FLOPs at peak, or the intrinsic HBM floor (weights +
+    # KV/state reads), whichever binds — spread over all chips.
+    mb = model_bytes_for(cfg, kind, batch, seq)
+    ideal = max(
+        mf / (n_chips * hw.peak_flops),
+        mb / (n_chips * hw.hbm_bw),
+    )
+    fraction = min(1.0, ideal / bound) if bound > 0 else 0.0
+    return Roofline(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        hlo_flops_per_chip=flops,
+        hlo_bytes_per_chip=bytes_accessed,
+        collective_bytes_per_chip=float(coll_total),
+        collective_breakdown=per_kind,
+        model_flops=mf,
+        useful_ratio=useful,
+        dominant=dominant,
+        step_time_lower_bound_s=bound,
+        roofline_fraction=fraction,
+    )

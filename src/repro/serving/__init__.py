@@ -1,0 +1,8 @@
+# Serving runtime: COW-paged KV cache (the paper's platform applied to
+# inference), batched decode engine, and population-based SMC decoding.
+
+from repro.serving.kv_cache import KVCacheConfig, PagedKVCache
+from repro.serving.engine import ServeEngine
+from repro.serving.smc_decode import SMCDecoder
+
+__all__ = ["KVCacheConfig", "PagedKVCache", "ServeEngine", "SMCDecoder"]

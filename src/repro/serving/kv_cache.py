@@ -1,0 +1,162 @@
+"""Paged, copy-on-write KV cache on the lazy-copy block pool.
+
+This is the paper's platform applied to serving: sequences are the
+particles, tokens are the generations, and the KV cache is the payload.
+
+  * a **block** holds ``block_size`` token positions across *all* layers
+    (pool payload ``[L, 2, bs, KVH, hd]``), so one refcount governs one
+    page of context;
+  * ``fork`` (the resampling clone of population-based decoding, or the
+    n-best fan-out of parallel sampling) is a table gather + refcount
+    delta — **O(1) data movement** per sequence, Algorithm 3;
+  * appending a token *ensures a writable tail block first*: fresh block
+    at page boundaries, COW copy if the tail is shared
+    (``refcount > 1`` — Algorithm 5 with the single-reference
+    optimization), in-place otherwise; every layer then writes its K/V
+    slice into the resolved block;
+  * memory = live blocks: ``O(D·T + D·N·log N + D·N·B)`` for N particles
+    of length T (Jacob et al. bound + one tail block per particle),
+    vs ``O(D·N·T)`` for per-sequence dense caches.
+
+Everything is functional and jittable (fixed shapes, masked ops).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pool as pool_lib
+from repro.core.pool import NULL_BLOCK, BlockPool
+
+__all__ = ["KVCacheConfig", "PagedKVCache", "create", "fork", "ensure_writable",
+           "write_kv", "advance", "layer_views", "used_blocks", "free"]
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCacheConfig:
+    n_layers: int
+    n_kv_heads: int
+    head_dim: int
+    block_size: int = 16
+    max_seqs: int = 8
+    max_blocks_per_seq: int = 64
+    num_blocks: int = 0  # 0 = auto (sparse-bound sized)
+    dtype: str = "float32"
+
+    @property
+    def pool_blocks(self) -> int:
+        if self.num_blocks:
+            return self.num_blocks
+        import math
+
+        n, t = self.max_seqs, self.max_blocks_per_seq
+        bound = t + int(4 * n * max(1.0, math.log(max(n, 2)))) + 2 * n
+        return min(n * t, max(bound, 16))
+
+
+class PagedKVCache(NamedTuple):
+    pool: BlockPool  # data [num_blocks, L, 2, bs, KVH, hd]
+    tables: jax.Array  # [max_seqs, max_blocks_per_seq] int32
+    lengths: jax.Array  # [max_seqs] int32
+
+
+def create(cfg: KVCacheConfig) -> PagedKVCache:
+    pool = pool_lib.init(
+        cfg.pool_blocks,
+        (cfg.n_layers, 2, cfg.block_size, cfg.n_kv_heads, cfg.head_dim),
+        jnp.dtype(cfg.dtype),
+    )
+    return PagedKVCache(
+        pool=pool,
+        tables=jnp.full(
+            (cfg.max_seqs, cfg.max_blocks_per_seq), NULL_BLOCK, jnp.int32
+        ),
+        lengths=jnp.zeros((cfg.max_seqs,), jnp.int32),
+    )
+
+
+def fork(cache: PagedKVCache, ancestors: jax.Array) -> PagedKVCache:
+    """Lazy deep copy of sequences (resampling): bookkeeping only."""
+    new_tables = cache.tables[ancestors]
+    pool = pool_lib.add_refs(cache.pool, new_tables)
+    pool = pool_lib.sub_refs(pool, cache.tables)
+    return PagedKVCache(
+        pool=pool, tables=new_tables, lengths=cache.lengths[ancestors]
+    )
+
+
+def ensure_writable(
+    cfg: KVCacheConfig, cache: PagedKVCache, mask: jax.Array
+) -> Tuple[PagedKVCache, jax.Array, jax.Array]:
+    """Resolve a writable tail block per active sequence (the GET).
+
+    Returns (cache, block_ids [S], pos_in_block [S]); block_ids are valid
+    where ``mask``; COW copies happen here, once per token for all
+    layers.
+    """
+    n = cfg.max_seqs
+    rows = jnp.arange(n, dtype=jnp.int32)
+    bs = cfg.block_size
+    idx = cache.lengths // bs
+    pos = cache.lengths % bs
+    cur = cache.tables[rows, idx]
+    fresh = (cur == NULL_BLOCK) & mask
+    shared = cache.pool.refcount[jnp.where(cur >= 0, cur, 0)] > 1
+    need_copy = (~fresh) & shared & mask
+    need_block = fresh | need_copy
+
+    pool, new_bid = pool_lib.alloc(cache.pool, n, commit=need_block)
+    src = jnp.where(need_copy, cur, 0)
+    pool = pool_lib.write_blocks(pool, new_bid, pool.data[src], mask=need_copy)
+    pool = pool_lib.sub_refs(pool, jnp.where(need_copy, cur, NULL_BLOCK))
+    bid = jnp.where(need_block, new_bid, cur)
+    tables = cache.tables.at[rows, idx].set(
+        jnp.where(mask, bid, cache.tables[rows, idx])
+    )
+    return PagedKVCache(pool=pool, tables=tables, lengths=cache.lengths), bid, pos
+
+
+def write_kv(
+    cfg: KVCacheConfig,
+    cache: PagedKVCache,
+    bid: jax.Array,  # [S] from ensure_writable
+    pos: jax.Array,  # [S]
+    layer,
+    k: jax.Array,  # [S, KVH, hd]
+    v: jax.Array,
+    mask: jax.Array,
+) -> PagedKVCache:
+    sid = jnp.where(mask & (bid >= 0), bid, cache.pool.num_blocks)
+    data = cache.pool.data.at[sid, layer, 0, pos].set(
+        k.astype(cache.pool.data.dtype), mode="drop"
+    )
+    data = data.at[sid, layer, 1, pos].set(
+        v.astype(cache.pool.data.dtype), mode="drop"
+    )
+    return cache._replace(pool=cache.pool._replace(data=data))
+
+
+def advance(cache: PagedKVCache, mask: jax.Array) -> PagedKVCache:
+    return cache._replace(lengths=cache.lengths + jnp.where(mask, 1, 0))
+
+
+def layer_views(cache: PagedKVCache, layer) -> Tuple[jax.Array, jax.Array]:
+    """(k_pool, v_pool) as [num_blocks, bs, KVH, hd] for paged attention."""
+    return cache.pool.data[:, layer, 0], cache.pool.data[:, layer, 1]
+
+
+def used_blocks(cache: PagedKVCache) -> jax.Array:
+    return pool_lib.blocks_in_use(cache.pool)
+
+
+def free(cache: PagedKVCache, mask: jax.Array) -> PagedKVCache:
+    """Release sequences (refcount GC reclaims unshared blocks)."""
+    drop = jnp.where(mask[:, None], cache.tables, NULL_BLOCK)
+    pool = pool_lib.sub_refs(cache.pool, drop)
+    tables = jnp.where(mask[:, None], NULL_BLOCK, cache.tables)
+    lengths = jnp.where(mask, 0, cache.lengths)
+    return PagedKVCache(pool=pool, tables=tables, lengths=lengths)

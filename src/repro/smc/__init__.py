@@ -1,0 +1,23 @@
+# Population-based inference substrate: resampling schemes, particle
+# filters (bootstrap / auxiliary / alive), and particle Gibbs — the
+# methods whose memory pattern motivates the paper's platform.
+
+from repro.smc.resampling import (
+    ess,
+    resample_multinomial,
+    resample_residual,
+    resample_stratified,
+    resample_systematic,
+)
+from repro.smc.filters import FilterConfig, ParticleFilter, SSMDef
+
+__all__ = [
+    "ess",
+    "resample_multinomial",
+    "resample_residual",
+    "resample_stratified",
+    "resample_systematic",
+    "FilterConfig",
+    "ParticleFilter",
+    "SSMDef",
+]

@@ -1,0 +1,259 @@
+"""Particle filters over the lazy-copy particle store.
+
+The filter is the paper's motivating program: N particles, T generations,
+cloned at every resampling step.  Trajectory records live in a
+:class:`repro.core.store.ParticleStore`, so the storage strategy
+(EAGER / LAZY / LAZY_SR) is a config switch and the filter code is
+identical across them — which is precisely the platform's promise:
+"copy-on-write for the imperative programmer".
+
+Supports bootstrap and auxiliary (lookahead) filters, adaptive
+resampling, an alive-filter rejection loop (bounded retries), and a
+simulation task (no observations → no resampling → no copies; paper
+Section 4's overhead-isolation task).  The full loop is one ``lax.scan``
+and is jittable end to end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import store as store_lib
+from repro.core.config import CopyMode
+from repro.core.store import ParticleStore, StoreConfig
+from repro.smc import resampling
+
+__all__ = ["SSMDef", "FilterConfig", "FilterResult", "ParticleFilter"]
+
+
+class SSMDef(NamedTuple):
+    """A vectorized state-space program.
+
+    All callables operate on the whole population at once (leading dim N).
+
+    Attributes:
+      init: ``(key, n, params) -> state`` — sample ``x_0^{1:N}``.
+      step: ``(key, state, t, obs, params) -> (state, logw, record)`` —
+        propagate ``x_t ~ p(x_t | x_{t-1})`` and weight
+        ``w_t = p(y_t | x_t)``; ``record: [N, *record_shape]`` is what the
+        store appends for the trajectory.
+      record_shape: shape of one trajectory item.
+      clone_state: optional ``(state, ancestors) -> state`` override for
+        models whose state embeds its own ParticleStore (e.g. PCFG
+        stacks); default gathers every array leaf.
+      lookahead: optional ``(state, t, obs, params) -> logmu`` for the
+        auxiliary particle filter's pre-weights (Pitt & Shephard 1999).
+      alive: ``(logw) -> dead_mask`` predicate for the alive filter
+        (Del Moral et al. 2015); None disables the rejection loop.
+    """
+
+    init: Callable[..., Any]
+    step: Callable[..., Tuple[Any, jax.Array, jax.Array]]
+    record_shape: Tuple[int, ...]
+    clone_state: Optional[Callable[[Any, jax.Array], Any]] = None
+    lookahead: Optional[Callable[..., jax.Array]] = None
+    alive: Optional[Callable[[jax.Array], jax.Array]] = None
+    # For conditional SMC (particle Gibbs): pin particle 0 to a reference
+    # record — ``(state, ref_record_t) -> state``.
+    set_reference: Optional[Callable[[Any, jax.Array], Any]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class FilterConfig:
+    n_particles: int
+    n_steps: int
+    mode: CopyMode = CopyMode.LAZY_SR
+    resampler: str = "systematic"
+    ess_threshold: float = 0.5  # resample when ESS < threshold * N
+    always_resample: bool = True  # the paper's motivating pattern
+    block_size: int = 4  # store COW granularity (items per block)
+    pool_blocks: int = 0  # 0 = auto
+    max_retries: int = 0  # alive-filter retries (0 = plain PF)
+    dtype: str = "float32"
+
+    def store_config(self, record_shape: Tuple[int, ...]) -> StoreConfig:
+        max_blocks = -(-self.n_steps // self.block_size)
+        return StoreConfig(
+            mode=self.mode,
+            n=self.n_particles,
+            block_size=self.block_size,
+            max_blocks=max_blocks,
+            item_shape=record_shape,
+            dtype=self.dtype,
+            num_blocks=self.pool_blocks,
+        )
+
+
+class FilterResult(NamedTuple):
+    store: ParticleStore
+    state: Any
+    log_weights: jax.Array  # [N], normalized
+    log_evidence: jax.Array  # scalar estimate of log p(y_{1:T})
+    ess_trace: jax.Array  # [T]
+    resampled: jax.Array  # [T] bool
+    used_blocks_trace: jax.Array  # [T] memory over time (Figure 7)
+
+
+def _default_clone(state: Any, ancestors: jax.Array) -> Any:
+    return jax.tree.map(lambda x: x[ancestors], state)
+
+
+class ParticleFilter:
+    """Bootstrap / auxiliary / alive particle filter over the COW store."""
+
+    def __init__(self, ssm: SSMDef, config: FilterConfig):
+        self.ssm = ssm
+        self.config = config
+        self.store_cfg = config.store_config(ssm.record_shape)
+        self._resample = resampling.RESAMPLERS[config.resampler]
+
+    # -- public API ---------------------------------------------------------
+
+    def run(self, key: jax.Array, params: Any, observations: jax.Array) -> FilterResult:
+        """Inference task: filter against observations ``[T, ...]``."""
+        return self._run(key, params, observations, simulate=False)
+
+    def simulate(self, key: jax.Array, params: Any, dummy_obs: jax.Array) -> FilterResult:
+        """Simulation task: run the model forward with no conditioning.
+
+        No resampling occurs, hence no copies — the paper's second task,
+        isolating the overhead of lazy-pointer bookkeeping.
+        """
+        return self._run(key, params, dummy_obs, simulate=True)
+
+    def jitted(self, simulate: bool = False):
+        fn = self.simulate if simulate else self.run
+        return jax.jit(fn)
+
+    # -- internals ----------------------------------------------------------
+
+    def _run(
+        self, key: jax.Array, params: Any, observations: jax.Array, simulate: bool
+    ) -> FilterResult:
+        cfg, ssm, scfg = self.config, self.ssm, self.store_cfg
+        n = cfg.n_particles
+        clone_state = ssm.clone_state or _default_clone
+
+        key, init_key = jax.random.split(key)
+        state0 = ssm.init(init_key, n, params)
+        store0 = store_lib.create(scfg)
+        logw0 = jnp.full((n,), -math.log(n))
+        logz0 = jnp.zeros(())
+
+        def maybe_resample(key, t, state, store, logw):
+            if simulate:
+                return state, store, logw, jnp.zeros((), jnp.bool_)
+            if cfg.always_resample:
+                do = t > 0
+            else:
+                do = (t > 0) & resampling.should_resample(logw, cfg.ess_threshold)
+
+            def yes(operand):
+                key, state, store, logw = operand
+                lw = logw
+                if ssm.lookahead is not None:
+                    obs_t = jax.tree.map(lambda o: o[t], observations)
+                    lw = resampling.normalize(
+                        logw + ssm.lookahead(state, t, obs_t, params)
+                    )
+                ancestors = self._resample(key, lw)
+                state = clone_state(state, ancestors)
+                store = store_lib.clone(scfg, store, ancestors)
+                # APF correction: carried weight becomes w/mu of ancestor.
+                new_logw = jnp.full((n,), -math.log(n))
+                if ssm.lookahead is not None:
+                    new_logw = resampling.normalize(
+                        logw[ancestors] - lw[ancestors]
+                    )
+                return state, store, new_logw
+
+            def no(operand):
+                _, state, store, logw = operand
+                return state, store, logw
+
+            state, store, logw = jax.lax.cond(
+                do, yes, no, (key, state, store, logw)
+            )
+            return state, store, logw, do
+
+        def propagate(key, state, t, logw):
+            obs_t = jax.tree.map(lambda o: o[t], observations)
+            state, dlogw, record = ssm.step(key, state, t, obs_t, params)
+            if simulate:
+                dlogw = jnp.zeros_like(dlogw)
+            return state, dlogw, record
+
+        def alive_loop(key, state, t, logw, dlogw, record, prev_state):
+            """Bounded rejection loop for the alive particle filter:
+            dead particles redraw an ancestor among the living and
+            re-propagate, up to ``max_retries`` rounds."""
+            if ssm.alive is None or cfg.max_retries == 0 or simulate:
+                return state, dlogw, record
+
+            def body(carry):
+                i, key, state, dlogw, record = carry
+                key, k1, k2 = jax.random.split(key, 3)
+                dead = ssm.alive(dlogw)
+                alive_w = jnp.where(dead, -jnp.inf, logw)
+                # Redraw ancestors for dead particles among the living.
+                anc = resampling.resample_multinomial(k1, alive_w)
+                anc = jnp.where(dead, anc, jnp.arange(cfg.n_particles))
+                re_state = clone_state(prev_state, anc)
+                new_state, new_dlogw, new_record = propagate(k2, re_state, t, logw)
+                pick = lambda a, b: jnp.where(
+                    dead.reshape((-1,) + (1,) * (a.ndim - 1)), a, b
+                )
+                state = jax.tree.map(pick, new_state, state)
+                dlogw = jnp.where(dead, new_dlogw, dlogw)
+                record = pick(new_record, record)
+                return i + 1, key, state, dlogw, record
+
+            def cond(carry):
+                i, _, _, dlogw, _ = carry
+                return (i < cfg.max_retries) & jnp.any(ssm.alive(dlogw))
+
+            _, _, state, dlogw, record = jax.lax.while_loop(
+                cond, body, (0, key, state, dlogw, record)
+            )
+            return state, dlogw, record
+
+        def scan_step(carry, t):
+            key, state, store, logw, logz = carry
+            key, k_res, k_prop, k_alive = jax.random.split(key, 4)
+            state, store, logw, did = maybe_resample(k_res, t, state, store, logw)
+            prev_state = state
+            state, dlogw, record = propagate(k_prop, state, t, logw)
+            state, dlogw, record = alive_loop(
+                k_alive, state, t, logw, dlogw, record, prev_state
+            )
+            lw = logw + dlogw
+            logz = logz + jax.scipy.special.logsumexp(lw)
+            logw = resampling.normalize(lw)
+            store = store_lib.append(scfg, store, record)
+            out = (
+                resampling.ess(logw),
+                did,
+                store_lib.used_blocks(scfg, store),
+            )
+            return (key, state, store, logw, logz), out
+
+        carry, (ess_trace, resampled, used_trace) = jax.lax.scan(
+            scan_step,
+            (key, state0, store0, logw0, logz0),
+            jnp.arange(cfg.n_steps),
+        )
+        _, state, store, logw, logz = carry
+        return FilterResult(
+            store=store,
+            state=state,
+            log_weights=logw,
+            log_evidence=logz,
+            ess_trace=ess_trace,
+            resampled=resampled,
+            used_blocks_trace=used_trace,
+        )

@@ -1,0 +1,144 @@
+"""MOT: multi-object tracking with an unknown number of objects and
+linear-Gaussian dynamics (paper Section 4, Murray & Schön 2018 model).
+
+Each particle carries a *ragged* set of objects (fixed maximum K with an
+existence mask — the fixed-shape encoding of the paper's "ragged arrays"):
+per object a 4-dim state [x, y, vx, vy].  Dynamics: constant velocity +
+noise, survival probability, Poisson-thinned births into free slots.
+Observations: up to M detections (objects detected with prob pd +
+clutter).  Weighting uses a greedy nearest-neighbour association
+likelihood with clutter/missed-detection terms.
+
+record = [K objects x (exists, x, y, vx, vy)]  (K*5,)
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.smc.filters import SSMDef
+
+NAME = "mot"
+METHOD = "pf"
+PAPER_N = 4096
+PAPER_T = 100
+PAPER_T_SIM = 300
+
+K = 8  # max objects per particle
+M = 8  # max detections per frame
+DT = 1.0
+Q_POS, Q_VEL = 0.05, 0.1
+R_OBS = 0.25
+P_SURVIVE = 0.95
+P_BIRTH = 0.25  # per-step probability of one birth
+P_DETECT = 0.9
+CLUTTER_RATE = 1.0
+ARENA = 20.0
+
+
+def build() -> Tuple[SSMDef, None]:
+    def init(key, n, params):
+        # start with 2 objects per particle
+        k1, k2 = jax.random.split(key)
+        pos = jax.random.uniform(k1, (n, K, 2), minval=-ARENA, maxval=ARENA)
+        vel = 0.5 * jax.random.normal(k2, (n, K, 2))
+        state = jnp.concatenate([pos, vel], axis=-1)  # [n, K, 4]
+        exists = jnp.zeros((n, K), jnp.bool_).at[:, :2].set(True)
+        return (state, exists)
+
+    def step(key, state_tuple, t, obs_t, params):
+        state, exists = state_tuple
+        n = state.shape[0]
+        ks = jax.random.split(key, 5)
+        # --- dynamics ---------------------------------------------------
+        pos = state[..., :2] + DT * state[..., 2:]
+        vel = state[..., 2:]
+        pos = pos + math.sqrt(Q_POS) * jax.random.normal(ks[0], pos.shape)
+        vel = vel + math.sqrt(Q_VEL) * jax.random.normal(ks[1], vel.shape)
+        state = jnp.concatenate([pos, vel], axis=-1)
+        # --- survival / birth (the ragged-size dynamics) ------------------
+        survive = jax.random.uniform(ks[2], (n, K)) < P_SURVIVE
+        exists = exists & survive
+        birth = jax.random.uniform(ks[3], (n,)) < P_BIRTH
+        free = ~exists
+        first_free = jnp.argmax(free, axis=1)  # [n]
+        has_free = jnp.any(free, axis=1)
+        do_birth = birth & has_free
+        new_pos = jax.random.uniform(ks[4], (n, 2), minval=-ARENA, maxval=ARENA)
+        born_state = jnp.concatenate([new_pos, jnp.zeros((n, 2))], axis=1)
+        rows = jnp.arange(n)
+        state = state.at[rows, first_free].set(
+            jnp.where(do_birth[:, None], born_state, state[rows, first_free])
+        )
+        exists = exists.at[rows, first_free].set(
+            exists[rows, first_free] | do_birth
+        )
+        # --- weight: greedy nearest-detection association -----------------
+        dets, det_mask = obs_t  # [M, 2], [M]
+        d2 = jnp.sum(
+            (pos[:, :, None, :] - dets[None, None, :, :]) ** 2, axis=-1
+        )  # [n, K, M]
+        d2 = jnp.where(det_mask[None, None, :], d2, jnp.inf)
+        best = jnp.min(d2, axis=-1)  # [n, K]
+        log_det = -0.5 * (best / R_OBS + 2 * math.log(2 * math.pi * R_OBS))
+        log_miss = math.log(1 - P_DETECT)
+        per_obj = jnp.logaddexp(
+            math.log(P_DETECT) + log_det, jnp.full_like(log_det, log_miss)
+        )
+        logw = jnp.sum(jnp.where(exists, per_obj, 0.0), axis=1)
+        # clutter normalization (constant across particles; kept for scale)
+        n_det = jnp.sum(det_mask)
+        logw = logw - CLUTTER_RATE + n_det * math.log(
+            CLUTTER_RATE / (2 * ARENA) ** 2 + 1e-9
+        ) * 0.0
+        record = jnp.concatenate(
+            [exists[..., None].astype(jnp.float32), state], axis=-1
+        ).reshape(n, K * 5)
+        return (state, exists), logw, record
+
+    return SSMDef(init=init, step=step, record_shape=(K * 5,)), None
+
+
+def gen_data(key: jax.Array, t_steps: int):
+    """Simulate detections: [T, M, 2] positions and [T, M] validity."""
+
+    def body(carry, t):
+        key, state, exists = carry
+        key, k1, k2, k3, k4, k5, k6 = jax.random.split(key, 7)
+        pos = state[..., :2] + DT * state[..., 2:]
+        pos = pos + math.sqrt(Q_POS) * jax.random.normal(k1, pos.shape)
+        vel = state[..., 2:] + math.sqrt(Q_VEL) * jax.random.normal(k2, (K, 2))
+        state = jnp.concatenate([pos, vel], axis=-1)
+        survive = jax.random.uniform(k3, (K,)) < P_SURVIVE
+        exists = exists & survive
+        birth = (jax.random.uniform(k4) < P_BIRTH) & jnp.any(~exists)
+        slot = jnp.argmax(~exists)
+        state = state.at[slot].set(
+            jnp.where(
+                birth,
+                jnp.concatenate(
+                    [jax.random.uniform(k5, (2,), minval=-ARENA, maxval=ARENA),
+                     jnp.zeros(2)]
+                ),
+                state[slot],
+            )
+        )
+        exists = exists.at[slot].set(exists[slot] | birth)
+        detected = exists & (jax.random.uniform(k6, (K,)) < P_DETECT)
+        noise = math.sqrt(R_OBS) * jax.random.normal(key, (K, 2))
+        dets = jnp.where(detected[:, None], pos + noise, 0.0)[:M]
+        mask = detected[:M]
+        return (key, state, exists), (dets, mask)
+
+    k0, k1, key = jax.random.split(key, 3)
+    pos0 = jax.random.uniform(k0, (K, 2), minval=-ARENA, maxval=ARENA)
+    state0 = jnp.concatenate([pos0, 0.5 * jax.random.normal(k1, (K, 2))], axis=-1)
+    exists0 = jnp.zeros((K,), jnp.bool_).at[:2].set(True)
+    _, (dets, masks) = jax.lax.scan(
+        body, (key, state0, exists0), jnp.arange(t_steps)
+    )
+    return dets, masks

@@ -1,0 +1,190 @@
+"""PCFG: probabilistic context-free grammar with an auxiliary particle
+filter and a custom (lookahead) proposal.
+
+Each particle carries a *stack* of grammar symbols — a dynamic data
+structure of random depth, held in its own lazy-copy ParticleStore and
+mutated in place via COW ``write_at`` (push) and pointer moves (pop).
+Matching the paper's note, the model keeps only the *latest* state in
+memory (stacks), not the chain history, so lazy copies buy at most a
+constant factor here; the experiment exists precisely to measure that
+regime.
+
+Grammar (Chomsky normal form): K nonterminals, V terminals.
+  NT_k -> NT_i NT_j   with prob (1 - emit_p[k]) * binary[k, i, j]
+  NT_k -> term v      with prob emit_p[k] * emit[k, v]
+
+One filter step consumes one observed terminal: the particle pops
+symbols, expanding nonterminals (bounded unrolled expansion; deeper
+expansions are deferred to later steps by re-pushing), until a terminal
+is produced, and is weighted by the probability of emitting the observed
+terminal.  The APF lookahead is the one-step emission probability of the
+stack top.
+
+record = [emitted, depth]  (2,)
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import store as store_lib
+from repro.core.config import CopyMode
+from repro.core.store import StoreConfig
+from repro.smc.filters import SSMDef
+
+NAME = "pcfg"
+METHOD = "apf"
+PAPER_N = 16384
+PAPER_T = 3262
+PAPER_T_SIM = 2000
+
+K = 4  # nonterminals
+V = 8  # terminals
+MAX_DEPTH = 64
+MAX_EXPAND = 6  # nonterminal expansions attempted per emitted token
+START = 0
+
+
+class PCFGParams(NamedTuple):
+    emit_p: jax.Array  # [K] prob of emitting vs branching
+    emit: jax.Array  # [K, V] terminal distribution
+    left: jax.Array  # [K, K] left-child distribution
+    right: jax.Array  # [K, K] right-child distribution
+
+
+class PCFGState(NamedTuple):
+    stack: "store_lib.ParticleStore"  # stack cells live in a COW pool
+    sp: jax.Array  # [N] stack pointer (depth)
+
+
+def default_params(key: jax.Array | None = None) -> PCFGParams:
+    key = jax.random.PRNGKey(42) if key is None else key
+    k1, k2, k3 = jax.random.split(key, 3)
+    emit_p = jnp.full((K,), 0.6)
+    emit = jax.random.dirichlet(k1, jnp.ones(V), (K,))
+    left = jax.random.dirichlet(k2, jnp.ones(K), (K,))
+    right = jax.random.dirichlet(k3, jnp.ones(K), (K,))
+    return PCFGParams(emit_p, emit, left, right)
+
+
+def _stack_cfg(n: int, mode: CopyMode) -> StoreConfig:
+    return StoreConfig(
+        mode=mode,
+        n=n,
+        block_size=8,  # 8 stack cells per COW block
+        max_blocks=MAX_DEPTH // 8,
+        item_shape=(),
+        dtype="float32",
+        num_blocks=0,
+    )
+
+
+def build(mode: CopyMode = CopyMode.LAZY_SR, n_particles: int = 0) -> Tuple[SSMDef, PCFGParams]:
+    params = default_params()
+
+    def init(key, n, params):
+        scfg = _stack_cfg(n, mode)
+        stack = store_lib.create(scfg)
+        # push START on every stack
+        stack = store_lib.write_at(
+            scfg, stack, jnp.zeros((n,), jnp.int32), jnp.full((n,), float(START))
+        )
+        return PCFGState(stack=stack, sp=jnp.ones((n,), jnp.int32))
+
+    def step(key, state, t, y_t, params):
+        scfg = _stack_cfg(state.sp.shape[0], mode)
+        stack, sp = state.stack, state.sp
+        n = sp.shape[0]
+        done = jnp.zeros((n,), jnp.bool_)
+        logw = jnp.zeros((n,))
+        emitted = jnp.full((n,), -1.0)
+        keys = jax.random.split(key, MAX_EXPAND)
+        for i in range(MAX_EXPAND):
+            k_branch, k_emit, k_l, k_r = jax.random.split(keys[i], 4)
+            top_pos = jnp.maximum(sp - 1, 0)
+            top = store_lib.read_at(scfg, stack, top_pos).astype(jnp.int32)
+            top = jnp.clip(top, 0, K - 1)
+            empty = sp <= 0
+            active = (~done) & (~empty)
+            # decide emit vs branch for active particles
+            u = jax.random.uniform(k_branch, (n,))
+            do_emit = active & (u < params.emit_p[top])
+            do_branch = active & (~do_emit) & (sp < MAX_DEPTH - 1)
+            # --- emission: pop, weight against observation ---------------
+            tok = jax.random.categorical(k_emit, jnp.log(params.emit[top] + 1e-30))
+            # proposal: emit the observed token, weight by its prob
+            logw = logw + jnp.where(
+                do_emit, jnp.log(params.emit[top, y_t.astype(jnp.int32)] + 1e-30), 0.0
+            )
+            emitted = jnp.where(do_emit, y_t.astype(jnp.float32), emitted)
+            del tok
+            # --- branch: pop NT, push right then left --------------------
+            lsym = jax.random.categorical(k_l, jnp.log(params.left[top] + 1e-30))
+            rsym = jax.random.categorical(k_r, jnp.log(params.right[top] + 1e-30))
+            # pop (sp-1), write right child at sp-1, left child at sp
+            stack = store_lib.write_at(
+                scfg, stack, top_pos, rsym.astype(jnp.float32), mask=do_branch
+            )
+            stack = store_lib.write_at(
+                scfg, stack, jnp.minimum(sp, MAX_DEPTH - 1),
+                lsym.astype(jnp.float32), mask=do_branch,
+            )
+            sp = jnp.where(do_emit, sp - 1, jnp.where(do_branch, sp + 1, sp))
+            done = done | do_emit | empty
+        # particles that failed to emit within the budget die
+        logw = jnp.where(done & (emitted >= 0), logw, -jnp.inf)
+        # exhausted stacks also die (string not yet finished)
+        logw = jnp.where(sp <= 0, -jnp.inf, logw)
+        record = jnp.stack([emitted, sp.astype(jnp.float32)], axis=1)
+        return PCFGState(stack, sp), logw, record
+
+    def clone_state(state, ancestors):
+        scfg = _stack_cfg(state.sp.shape[0], mode)
+        return PCFGState(
+            stack=store_lib.clone(scfg, state.stack, ancestors),
+            sp=state.sp[ancestors],
+        )
+
+    def lookahead(state, t, y_t, params):
+        scfg = _stack_cfg(state.sp.shape[0], mode)
+        top = store_lib.read_at(
+            scfg, state.stack, jnp.maximum(state.sp - 1, 0)
+        ).astype(jnp.int32)
+        top = jnp.clip(top, 0, K - 1)
+        mu = params.emit_p[top] * params.emit[top, y_t.astype(jnp.int32)]
+        return jnp.log(mu + 1e-6)
+
+    return SSMDef(
+        init=init,
+        step=step,
+        record_shape=(2,),
+        clone_state=clone_state,
+        lookahead=lookahead,
+    ), params
+
+
+def gen_data(key: jax.Array, t_steps: int) -> jax.Array:
+    """Sample a terminal string from the grammar (host-side rollout)."""
+    import numpy as np
+
+    params = default_params()
+    emit_p = np.asarray(params.emit_p)
+    emit = np.asarray(params.emit)
+    left = np.asarray(params.left)
+    right = np.asarray(params.right)
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    out = []
+    while len(out) < t_steps:
+        stack = [START]
+        while stack and len(out) < t_steps:
+            top = stack.pop()
+            if rng.random() < emit_p[top] or len(stack) > MAX_DEPTH - 2:
+                out.append(rng.choice(V, p=emit[top]))
+            else:
+                l = rng.choice(K, p=left[top])
+                r = rng.choice(K, p=right[top])
+                stack.extend([r, l])
+    return jnp.asarray(np.asarray(out[:t_steps], np.float32))

@@ -1,0 +1,136 @@
+"""RBPF: mixed linear/nonlinear state-space model (Lindsten & Schön 2010)
+with a Rao-Blackwellized particle filter.
+
+The model couples a scalar nonlinear state ``xi`` with a linear-Gaussian
+state ``z in R^2`` that is marginalized per particle by a conditional
+Kalman filter — the "accumulators of sufficient statistics for variable
+elimination" of the paper's Section 1 (delayed sampling / automatic
+Rao-Blackwellization in Birch terms):
+
+    xi_{t+1} = 0.5 xi + 25 xi/(1+xi^2) + 8 cos(1.2 t) + c^T z_t + v,
+    z_{t+1}  = A z_t + w,
+    y_t      = 0.05 xi_t^2 + b^T z_t + e.
+
+Particle state: (xi, m, P) with z_t | xi_{0:t}, y_{1:t} ~ N(m, P).  The
+propagation of xi uses the marginal predictive (integrating z out), the
+xi-transition acts as a pseudo-observation of z (Kalman update), and the
+weight is the exact predictive likelihood p(y_t | xi_{0:t}, y_{1:t-1}).
+
+record = [xi, m0, m1, P00, P01, P11]  (6,)
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.smc.filters import SSMDef
+
+NAME = "rbpf"
+METHOD = "pf"
+PAPER_N = 2048
+PAPER_T = 500
+
+_A = jnp.array([[0.8, 0.1], [-0.1, 0.8]])
+_QZ = 0.1 * jnp.eye(2)
+_C = jnp.array([0.3, -0.2])  # xi-transition coupling to z
+_B = jnp.array([1.0, 0.5])  # observation coupling to z
+Q_XI = 0.5
+R_Y = 0.5
+
+
+class RBPFState(NamedTuple):
+    xi: jax.Array  # [N]
+    m: jax.Array  # [N, 2]
+    p: jax.Array  # [N, 2, 2]
+
+
+def _f(xi: jax.Array, t: jax.Array) -> jax.Array:
+    return 0.5 * xi + 25.0 * xi / (1.0 + xi * xi) + 8.0 * jnp.cos(1.2 * t)
+
+
+def build() -> Tuple[SSMDef, None]:
+    def init(key, n, params):
+        xi = jax.random.normal(key, (n,))
+        m = jnp.zeros((n, 2))
+        p = jnp.broadcast_to(jnp.eye(2), (n, 2, 2))
+        return RBPFState(xi, m, p)
+
+    def step(key, state, t, y_t, params):
+        xi, m, p = state
+        k_xi, _ = jax.random.split(key)
+        # --- propagate xi from its marginal predictive ------------------
+        f = _f(xi, t.astype(jnp.float32))
+        mean_xi = f + m @ _C
+        var_xi = Q_XI + jnp.einsum("i,nij,j->n", _C, p, _C)
+        xi_new = mean_xi + jnp.sqrt(var_xi) * jax.random.normal(k_xi, xi.shape)
+        # --- Kalman update of z from the xi pseudo-observation ----------
+        #   (xi_new - f) = c^T z_t + v,  v ~ N(0, Q_XI)
+        innov = xi_new - f - m @ _C
+        s = var_xi  # = c^T P c + Q_XI
+        k_gain = jnp.einsum("nij,j->ni", p, _C) / s[:, None]
+        m = m + k_gain * innov[:, None]
+        p = p - jnp.einsum("ni,nj->nij", k_gain, jnp.einsum("nij,j->ni", p, _C))
+        # --- Kalman time update -----------------------------------------
+        m = m @ _A.T
+        p = jnp.einsum("ij,njk,lk->nil", _A, p, _A) + _QZ
+        # --- weight by exact predictive likelihood of y_t ---------------
+        y_mean = 0.05 * xi_new * xi_new + m @ _B
+        y_var = R_Y + jnp.einsum("i,nij,j->n", _B, p, _B)
+        logw = -0.5 * (
+            (y_t - y_mean) ** 2 / y_var + jnp.log(2 * math.pi * y_var)
+        )
+        # --- Kalman measurement update from y_t --------------------------
+        k_gain = jnp.einsum("nij,j->ni", p, _B) / y_var[:, None]
+        m = m + k_gain * (y_t - y_mean)[:, None]
+        p = p - jnp.einsum("ni,nj->nij", k_gain, jnp.einsum("nij,j->ni", p, _B))
+        state = RBPFState(xi_new, m, p)
+        record = jnp.concatenate(
+            [
+                xi_new[:, None],
+                m,
+                p[:, 0, 0:1],
+                p[:, 0, 1:2],
+                p[:, 1, 1:2],
+            ],
+            axis=1,
+        )
+        return state, logw, record
+
+    def set_reference(state, ref_t):
+        xi = state.xi.at[0].set(ref_t[0])
+        m = state.m.at[0].set(ref_t[1:3])
+        p = state.p.at[0].set(
+            jnp.array([[ref_t[3], ref_t[4]], [ref_t[4], ref_t[5]]])
+        )
+        return RBPFState(xi, m, p)
+
+    return SSMDef(
+        init=init, step=step, record_shape=(6,), set_reference=set_reference
+    ), None
+
+
+def gen_data(key: jax.Array, t_steps: int) -> jax.Array:
+    """Simulate ground-truth observations from the model."""
+
+    def body(carry, t):
+        key, xi, z = carry
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        xi = (
+            _f(xi, t.astype(jnp.float32))
+            + z @ _C
+            + math.sqrt(Q_XI) * jax.random.normal(k1)
+        )
+        z = _A @ z + jax.random.multivariate_normal(k2, jnp.zeros(2), _QZ)
+        y = 0.05 * xi * xi + z @ _B + math.sqrt(R_Y) * jax.random.normal(k3)
+        return (key, xi, z), y
+
+    key, k0 = jax.random.split(key)
+    xi0 = jax.random.normal(k0)
+    _, ys = jax.lax.scan(
+        body, (key, xi0, jnp.zeros(2)), jnp.arange(t_steps)
+    )
+    return ys

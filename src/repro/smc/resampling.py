@@ -1,0 +1,105 @@
+"""Resampling schemes for particle methods (all jittable).
+
+Each scheme takes *normalized* log-weights ``logw: [N]`` and returns
+ancestor indices ``a: [N] int32`` — the ``a_t^n ~ C(w^{1:N})`` step of the
+bootstrap filter in the paper's Section 1.  Ancestor vectors feed
+:func:`repro.core.store.clone`, which performs the (lazy) deep copies.
+
+Provided: multinomial, systematic, stratified, residual — plus ESS and an
+adaptive-resampling predicate.  Sorted/ragged schemes are deliberately
+avoided: everything is fixed-shape for TPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "normalize",
+    "ess",
+    "should_resample",
+    "resample_multinomial",
+    "resample_systematic",
+    "resample_stratified",
+    "resample_residual",
+    "RESAMPLERS",
+]
+
+
+def normalize(logw: jax.Array) -> jax.Array:
+    """Normalize log-weights to logsumexp == 0."""
+    return logw - jax.scipy.special.logsumexp(logw)
+
+
+def ess(logw: jax.Array) -> jax.Array:
+    """Effective sample size 1 / sum(w^2) of normalized weights."""
+    w = jnp.exp(normalize(logw))
+    return 1.0 / jnp.sum(w * w)
+
+
+def should_resample(logw: jax.Array, threshold: float = 0.5) -> jax.Array:
+    """Adaptive-resampling predicate: ESS below ``threshold * N``."""
+    n = logw.shape[0]
+    return ess(logw) < threshold * n
+
+
+def resample_multinomial(key: jax.Array, logw: jax.Array) -> jax.Array:
+    n = logw.shape[0]
+    return jax.random.categorical(key, normalize(logw), shape=(n,)).astype(jnp.int32)
+
+
+def _inverse_cdf(w: jax.Array, positions: jax.Array) -> jax.Array:
+    cum = jnp.cumsum(w)
+    cum = cum / cum[-1]  # guard the tail against rounding
+    return jnp.searchsorted(cum, positions, side="left").astype(jnp.int32)
+
+
+def resample_systematic(key: jax.Array, logw: jax.Array) -> jax.Array:
+    """Systematic resampling: one uniform, stratified comb."""
+    n = logw.shape[0]
+    w = jnp.exp(normalize(logw))
+    u = jax.random.uniform(key)
+    positions = (jnp.arange(n) + u) / n
+    return _inverse_cdf(w, positions)
+
+
+def resample_stratified(key: jax.Array, logw: jax.Array) -> jax.Array:
+    """Stratified resampling: one uniform per stratum."""
+    n = logw.shape[0]
+    w = jnp.exp(normalize(logw))
+    u = jax.random.uniform(key, (n,))
+    positions = (jnp.arange(n) + u) / n
+    return _inverse_cdf(w, positions)
+
+
+def resample_residual(key: jax.Array, logw: jax.Array) -> jax.Array:
+    """Residual resampling with a multinomial remainder (fixed shapes).
+
+    ``floor(N w_i)`` deterministic copies of each ancestor, the remaining
+    slots drawn from the residual distribution.
+    """
+    n = logw.shape[0]
+    w = jnp.exp(normalize(logw))
+    counts = jnp.floor(n * w).astype(jnp.int32)
+    n_det = jnp.sum(counts)
+    # Deterministic part: slot j takes ancestor searchsorted(cumsum, j).
+    offsets = jnp.cumsum(counts)
+    slots = jnp.arange(n)
+    det = jnp.searchsorted(offsets, slots, side="right").astype(jnp.int32)
+    # Residual part for slots >= n_det.
+    resid = n * w - counts
+    resid = jnp.where(jnp.sum(resid) > 0, resid, jnp.ones_like(resid))
+    rand = jax.random.categorical(
+        key, jnp.log(resid + 1e-38), shape=(n,)
+    ).astype(jnp.int32)
+    det = jnp.clip(det, 0, n - 1)
+    return jnp.where(slots < n_det, det, rand)
+
+
+RESAMPLERS = {
+    "multinomial": resample_multinomial,
+    "systematic": resample_systematic,
+    "stratified": resample_stratified,
+    "residual": resample_residual,
+}

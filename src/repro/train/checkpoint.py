@@ -1,0 +1,156 @@
+"""Sharded checkpointing with async save and elastic restore.
+
+Design (single-process host; the multi-host generalization shards the
+leaf files by process and is a straight extension — see DESIGN.md §5):
+
+  * a checkpoint is a directory ``step_<n>/`` of one ``.npy`` per pytree
+    leaf (keyed by its tree path) + ``meta.json`` (step, leaf index,
+    extra state such as the data-pipeline cursor);
+  * writes go to ``step_<n>.tmp/`` then atomically rename — a crash
+    mid-save never corrupts the latest checkpoint;
+  * ``save_async`` snapshots leaves to host memory synchronously (cheap)
+    and writes files on a daemon thread, keeping the train loop's
+    critical path free (the "async checkpointing off the critical path"
+    lever);
+  * restore is **elastic**: files hold full (unsharded) arrays, so a
+    checkpoint written on one mesh loads onto any other mesh/device
+    count via ``jax.device_put`` with the new shardings;
+  * ``keep`` old checkpoints are retained for rollback.
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["Checkpointer"]
+
+
+def _flatten_with_paths(tree: Any) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out.append((key, leaf))
+    return out, treedef
+
+
+def _path_str(entry) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return str(entry.idx)
+    if hasattr(entry, "name"):
+        return str(entry.name)
+    return str(entry)
+
+
+class Checkpointer:
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, state: Any, extra: Optional[Dict] = None) -> Path:
+        self.wait()
+        return self._save_sync(step, self._snapshot(state), extra or {})
+
+    def save_async(self, step: int, state: Any, extra: Optional[Dict] = None) -> None:
+        """Snapshot on the caller, write on a background thread."""
+        self.wait()
+        host = self._snapshot(state)
+        self._thread = threading.Thread(
+            target=self._save_sync, args=(step, host, extra or {}), daemon=True
+        )
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _snapshot(self, state: Any) -> List[Tuple[str, np.ndarray]]:
+        leaves, _ = _flatten_with_paths(state)
+        return [(k, np.asarray(v)) for k, v in leaves]
+
+    def _save_sync(self, step: int, host_leaves, extra: Dict) -> Path:
+        final = self.dir / f"step_{step:010d}"
+        tmp = self.dir / f"step_{step:010d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        index = []
+        for i, (key, arr) in enumerate(host_leaves):
+            fname = f"leaf_{i:05d}.npy"
+            np.save(tmp / fname, arr)
+            index.append({"key": key, "file": fname, "shape": list(arr.shape),
+                          "dtype": str(arr.dtype)})
+        (tmp / "meta.json").write_text(
+            json.dumps({"step": step, "index": index, "extra": extra})
+        )
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        ckpts = sorted(self.dir.glob("step_*"))
+        ckpts = [c for c in ckpts if not c.name.endswith(".tmp")]
+        for old in ckpts[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(old)
+
+    # ------------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        ckpts = sorted(self.dir.glob("step_*"))
+        ckpts = [c for c in ckpts if not c.name.endswith(".tmp")]
+        if not ckpts:
+            return None
+        return int(ckpts[-1].name.split("_")[1])
+
+    def restore(
+        self,
+        like: Any,
+        step: Optional[int] = None,
+        shardings: Optional[Any] = None,
+    ) -> Tuple[Any, int, Dict]:
+        """Load into the structure of ``like``; reshard onto ``shardings``
+        (a matching pytree of NamedSharding) if given — this is the
+        elastic path: the stored arrays are full, so any target mesh
+        works."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        path = self.dir / f"step_{step:010d}"
+        meta = json.loads((path / "meta.json").read_text())
+        leaves, treedef = _flatten_with_paths(like)
+        by_key = {e["key"]: e for e in meta["index"]}
+        out_leaves = []
+        sh_leaves = (
+            jax.tree_util.tree_leaves(
+                shardings,
+                is_leaf=lambda x: isinstance(x, jax.sharding.Sharding),
+            )
+            if shardings is not None
+            else [None] * len(leaves)
+        )
+        for (key, leaf), sh in zip(leaves, sh_leaves):
+            entry = by_key.get(key)
+            if entry is None:
+                raise KeyError(f"checkpoint missing leaf {key}")
+            arr = np.load(path / entry["file"])
+            if sh is not None:
+                out_leaves.append(jax.device_put(arr, sh))
+            else:
+                out_leaves.append(jax.numpy.asarray(arr))
+        state = jax.tree_util.tree_unflatten(treedef, out_leaves)
+        return state, meta["step"], meta.get("extra", {})

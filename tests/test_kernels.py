@@ -1,0 +1,226 @@
+"""Pallas kernel validation: shape/dtype sweeps + property tests.
+
+Every kernel runs in interpret mode (the kernel body executes in Python
+on CPU) and is asserted allclose against its pure-jnp oracle in ref.py.
+Sweeps cover the shape regimes the models actually use (GQA group sizes,
+window sizes, ragged paged lengths, SSD chunk sizes) and both f32/bf16.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.cow_gather.ops import cow_gather
+from repro.kernels.cow_gather.ref import cow_gather_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.resample.ops import resample_systematic_kernel
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-5, atol=2e-5
+    )
+
+
+class TestCowGather:
+    @pytest.mark.parametrize("num_blocks,block", [(8, (16,)), (64, (8, 32)), (16, (4, 4, 8))])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+    def test_sweep(self, num_blocks, block, dtype):
+        if dtype == jnp.int32:
+            pool = jax.random.randint(KEY, (num_blocks, *block), 0, 100, dtype)
+        else:
+            pool = jax.random.normal(KEY, (num_blocks, *block), dtype)
+        table = jnp.array([0, num_blocks - 1, -1, 3], jnp.int32)
+        out = cow_gather(pool, table, interpret=True)
+        ref = cow_gather_ref(pool, table)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.integers(-1, 15), min_size=1, max_size=12))
+    def test_random_tables(self, ids):
+        pool = jax.random.normal(KEY, (16, 8))
+        table = jnp.asarray(ids, jnp.int32)
+        out = cow_gather(pool, table, interpret=True)
+        ref = cow_gather_ref(pool, table)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref))
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize(
+        "s,h,kvh,d,window,bq,bk",
+        [
+            (128, 4, 4, 64, 0, 64, 64),    # MHA
+            (128, 8, 2, 64, 0, 32, 64),    # GQA 4x
+            (256, 4, 1, 32, 0, 128, 128),  # MQA
+            (128, 4, 2, 64, 32, 32, 32),   # sliding window (gemma local)
+            (192, 6, 2, 64, 0, 64, 64),    # starcoder-like head count
+        ],
+    )
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, s, h, kvh, d, window, bq, bk, dtype):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (2, s, h, d), dtype)
+        k = jax.random.normal(ks[1], (2, s, kvh, d), dtype)
+        v = jax.random.normal(ks[2], (2, s, kvh, d), dtype)
+        out = flash_attention(
+            q, k, v, window=window, block_q=bq, block_k=bk, interpret=True
+        )
+        ref = flash_attention_ref(
+            q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2), window=window
+        ).swapaxes(1, 2)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32), **tol(dtype)
+        )
+
+    def test_block_size_invariance(self):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 128, 4, 32))
+        k = jax.random.normal(ks[1], (1, 128, 2, 32))
+        v = jax.random.normal(ks[2], (1, 128, 2, 32))
+        outs = [
+            np.asarray(
+                flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+            )
+            for bq, bk in [(32, 32), (64, 128), (128, 64)]
+        ]
+        for o in outs[1:]:
+            np.testing.assert_allclose(outs[0], o, rtol=1e-5, atol=1e-5)
+
+    def test_causality(self):
+        """Changing future tokens must not change past outputs."""
+        ks = jax.random.split(KEY, 4)
+        q = jax.random.normal(ks[0], (1, 64, 2, 32))
+        k = jax.random.normal(ks[1], (1, 64, 2, 32))
+        v = jax.random.normal(ks[2], (1, 64, 2, 32))
+        out1 = flash_attention(q, k, v, block_q=32, block_k=32, interpret=True)
+        k2 = k.at[:, 40:].set(jax.random.normal(ks[3], (1, 24, 2, 32)))
+        v2 = v.at[:, 40:].set(1.234)
+        out2 = flash_attention(q, k2, v2, block_q=32, block_k=32, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(out1[:, :40]), np.asarray(out2[:, :40]), rtol=1e-5, atol=1e-5
+        )
+
+
+class TestPagedAttention:
+    @pytest.mark.parametrize(
+        "b,h,kvh,d,bs,nb",
+        [
+            (2, 4, 4, 64, 8, 4),
+            (3, 8, 2, 64, 16, 4),
+            (1, 8, 1, 32, 8, 8),
+            (2, 16, 8, 128, 8, 2),
+        ],
+    )
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, b, h, kvh, d, bs, nb, dtype):
+        num_blocks = 4 * nb
+        ks = jax.random.split(KEY, 4)
+        q = jax.random.normal(ks[0], (b, h, d), dtype)
+        kp = jax.random.normal(ks[1], (num_blocks, bs, kvh, d), dtype)
+        vp = jax.random.normal(ks[2], (num_blocks, bs, kvh, d), dtype)
+        perm = jax.random.permutation(ks[3], num_blocks)[: b * nb]
+        tables = perm.reshape(b, nb).astype(jnp.int32)
+        lengths = jnp.asarray(
+            np.random.default_rng(0).integers(1, bs * nb + 1, b), jnp.int32
+        )
+        # NULL out table entries past each length
+        blk = np.asarray(tables).copy()
+        for i, ln in enumerate(np.asarray(lengths)):
+            blk[i, (ln + bs - 1) // bs :] = -1
+        tables = jnp.asarray(blk)
+        out = paged_attention(q, kp, vp, tables, lengths, interpret=True)
+        ref = paged_attention_ref(q, kp, vp, tables, lengths)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32), **tol(dtype)
+        )
+
+    def test_shared_blocks_cow_semantics(self):
+        """Two sequences sharing a prefix block (the paper's fork) attend
+        to identical prefix content."""
+        ks = jax.random.split(KEY, 3)
+        q = jnp.broadcast_to(jax.random.normal(ks[0], (1, 4, 32)), (2, 4, 32))
+        kp = jax.random.normal(ks[1], (8, 8, 2, 32))
+        vp = jax.random.normal(ks[2], (8, 8, 2, 32))
+        # both sequences share block 3 as prefix, then diverge (4 vs 5)
+        tables = jnp.array([[3, 4], [3, 5]], jnp.int32)
+        lengths = jnp.array([8, 8], jnp.int32)  # only the shared prefix
+        out = paged_attention(q, kp, vp, tables, lengths, interpret=True)
+        np.testing.assert_allclose(np.asarray(out[0]), np.asarray(out[1]), rtol=1e-6)
+
+
+class TestSSDScan:
+    @pytest.mark.parametrize(
+        "s,q,h,p,n",
+        [(64, 16, 2, 8, 16), (64, 64, 3, 8, 16), (128, 32, 2, 16, 32), (32, 8, 1, 4, 8)],
+    )
+    def test_sweep(self, s, q, h, p, n):
+        ks = jax.random.split(KEY, 5)
+        x = jax.random.normal(ks[0], (2, s, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (2, s, h)))
+        a = -jnp.exp(0.3 * jax.random.normal(ks[2], (h,)))
+        bm = jax.random.normal(ks[3], (2, s, n))
+        cm = jax.random.normal(ks[4], (2, s, n))
+        yk, hk = ssd_scan(x, dt, a, bm, cm, chunk=q, interpret=True)
+        yr, hr = ssd_scan_ref(x, dt, a, bm, cm, chunk=q)
+        np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(hk), np.asarray(hr), rtol=2e-4, atol=2e-4)
+
+    def test_bf16_inputs(self):
+        ks = jax.random.split(KEY, 5)
+        x = jax.random.normal(ks[0], (1, 32, 2, 8), jnp.bfloat16)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 32, 2)))
+        a = -jnp.exp(0.3 * jax.random.normal(ks[2], (2,)))
+        bm = jax.random.normal(ks[3], (1, 32, 8), jnp.bfloat16)
+        cm = jax.random.normal(ks[4], (1, 32, 8), jnp.bfloat16)
+        yk, hk = ssd_scan(x, dt, a, bm, cm, chunk=8, interpret=True)
+        yr, hr = ssd_scan_ref(
+            x.astype(jnp.float32), dt, a,
+            bm.astype(jnp.float32), cm.astype(jnp.float32), chunk=8,
+        )
+        np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), rtol=5e-2, atol=5e-2)
+
+    def test_chunk_invariance(self):
+        ks = jax.random.split(KEY, 5)
+        x = jax.random.normal(ks[0], (1, 64, 2, 8))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 64, 2)))
+        a = -jnp.exp(0.3 * jax.random.normal(ks[2], (2,)))
+        bm = jax.random.normal(ks[3], (1, 64, 16))
+        cm = jax.random.normal(ks[4], (1, 64, 16))
+        y1, h1 = ssd_scan(x, dt, a, bm, cm, chunk=16, interpret=True)
+        y2, h2 = ssd_scan(x, dt, a, bm, cm, chunk=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=2e-4, atol=2e-4)
+
+
+class TestResampleKernel:
+    @pytest.mark.parametrize("n", [128, 256, 1024])
+    def test_matches_searchsorted(self, n):
+        logw = jax.random.normal(KEY, (n,)) * 2
+        out = resample_systematic_kernel(KEY, logw, interpret=True)
+        ref = resample_systematic_kernel(KEY, logw, use_kernel=False)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_property_valid_and_monotone(self, seed):
+        key = jax.random.PRNGKey(seed)
+        logw = jax.random.normal(key, (256,)) * 3
+        anc = np.asarray(resample_systematic_kernel(key, logw, interpret=True))
+        assert anc.min() >= 0 and anc.max() < 256
+        assert np.all(np.diff(anc) >= 0)  # systematic ancestors are sorted
+
+    def test_degenerate_weight(self):
+        logw = jnp.full((128,), -jnp.inf).at[37].set(0.0)
+        anc = np.asarray(resample_systematic_kernel(KEY, logw, interpret=True))
+        assert np.all(anc == 37)

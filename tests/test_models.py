@@ -1,0 +1,212 @@
+"""Per-architecture smoke tests (reduced configs, CPU) + model invariants.
+
+For every assigned architecture:
+  * forward pass: correct shapes, no NaNs;
+  * one train step (loss + grads + AdamW update): finite, loss decreases
+    on repeated steps over a tiny batch;
+  * prefill logits == training forward logits (exact);
+  * autoregressive decode against the cache matches the training forward
+    at every position (the KV-cache/ring-buffer/SSM-state correctness
+    proof for each family).
+
+Plus SSD-specific parity (chunk-size invariance, decode==scan) and MoE
+routing invariants.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, shape_cells, smoke_config
+from repro.models import ssm as ssm_lib
+from repro.models.config import ModelConfig
+from repro.models.model import LanguageModel
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 16
+
+
+def make(arch):
+    cfg = smoke_config(arch)
+    lm = LanguageModel(cfg)
+    params, axes = lm.init(KEY)
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    img = (
+        jax.random.normal(KEY, (B, cfg.n_img_tokens, cfg.d_model), jnp.float32)
+        if cfg.family == "vlm"
+        else None
+    )
+    return cfg, lm, params, axes, tokens, img
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg, lm, params, axes, tokens, img = make(arch)
+    logits = jax.jit(lambda p, t: lm.forward(p, t, img))(params, tokens)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    # axes tree mirrors params tree
+    flat_p = jax.tree.leaves(params)
+    flat_a = jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple))
+    assert len(flat_p) == len(flat_a)
+    for p, a in zip(flat_p, flat_a):
+        assert p.ndim == len(a), (p.shape, a)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step(arch):
+    cfg, lm, params, axes, tokens, img = make(arch)
+    labels = jnp.roll(tokens, -1, axis=1).at[:, -1].set(-1)
+    opt_cfg = AdamWConfig(learning_rate=3e-3, warmup_steps=0, total_steps=100)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(params, opt):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: lm.loss(p, tokens, labels, img), has_aux=True
+        )(params)
+        params, opt, om = adamw_update(opt_cfg, params, grads, opt)
+        return params, opt, loss, om["grad_norm"]
+
+    losses = []
+    for _ in range(5):
+        params, opt, loss, gnorm = step(params, opt)
+        assert np.isfinite(float(loss)) and np.isfinite(float(gnorm))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses  # memorizes the tiny batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_and_decode_match_forward(arch):
+    cfg, lm, params, axes, tokens, img = make(arch)
+    extra = 3
+    total = S
+    prompt = S - extra
+    full = lm.forward(params, tokens, img)
+    logits_pre, cache = lm.prefill(params, tokens[:, :prompt], total, img)
+    np.testing.assert_allclose(
+        np.asarray(logits_pre), np.asarray(full[:, :prompt]), rtol=1e-4, atol=1e-4
+    )
+    step = jax.jit(lm.decode_step)
+    for i in range(extra):
+        lg, cache = step(params, tokens[:, prompt + i : prompt + i + 1], cache)
+        np.testing.assert_allclose(
+            np.asarray(lg), np.asarray(full[:, prompt + i]), rtol=1e-3, atol=2e-4,
+            err_msg=f"{arch} decode step {i}",
+        )
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_dimensions(arch):
+    """The full (dry-run) config matches the assignment exactly."""
+    cfg = get_config(arch)
+    expected = {
+        "zamba2_7b": (81, 3584, 32, 32, 14336, 32000),
+        "deepseek_moe_16b": (28, 2048, 16, 16, 1408, 102400),
+        "phi35_moe_42b": (32, 4096, 32, 8, 6400, 32064),
+        "starcoder2_3b": (30, 3072, 24, 2, 12288, 49152),
+        "gemma3_12b": (48, 3840, 16, 8, 15360, 262144),
+        "command_r_plus_104b": (64, 12288, 96, 8, 33792, 256000),
+        "qwen25_32b": (64, 5120, 40, 8, 27648, 152064),
+        "llama32_vision_90b": (100, 8192, 64, 8, 28672, 128256),
+        "musicgen_large": (48, 2048, 32, 32, 8192, 2048),
+        "mamba2_130m": (24, 768, 12, 12, 0, 50280),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.vocab_size)
+    assert got == expected, (arch, got, expected)
+
+
+def test_param_counts_close_to_names():
+    """Sanity: param_count roughly matches each model's advertised size."""
+    expect = {
+        "zamba2_7b": (7e9, 0.45),
+        "deepseek_moe_16b": (16e9, 0.35),
+        "phi35_moe_42b": (42e9, 0.35),
+        "starcoder2_3b": (3e9, 0.35),
+        "gemma3_12b": (12e9, 0.35),
+        "command_r_plus_104b": (104e9, 0.35),
+        "qwen25_32b": (32e9, 0.35),
+        "llama32_vision_90b": (90e9, 0.35),
+        "mamba2_130m": (130e6, 0.45),
+    }
+    for arch, (target, tol) in expect.items():
+        n = get_config(arch).param_count()
+        assert abs(n - target) / target < tol, (arch, n, target)
+
+
+def test_moe_active_params_smaller():
+    cfg = get_config("deepseek_moe_16b")
+    assert cfg.active_param_count() < 0.35 * cfg.param_count()
+    cfg = get_config("phi35_moe_42b")
+    # 42B total, ~6.6B active
+    assert cfg.active_param_count() < 0.25 * cfg.param_count()
+
+
+def test_shape_cells_long_context_rule():
+    subq = {a for a in ARCHS if "long_500k" in shape_cells(a)}
+    assert subq == {"zamba2_7b", "gemma3_12b", "mamba2_130m"}
+    for a in ARCHS:
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= set(shape_cells(a))
+
+
+class TestSSD:
+    def test_chunk_size_invariance(self):
+        b, s, h, p, n = 2, 32, 4, 8, 16
+        k1, k2, k3, k4, k5 = jax.random.split(KEY, 5)
+        xh = jax.random.normal(k1, (b, s, h, p))
+        dt = jax.nn.softplus(jax.random.normal(k2, (b, s, h)))
+        a = -jnp.exp(jax.random.normal(k3, (h,)) * 0.3)
+        bm = jax.random.normal(k4, (b, s, 1, n))
+        cm = jax.random.normal(k5, (b, s, 1, n))
+        y8, h8 = ssm_lib.ssd_chunked(xh, dt, a, bm, cm, chunk=8)
+        y32, h32 = ssm_lib.ssd_chunked(xh, dt, a, bm, cm, chunk=32)
+        np.testing.assert_allclose(np.asarray(y8), np.asarray(y32), rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(h8), np.asarray(h32), rtol=2e-4, atol=2e-4)
+
+    def test_matches_naive_recurrence(self):
+        b, s, h, p, n = 1, 16, 2, 4, 8
+        ks = jax.random.split(KEY, 5)
+        xh = jax.random.normal(ks[0], (b, s, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+        bm = jax.random.normal(ks[3], (b, s, 1, n))
+        cm = jax.random.normal(ks[4], (b, s, 1, n))
+        y, hl = ssm_lib.ssd_chunked(xh, dt, a, bm, cm, chunk=8)
+        # naive per-step recurrence
+        state = np.zeros((b, h, p, n))
+        ys = []
+        for t in range(s):
+            decay = np.exp(np.asarray(dt[:, t]) * np.asarray(a))  # [b,h]
+            state = state * decay[:, :, None, None] + np.einsum(
+                "bh,bhp,bn->bhpn", np.asarray(dt[:, t]), np.asarray(xh[:, t]),
+                np.asarray(bm[:, t, 0]),
+            )
+            ys.append(np.einsum("bn,bhpn->bhp", np.asarray(cm[:, t, 0]), state))
+        np.testing.assert_allclose(np.asarray(y), np.stack(ys, 1), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(hl), state, rtol=1e-4, atol=1e-4)
+
+
+class TestMoE:
+    def test_router_normalized_and_capacity(self):
+        from repro.models import moe as moe_lib
+
+        cfg = smoke_config("phi35_moe_42b")
+        lm = LanguageModel(cfg)
+        params, _ = lm.init(KEY)
+        x = jax.random.normal(KEY, (2, 8, cfg.d_model), jnp.float32)
+        blk = jax.tree.map(lambda p: p[0], params["blocks"])
+        out = moe_lib.moe_layer(blk["moe"], x, cfg)
+        assert out.shape == x.shape
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+    def test_moe_capacity_rounding(self):
+        from repro.models.moe import moe_capacity
+
+        cfg = get_config("deepseek_moe_16b")
+        cap = moe_capacity(cfg, 65536)
+        assert cap >= 65536 * cfg.top_k / cfg.n_experts
+        assert cap % 8 == 0

@@ -1,0 +1,287 @@
+"""Tests for the jittable COW block pool and particle store.
+
+Validates that the three storage strategies (EAGER dense, LAZY pooled,
+LAZY_SR pooled + single-reference optimization) are observationally
+equivalent — the array-world analogue of the paper's "output is expected
+to match regardless of the configuration" — and that the lazy modes
+realize the sparse memory bound of Jacob et al. (2015).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pool as pool_lib
+from repro.core.config import ALL_MODES, CopyMode
+from repro.core.store import (
+    StoreConfig,
+    append,
+    clone,
+    create,
+    materialize,
+    read_at,
+    read_last,
+    trajectory,
+    used_blocks,
+    write_at,
+)
+
+
+def cfg_for(mode: CopyMode, n=8, block_size=4, max_blocks=8, num_blocks=0):
+    return StoreConfig(
+        mode=mode,
+        n=n,
+        block_size=block_size,
+        max_blocks=max_blocks,
+        item_shape=(),
+        dtype="float32",
+        num_blocks=num_blocks,
+    )
+
+
+class TestPool:
+    def test_alloc_and_free(self):
+        p = pool_lib.init(8, (4,))
+        p, ids = pool_lib.alloc(p, 3)
+        assert list(np.asarray(ids)) == [0, 1, 2]
+        assert int(pool_lib.blocks_in_use(p)) == 3
+        p = pool_lib.sub_refs(p, ids)
+        assert int(pool_lib.blocks_in_use(p)) == 0
+        # freed blocks are reused
+        p, ids2 = pool_lib.alloc(p, 2)
+        assert list(np.asarray(ids2)) == [0, 1]
+
+    def test_alloc_commit_mask(self):
+        p = pool_lib.init(8, (4,))
+        p, ids = pool_lib.alloc(p, 4, commit=jnp.array([True, False, True, False]))
+        ids = np.asarray(ids)
+        assert ids[1] == -1 and ids[3] == -1
+        assert int(pool_lib.blocks_in_use(p)) == 2
+
+    def test_oom_flag_sticky(self):
+        p = pool_lib.init(2, (4,))
+        p, _ = pool_lib.alloc(p, 2)
+        assert not bool(p.oom)
+        p, ids = pool_lib.alloc(p, 1)
+        assert bool(p.oom)
+        assert int(np.asarray(ids)[0]) == -1
+        p = pool_lib.sub_refs(p, jnp.array([0, 1]))
+        p, _ = pool_lib.alloc(p, 1)
+        assert bool(p.oom)  # sticky
+
+    def test_refcount_multiplicity(self):
+        p = pool_lib.init(8, (2,))
+        p, ids = pool_lib.alloc(p, 1)
+        p = pool_lib.add_refs(p, jnp.array([0, 0, 0]))
+        assert int(p.refcount[0]) == 4
+        p = pool_lib.sub_refs(p, jnp.array([0, 0, 0, 0]))
+        assert int(pool_lib.blocks_in_use(p)) == 0
+
+    def test_null_ids_ignored(self):
+        p = pool_lib.init(4, (2,))
+        p, _ = pool_lib.alloc(p, 1)
+        before = np.asarray(p.refcount)
+        p = pool_lib.add_refs(p, jnp.array([-1, -1]))
+        p = pool_lib.sub_refs(p, jnp.array([-1]))
+        np.testing.assert_array_equal(np.asarray(p.refcount), before)
+
+
+class TestStoreBasics:
+    @pytest.mark.parametrize("mode", ALL_MODES)
+    def test_append_read_roundtrip(self, mode):
+        cfg = cfg_for(mode)
+        s = create(cfg)
+        for t in range(10):
+            s = append(cfg, s, jnp.full((cfg.n,), float(t)))
+        assert np.all(np.asarray(s.lengths) == 10)
+        for t in range(10):
+            np.testing.assert_allclose(
+                np.asarray(read_at(cfg, s, jnp.full((cfg.n,), t, jnp.int32))),
+                t,
+            )
+        np.testing.assert_allclose(np.asarray(read_last(cfg, s)), 9.0)
+
+    @pytest.mark.parametrize("mode", ALL_MODES)
+    def test_clone_then_diverge(self, mode):
+        cfg = cfg_for(mode, n=4)
+        s = create(cfg)
+        vals = jnp.arange(4, dtype=jnp.float32)
+        for t in range(6):
+            s = append(cfg, s, vals + 10 * t)
+        # everyone clones particle 0
+        s = clone(cfg, s, jnp.zeros((4,), jnp.int32))
+        traj0_before = np.asarray(trajectory(cfg, s, 0))[:6].copy()
+        # particle 1 appends different data; 0's history must not change
+        s = append(cfg, s, jnp.array([100.0, 200.0, 300.0, 400.0]))
+        np.testing.assert_allclose(
+            np.asarray(trajectory(cfg, s, 0))[:6], traj0_before
+        )
+        assert float(read_last(cfg, s)[1]) == 200.0
+        assert float(read_last(cfg, s)[0]) == 100.0
+
+    @pytest.mark.parametrize("mode", ALL_MODES)
+    def test_write_at_cow(self, mode):
+        """Mutating a mid-trajectory item must not leak into clones."""
+        cfg = cfg_for(mode, n=2)
+        s = create(cfg)
+        for t in range(8):
+            s = append(cfg, s, jnp.array([float(t), float(t)]))
+        s = clone(cfg, s, jnp.array([0, 0], jnp.int32))  # both copy particle 0
+        s = write_at(
+            cfg, s, jnp.array([2, 2], jnp.int32),
+            jnp.array([-1.0, -2.0]),
+            mask=jnp.array([True, False]),
+        )
+        tr0 = np.asarray(trajectory(cfg, s, 0))
+        tr1 = np.asarray(trajectory(cfg, s, 1))
+        assert tr0[2] == -1.0
+        assert tr1[2] == 2.0  # untouched clone keeps the original value
+
+    def test_lazy_clone_moves_no_payload(self):
+        cfg = cfg_for(CopyMode.LAZY_SR, n=8)
+        s = create(cfg)
+        for t in range(8):
+            s = append(cfg, s, jnp.arange(8, dtype=jnp.float32))
+        used_before = int(used_blocks(cfg, s))
+        s = clone(cfg, s, jnp.zeros((8,), jnp.int32))
+        # All particles share particle 0's blocks now; dead blocks freed.
+        assert int(used_blocks(cfg, s)) == 2  # 8 items / block_size 4
+        assert used_before == 8 * 2
+
+    def test_lazy_sr_appends_in_place_when_sole_owner(self):
+        cfg = cfg_for(CopyMode.LAZY_SR, n=1, block_size=8, max_blocks=4)
+        s = create(cfg)
+        s = append(cfg, s, jnp.array([1.0]))
+        s = clone(cfg, s, jnp.array([0], jnp.int32))  # self-clone, refcount stays 1
+        s = append(cfg, s, jnp.array([2.0]))
+        assert int(used_blocks(cfg, s)) == 1  # no COW copy happened
+
+    def test_lazy_without_sr_copies_frozen_block(self):
+        cfg = cfg_for(CopyMode.LAZY, n=1, block_size=8, max_blocks=4)
+        s = create(cfg)
+        s = append(cfg, s, jnp.array([1.0]))
+        s = clone(cfg, s, jnp.array([0], jnp.int32))  # freezes the block
+        s = append(cfg, s, jnp.array([2.0]))
+        # the frozen block was copied even though refcount == 1
+        tr = np.asarray(trajectory(cfg, s, 0))
+        assert tr[0] == 1.0 and tr[1] == 2.0
+        assert int(s.peak_blocks) == 2
+
+    @pytest.mark.parametrize("mode", ALL_MODES)
+    def test_materialize_matches_trajectory(self, mode):
+        cfg = cfg_for(mode, n=4)
+        s = create(cfg)
+        for t in range(5):
+            s = append(cfg, s, jnp.arange(4, dtype=jnp.float32) * (t + 1))
+        np.testing.assert_allclose(
+            np.asarray(materialize(cfg, s, 2)), np.asarray(trajectory(cfg, s, 2))
+        )
+
+    def test_jit_append_clone(self):
+        cfg = cfg_for(CopyMode.LAZY_SR)
+        s = create(cfg)
+        from repro.core.store import append_jit, clone_jit
+
+        s = append_jit(cfg, s, jnp.ones((cfg.n,)))
+        s = clone_jit(cfg, s, jnp.zeros((cfg.n,), jnp.int32))
+        s = append_jit(cfg, s, 2 * jnp.ones((cfg.n,)))
+        assert float(read_last(cfg, s)[3]) == 2.0
+
+
+# ---------------------------------------------------------------------------
+# property tests: mode equivalence on random programs
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def store_programs(draw):
+    n = draw(st.integers(2, 6))
+    steps = draw(st.integers(3, 20))
+    ops = []
+    length = 0
+    for _ in range(steps):
+        kind = draw(st.sampled_from(["append", "clone", "write_at", "append"]))
+        if kind == "append" and length < 15:
+            ops.append(("append", draw(st.integers(0, 999))))
+            length += 1
+        elif kind == "clone":
+            ops.append(
+                ("clone", tuple(draw(st.integers(0, n - 1)) for _ in range(n)))
+            )
+        elif kind == "write_at" and length > 0:
+            ops.append(
+                (
+                    "write_at",
+                    draw(st.integers(0, length - 1)),
+                    draw(st.integers(0, 999)),
+                    tuple(draw(st.booleans()) for _ in range(n)),
+                )
+            )
+    return n, ops
+
+
+@settings(max_examples=60, deadline=None)
+@given(store_programs())
+def test_store_modes_equivalent(program):
+    n, ops = program
+    outs = {}
+    for mode in ALL_MODES:
+        cfg = StoreConfig(
+            mode=mode, n=n, block_size=3, max_blocks=6, num_blocks=n * 6
+        )
+        s = create(cfg)
+        rows = jnp.arange(n, dtype=jnp.float32)
+        for op in ops:
+            if op[0] == "append":
+                s = append(cfg, s, rows * 1000 + op[1])
+            elif op[0] == "clone":
+                s = clone(cfg, s, jnp.array(op[1], jnp.int32))
+            elif op[0] == "write_at":
+                s = write_at(
+                    cfg,
+                    s,
+                    jnp.full((n,), op[1], jnp.int32),
+                    rows * 1000 + op[2],
+                    mask=jnp.array(op[3]),
+                )
+        T = int(s.lengths[0])
+        outs[mode] = np.stack(
+            [np.asarray(trajectory(cfg, s, i))[:T] for i in range(n)]
+        )
+    np.testing.assert_allclose(outs[CopyMode.EAGER], outs[CopyMode.LAZY])
+    np.testing.assert_allclose(outs[CopyMode.EAGER], outs[CopyMode.LAZY_SR])
+
+
+def test_reachable_bound():
+    """Jacob et al. (2015): reachable particles <= t + c N log N.
+
+    We run the motivating pattern (resample every generation, block_size=1
+    so blocks == items) and check the lazy store's live block count stays
+    under the bound with c = 6, while the eager store pays N·t.
+    """
+    rng = np.random.default_rng(0)
+    N, T = 64, 100
+    cfg = StoreConfig(
+        mode=CopyMode.LAZY_SR, n=N, block_size=1, max_blocks=T, num_blocks=N * T
+    )
+    s = create(cfg)
+    cfg_e = StoreConfig(mode=CopyMode.EAGER, n=N, block_size=1, max_blocks=T)
+    se = create(cfg_e)
+    bound = lambda t: t + 6 * N * math.log(N)
+    for t in range(T):
+        vals = jnp.asarray(rng.normal(size=N).astype(np.float32))
+        s = append(cfg, s, vals)
+        se = append(cfg_e, se, vals)
+        anc = jnp.asarray(rng.integers(0, N, size=N).astype(np.int32))
+        s = clone(cfg, s, anc)
+        se = clone(cfg_e, se, anc)
+        assert int(used_blocks(cfg, s)) <= bound(t + 1)
+    assert int(used_blocks(cfg_e, se)) == N * T
+    # and the sparse representation is far smaller than the dense one
+    assert int(used_blocks(cfg, s)) < 0.5 * N * T
