@@ -5,6 +5,7 @@
 #   fig7  — time/memory scaling in t
 #   tree  — Jacob et al. reachable-set bound
 #   serve — beyond-paper: COW-paged KV under SMC decoding
+#   sharded — beyond-paper: multi-device population (DESIGN.md §4)
 #
 # ``--quick`` shrinks N/T for CI-speed runs; default sizes run in
 # minutes on a CPU host.  The at-scale numbers live in the dry-run
@@ -20,7 +21,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument(
         "--only", default="",
-        help="comma list of {fig5,fig6,fig7,tree,serve,block}",
+        help="comma list of {fig5,fig6,fig7,tree,serve,block,sharded}",
     )
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
@@ -48,6 +49,24 @@ def main() -> None:
         bench_serving.run(steps=16 if args.quick else 32)
     if only is None or "block" in only:
         bench_block_size.run(n=n, t=2 * t)
+    if only is None or "sharded" in only:
+        # Subprocess: bench_sharded fakes a multi-device host via
+        # XLA_FLAGS, which must not leak into the other benchmarks'
+        # timings (same isolation idiom as the multi-device tests).
+        import pathlib
+        import subprocess
+        import sys
+
+        subprocess.run(
+            [
+                sys.executable,
+                str(pathlib.Path(__file__).resolve().parent / "bench_sharded.py"),
+                f"--n={n * 2}",
+                f"--t={t}",
+                f"--reps={2 if args.quick else 3}",
+            ],
+            check=True,
+        )
 
 
 if __name__ == "__main__":

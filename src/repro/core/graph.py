@@ -6,6 +6,11 @@ Section 3 implementation sketch of
     Murray (2020), "Lazy object copy as a platform for population-based
     probabilistic programming".
 
+It is the executable ground truth the array-world platform is checked
+against; DESIGN.md §2 gives the full correspondence between these graph
+semantics and the block-pool representation of :mod:`repro.core.pool` /
+:mod:`repro.core.store`.
+
 Memory is a labeled directed multigraph ``H``:
 
 * **vertices** are objects (:class:`Vertex`) with payload data ``b(v)``

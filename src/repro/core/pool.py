@@ -29,7 +29,10 @@ indices cannot clobber live blocks.
 
 The pool composes with ``shard_map``: each device shard owns an
 independent pool (per-shard free lists, no cross-device allocation), the
-same way the paper gives each thread its own context stack.
+same way the paper gives each thread its own context stack.  That
+composition is built in :mod:`repro.distributed.sharded_store` and
+documented in DESIGN.md §4; only trajectories whose resampling ancestor
+lives on another shard ever move between pools.
 """
 
 from __future__ import annotations
@@ -43,12 +46,14 @@ __all__ = [
     "BlockPool",
     "init",
     "alloc",
+    "alloc_compact",
     "add_refs",
     "sub_refs",
     "freeze",
     "write_blocks",
     "read_blocks",
     "blocks_in_use",
+    "blocks_free",
     "NULL_BLOCK",
 ]
 
@@ -135,6 +140,28 @@ def alloc(pool: BlockPool, n: int, commit: jax.Array | None = None) -> Tuple[Blo
     return pool._replace(refcount=refcount, frozen=frozen, oom=oom), out_ids
 
 
+def alloc_compact(
+    pool: BlockPool, n: int, commit: jax.Array
+) -> Tuple[BlockPool, jax.Array]:
+    """Like :func:`alloc`, but with rank-compacted candidate assignment.
+
+    :func:`alloc` pairs request ``i`` with the ``i``-th free block, so a
+    *sparse* commit mask can exhaust the candidate list while most of the
+    pool is still free (a committed request at position ``i`` needs at
+    least ``i + 1`` free blocks).  Here committed requests are packed by
+    their rank ``cumsum(commit) - 1`` onto the first free candidates, so
+    allocation succeeds whenever ``sum(commit)`` blocks are free — the
+    shape the sharded store's trajectory imports need, where the commit
+    mask is scattered over a ``[n_particles, max_blocks]`` grid.
+    """
+    total = jnp.sum(commit)
+    prefix = jnp.arange(n, dtype=jnp.int32) < total
+    pool, cand = alloc(pool, n, commit=prefix)
+    rank = jnp.cumsum(commit) - 1
+    picked = cand[jnp.where(commit, rank, 0)]
+    return pool, jnp.where(commit, picked, NULL_BLOCK)
+
+
 def add_refs(pool: BlockPool, ids: jax.Array, amount: jax.Array | int = 1) -> BlockPool:
     """Increment refcounts (the bookkeeping half of a lazy deep copy).
 
@@ -195,3 +222,11 @@ def read_blocks(pool: BlockPool, ids: jax.Array) -> jax.Array:
 def blocks_in_use(pool: BlockPool) -> jax.Array:
     """Number of live blocks — the memory metric of the paper's Figures 5-7."""
     return jnp.sum(pool.refcount > 0)
+
+
+def blocks_free(pool: BlockPool) -> jax.Array:
+    """Allocation headroom.  Per-shard headroom matters for the sharded
+    store (DESIGN.md §4): cross-shard imports land as fresh allocations on
+    the *importing* shard, so a skewed resampling step consumes headroom
+    there even while global occupancy is flat."""
+    return jnp.sum(pool.refcount == 0)

@@ -34,6 +34,13 @@ trajectories (its VBD experiment) is :func:`materialize`.
 
 All operations are functional, fixed-shape, and jittable; the store
 config is a hashable static argument.
+
+DESIGN.md §2 tabulates the full paper→array-world correspondence this
+module realizes; §4 describes how the store scales across devices
+(:mod:`repro.distributed.sharded_store`), for which this module supplies
+the per-shard halves of the resampling exchange: :func:`clone_partial`
+(lazy, within-shard), :func:`materialize_batch` (export) and
+:func:`import_trajectories` (import).
 """
 
 from __future__ import annotations
@@ -57,10 +64,13 @@ __all__ = [
     "append",
     "write_at",
     "clone",
+    "clone_partial",
     "read_at",
     "read_last",
     "trajectory",
     "materialize",
+    "materialize_batch",
+    "import_trajectories",
     "used_blocks",
     "used_bytes",
 ]
@@ -257,6 +267,79 @@ def clone(cfg: StoreConfig, store: ParticleStore, ancestors: jax.Array) -> Parti
     return _bump_peak(cfg, store)
 
 
+def clone_partial(
+    cfg: StoreConfig, store: ParticleStore, ancestors: jax.Array, valid: jax.Array
+) -> ParticleStore:
+    """Clone where only ``valid`` slots take a (local) ancestor.
+
+    Invalid slots come back *empty* (NULL table / zero length), pending a
+    subsequent :func:`import_trajectories`.  The old generation's
+    references are released for every slot, valid or not.  With ``valid``
+    all-true this is exactly :func:`clone`; it exists for the sharded
+    store (DESIGN.md §4), where slots whose ancestor lives on another
+    shard are filled by the cross-shard exchange instead of a refcount
+    bump.
+    """
+    lengths = jnp.where(valid, store.lengths[ancestors], 0)
+    if cfg.mode is CopyMode.EAGER:
+        dense = jnp.where(
+            _expand(valid, store.dense.ndim), store.dense[ancestors], 0
+        )
+        store = store._replace(dense=dense, lengths=lengths)
+        return _bump_peak(cfg, store)
+
+    pool = store.pool
+    new_tables = jnp.where(
+        valid[:, None], store.tables[ancestors], NULL_BLOCK
+    )
+    pool = pool_lib.add_refs(pool, new_tables)
+    pool = pool_lib.sub_refs(pool, store.tables)
+    if cfg.mode is CopyMode.LAZY:
+        pool = pool_lib.freeze(pool, new_tables)
+    store = store._replace(pool=pool, tables=new_tables, lengths=lengths)
+    return _bump_peak(cfg, store)
+
+
+def import_trajectories(
+    cfg: StoreConfig,
+    store: ParticleStore,
+    trajs: jax.Array,
+    new_lengths: jax.Array,
+    mask: jax.Array,
+) -> ParticleStore:
+    """Write dense trajectories (``trajs: [N, capacity, *item]``) into the
+    ``mask``-selected slots as fresh, exclusively-owned storage.
+
+    The receiving half of the sharded store's cross-shard exchange: the
+    imported particle gets newly allocated blocks (refcount 1) holding the
+    materialized payload — the eager finish a shard boundary forces, just
+    as a cross reference forces one in the object-graph semantics.  Masked
+    slots must already be empty (see :func:`clone_partial`).
+    """
+    if cfg.mode is CopyMode.EAGER:
+        dense = jnp.where(_expand(mask, store.dense.ndim), trajs, store.dense)
+        lengths = jnp.where(mask, new_lengths, store.lengths)
+        store = store._replace(dense=dense, lengths=lengths)
+        return _bump_peak(cfg, store)
+
+    n, mb, bs = cfg.n, cfg.max_blocks, cfg.block_size
+    n_needed = -(-jnp.maximum(new_lengths, 0) // bs)  # ceil(len / bs)
+    commit = (
+        mask[:, None] & (jnp.arange(mb, dtype=jnp.int32)[None, :] < n_needed[:, None])
+    ).reshape(-1)
+    pool, bids = pool_lib.alloc_compact(store.pool, n * mb, commit=commit)
+    payload = trajs.reshape(n * mb, bs, *cfg.item_shape)
+    pool = pool_lib.write_blocks(pool, bids, payload, mask=commit)
+    if cfg.mode is CopyMode.LAZY:
+        # Imports join the new generation: frozen like every cloned block.
+        pool = pool_lib.freeze(pool, jnp.where(commit, bids, NULL_BLOCK))
+    bids = bids.reshape(n, mb)
+    tables = jnp.where(mask[:, None], bids, store.tables)
+    lengths = jnp.where(mask, new_lengths, store.lengths)
+    store = store._replace(pool=pool, tables=tables, lengths=lengths)
+    return _bump_peak(cfg, store)
+
+
 # ---------------------------------------------------------------------------
 # reads (Pull — never copies)
 # ---------------------------------------------------------------------------
@@ -298,6 +381,26 @@ def materialize(cfg: StoreConfig, store: ParticleStore, i: int | jax.Array) -> j
     particle between iterations that must be completed eagerly").
     """
     return trajectory(cfg, store, i)
+
+
+def materialize_batch(
+    cfg: StoreConfig, store: ParticleStore, ids: jax.Array
+) -> jax.Array:
+    """Eager deep copies of several trajectories: ``[k, capacity, *item]``.
+
+    Vectorized :func:`materialize`; the sending half of the sharded
+    store's cross-shard exchange (only boundary-crossing trajectories are
+    ever passed here — within-shard clones stay refcount-only).
+    """
+    ids = ids.reshape(-1)
+    if cfg.mode is CopyMode.EAGER:
+        return store.dense[ids]
+    tab = store.tables[ids]  # [k, max_blocks]
+    blocks = store.pool.data[jnp.where(tab >= 0, tab, 0)]
+    blocks = jnp.where(
+        _expand(tab >= 0, blocks.ndim), blocks, jnp.zeros_like(blocks)
+    )
+    return blocks.reshape((ids.shape[0], cfg.capacity, *cfg.item_shape))
 
 
 # ---------------------------------------------------------------------------

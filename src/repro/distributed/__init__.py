@@ -1,10 +1,17 @@
-# Distribution layer: logical-axis sharding rules, mesh helpers, and the
-# HLO analysis used by the roofline report.
+# Distribution layer: logical-axis sharding rules, mesh helpers, the
+# HLO analysis used by the roofline report, and the sharded multi-device
+# ParticleStore (per-shard block pools under shard_map — DESIGN.md §4).
 
+from repro.distributed.sharded_store import ShardedStoreConfig
 from repro.distributed.sharding import (
     ShardingRules,
     default_rules,
     shardings_for,
 )
 
-__all__ = ["ShardingRules", "default_rules", "shardings_for"]
+__all__ = [
+    "ShardingRules",
+    "ShardedStoreConfig",
+    "default_rules",
+    "shardings_for",
+]

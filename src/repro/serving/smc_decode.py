@@ -13,20 +13,88 @@ Divergence after a fork costs one COW'd tail block per surviving lineage
 Dense-cache cloning would copy O(N·T·L·KVH·hd) bytes per resampling;
 here peak memory follows the Jacob et al. sparse bound — measured and
 reported by ``bench_serving``.
+
+Token *histories* get the same treatment as the KV data: they live in a
+:class:`repro.core.store.ParticleStore` (int32 items), so a resampling
+step clones them by refcount bump instead of the O(N·T) gather a dense
+token matrix would pay.  Passing ``mesh=`` shards that store across
+devices (per-shard block pools, boundary-only exchange — DESIGN.md §4);
+the KV cache itself stays on the default device, so this wires the
+population's trajectory state, not the model, across the mesh.
 """
 
 from __future__ import annotations
 
 import math
-from typing import Dict, NamedTuple
+from typing import Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh
 
+from repro.core import store as store_lib
+from repro.core.config import CopyMode
+from repro.core.store import StoreConfig
+from repro.distributed import sharded_store as sharded_lib
 from repro.models.model import LanguageModel
 from repro.serving import kv_cache as kvc
 from repro.serving.engine import ServeEngine
 from repro.smc import resampling
+
+
+class _TokenTrace:
+    """Population token histories in a (possibly sharded) ParticleStore."""
+
+    def __init__(
+        self,
+        n: int,
+        steps: int,
+        mode: CopyMode,
+        block_size: int,
+        mesh: Optional[Mesh],
+        data_axes: str,
+    ):
+        block_size = min(block_size, max(steps, 1))
+        self.cfg = StoreConfig(
+            mode=mode,
+            n=n,
+            block_size=block_size,
+            max_blocks=-(-max(steps, 1) // block_size),
+            item_shape=(),
+            dtype="int32",
+        )
+        self.mesh = mesh
+        if mesh is not None:
+            self.shcfg = sharded_lib.ShardedStoreConfig(
+                base=self.cfg,
+                num_shards=mesh.shape[data_axes],
+                axis_name=data_axes,
+            )
+            self.store = sharded_lib.create(self.shcfg, mesh)
+        else:
+            self.store = store_lib.create(self.cfg)
+
+    def append(self, token: jax.Array) -> None:
+        if self.mesh is not None:
+            self.store = sharded_lib.append(self.shcfg, self.mesh, self.store, token)
+        else:
+            self.store = store_lib.append(self.cfg, self.store, token)
+
+    def clone(self, ancestors: jax.Array) -> None:
+        if self.mesh is not None:
+            self.store = sharded_lib.clone(self.shcfg, self.mesh, self.store, ancestors)
+        else:
+            self.store = store_lib.clone(self.cfg, self.store, ancestors)
+
+    def tokens(self, steps: int) -> jax.Array:
+        """Materialize all histories: ``[N, steps]`` int32."""
+        if self.mesh is not None:
+            out = sharded_lib.trajectories(self.shcfg, self.mesh, self.store)
+        else:
+            out = store_lib.materialize_batch(
+                self.cfg, self.store, jnp.arange(self.cfg.n, dtype=jnp.int32)
+            )
+        return out[:, :steps]
 
 
 class SMCDecodeResult(NamedTuple):
@@ -50,6 +118,9 @@ class SMCDecoder:
         proposal_temp: float = 1.0,
         ess_threshold: float = 0.5,
         block_size: int = 16,
+        token_copy_mode: CopyMode = CopyMode.LAZY_SR,
+        mesh: Optional[Mesh] = None,
+        data_axes: str = "shards",
     ):
         from repro.serving.kv_cache import KVCacheConfig
 
@@ -68,6 +139,10 @@ class SMCDecoder:
         self.t_target = target_temp
         self.t_prop = proposal_temp
         self.ess_threshold = ess_threshold
+        self.token_copy_mode = token_copy_mode
+        self.mesh = mesh
+        self.data_axes = data_axes
+        self.token_block_size = block_size
 
     def run(self, key: jax.Array, prompt: jax.Array, steps: int) -> SMCDecodeResult:
         n = self.n
@@ -80,8 +155,15 @@ class SMCDecoder:
 
         logw = jnp.full((n,), -math.log(n))
         logz = jnp.zeros(())
-        toks, esss, useds, ress = [], [], [], []
-        last = None
+        trace = _TokenTrace(
+            n,
+            steps,
+            self.token_copy_mode,
+            self.token_block_size,
+            self.mesh,
+            self.data_axes,
+        )
+        esss, useds, ress = [], [], []
         for t in range(steps):
             key, k_samp, k_res = jax.random.split(key, 3)
             logp_prop = jax.nn.log_softmax(logits / self.t_prop, axis=-1)
@@ -99,17 +181,16 @@ class SMCDecoder:
             if do_resample:
                 ancestors = resampling.resample_systematic(k_res, logw)
                 eng.fork(ancestors)  # zero-copy clone of all KV lineages
+                trace.clone(ancestors)  # refcount bump, not an O(N·T) gather
                 token = token[ancestors]
-                toks = [tk[ancestors] for tk in toks]
                 logw = jnp.full((n,), -math.log(n))
             logits = eng.decode(token[:, None])
-            toks.append(token)
+            trace.append(token.astype(jnp.int32))
             esss.append(ess)
             useds.append(eng.used_blocks)
             ress.append(do_resample)
-            last = token
         return SMCDecodeResult(
-            tokens=jnp.stack(toks, axis=1),
+            tokens=trace.tokens(steps),
             log_weights=logw,
             log_evidence=logz,
             ess_trace=jnp.stack(esss),

@@ -12,6 +12,12 @@ resampling, an alive-filter rejection loop (bounded retries), and a
 simulation task (no observations → no resampling → no copies; paper
 Section 4's overhead-isolation task).  The full loop is one ``lax.scan``
 and is jittable end to end.
+
+Setting ``FilterConfig.mesh`` scales N across devices: the scan runs
+under ``shard_map`` with an independent per-shard block pool, resampling
+all-gathers only the weight vector, and only trajectories whose ancestor
+lives on another shard are materialized and exchanged
+(:mod:`repro.distributed.sharded_store`, DESIGN.md §4).
 """
 
 from __future__ import annotations
@@ -22,10 +28,14 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import store as store_lib
 from repro.core.config import CopyMode
 from repro.core.store import ParticleStore, StoreConfig
+from repro.distributed import sharded_store as sharded_lib
 from repro.smc import resampling
 
 __all__ = ["SSMDef", "FilterConfig", "FilterResult", "ParticleFilter"]
@@ -75,6 +85,15 @@ class FilterConfig:
     pool_blocks: int = 0  # 0 = auto
     max_retries: int = 0  # alive-filter retries (0 = plain PF)
     dtype: str = "float32"
+    # Multi-device scaling (DESIGN.md §4): when ``mesh`` is set, the N
+    # particles are split over the ``data_axes`` mesh axis — each shard
+    # owns an independent block pool, resampling all-gathers only the
+    # [N] weight vector, and only boundary-crossing trajectories are
+    # materialized and exchanged.  With a 1-device mesh the sharded path
+    # is bit-exact with the single-device one.
+    mesh: Optional[Mesh] = None
+    data_axes: str = "shards"  # mesh axis carrying the population
+    max_exports: int = 0  # per-shard exchange slots; 0 = n_local (safe)
 
     def store_config(self, record_shape: Tuple[int, ...]) -> StoreConfig:
         max_blocks = -(-self.n_steps // self.block_size)
@@ -111,6 +130,21 @@ class ParticleFilter:
         self.config = config
         self.store_cfg = config.store_config(ssm.record_shape)
         self._resample = resampling.RESAMPLERS[config.resampler]
+        self.sharded_cfg: Optional[sharded_lib.ShardedStoreConfig] = None
+        if config.mesh is not None:
+            if ssm.lookahead is not None or (
+                ssm.alive is not None and config.max_retries > 0
+            ):
+                raise NotImplementedError(
+                    "sharded filtering covers the bootstrap path; auxiliary "
+                    "lookahead and alive-filter retries are single-device only"
+                )
+            self.sharded_cfg = sharded_lib.ShardedStoreConfig(
+                base=self.store_cfg,
+                num_shards=config.mesh.shape[config.data_axes],
+                axis_name=config.data_axes,
+                max_exports=config.max_exports,
+            )
 
     # -- public API ---------------------------------------------------------
 
@@ -135,6 +169,8 @@ class ParticleFilter:
     def _run(
         self, key: jax.Array, params: Any, observations: jax.Array, simulate: bool
     ) -> FilterResult:
+        if self.config.mesh is not None:
+            return self._run_sharded(key, params, observations, simulate)
         cfg, ssm, scfg = self.config, self.ssm, self.store_cfg
         n = cfg.n_particles
         clone_state = ssm.clone_state or _default_clone
@@ -248,6 +284,157 @@ class ParticleFilter:
             jnp.arange(cfg.n_steps),
         )
         _, state, store, logw, logz = carry
+        return FilterResult(
+            store=store,
+            state=state,
+            log_weights=logw,
+            log_evidence=logz,
+            ess_trace=ess_trace,
+            resampled=resampled,
+            used_blocks_trace=used_trace,
+        )
+
+    def _run_sharded(
+        self, key: jax.Array, params: Any, observations: jax.Array, simulate: bool
+    ) -> FilterResult:
+        """The bootstrap filter scan under ``shard_map`` (DESIGN.md §4).
+
+        Mirrors :meth:`_run` operation for operation: with a 1-device
+        mesh every collective is the identity and the same keys drive the
+        same samplers, so the result is bit-exact with the single-device
+        path.  Multi-shard runs draw per-shard propagation noise (keys
+        folded with the shard index) and therefore agree statistically —
+        same log-evidence estimand, independent randomness.
+
+        The returned ``FilterResult.store`` is the stacked global view
+        (see :mod:`repro.distributed.sharded_store`): block tables hold
+        shard-local ids and ``peak_blocks`` is ``[num_shards]``; read
+        trajectories through ``sharded_store.trajectories``.
+        """
+        cfg, ssm = self.config, self.ssm
+        shcfg = self.sharded_cfg
+        assert shcfg is not None
+        mesh, axis = cfg.mesh, cfg.data_axes
+        n, n_shards, nl = cfg.n_particles, shcfg.num_shards, shcfg.n_local
+        local = shcfg.local
+        clone_state = ssm.clone_state or _default_clone
+
+        def shard_key(k, s):
+            # 1-shard meshes keep the exact single-device key stream.
+            return k if n_shards == 1 else jax.random.fold_in(k, s)
+
+        def body(key, params, observations):
+            s = lax.axis_index(axis)
+            lo = s * nl
+
+            key, init_key = jax.random.split(key)
+            state0 = ssm.init(shard_key(init_key, s), nl, params)
+            store0 = store_lib.create(local)
+            logw0 = jnp.full((nl,), -math.log(n))
+            logz0 = jnp.zeros(())
+
+            def maybe_resample(key, t, state, store, logw):
+                if simulate:
+                    return state, store, logw, jnp.zeros((), jnp.bool_)
+                if cfg.always_resample:
+                    do = t > 0
+                else:
+                    glogw = sharded_lib.gather_global(logw, axis)
+                    do = (t > 0) & resampling.should_resample(
+                        glogw, cfg.ess_threshold
+                    )
+
+                def yes(operand):
+                    key, state, store, logw = operand
+                    # Weights are globally normalized in the carry, so the
+                    # gathered vector is the full population's weights.
+                    glw = sharded_lib.gather_global(logw, axis)
+                    ancestors = self._resample(key, glw)  # [N]; same on
+                    # every shard (shared key, replicated weights).
+                    full_state = jax.tree.map(
+                        lambda x: sharded_lib.gather_global(x, axis), state
+                    )
+                    state = jax.tree.map(
+                        lambda x: lax.dynamic_slice_in_dim(x, lo, nl),
+                        clone_state(full_state, ancestors),
+                    )
+                    store = sharded_lib.sharded_clone(shcfg, store, ancestors)
+                    new_logw = jnp.full((nl,), -math.log(n))
+                    return state, store, new_logw
+
+                def no(operand):
+                    _, state, store, logw = operand
+                    return state, store, logw
+
+                state, store, logw = jax.lax.cond(
+                    do, yes, no, (key, state, store, logw)
+                )
+                return state, store, logw, do
+
+            def propagate(key, state, t, logw):
+                obs_t = jax.tree.map(lambda o: o[t], observations)
+                state, dlogw, record = ssm.step(
+                    shard_key(key, s), state, t, obs_t, params
+                )
+                if simulate:
+                    dlogw = jnp.zeros_like(dlogw)
+                return state, dlogw, record
+
+            def scan_step(carry, t):
+                key, state, store, logw, logz = carry
+                key, k_res, k_prop, _k_alive = jax.random.split(key, 4)
+                state, store, logw, did = maybe_resample(
+                    k_res, t, state, store, logw
+                )
+                state, dlogw, record = propagate(k_prop, state, t, logw)
+                lw = logw + dlogw
+                glw = sharded_lib.gather_global(lw, axis)
+                logz = logz + jax.scipy.special.logsumexp(glw)
+                glw_norm = resampling.normalize(glw)
+                logw = lax.dynamic_slice_in_dim(glw_norm, lo, nl)
+                store = store_lib.append(local, store, record)
+                out = (
+                    resampling.ess(glw_norm),
+                    did,
+                    lax.psum(store_lib.used_blocks(local, store), axis),
+                )
+                return (key, state, store, logw, logz), out
+
+            carry, (ess_trace, resampled, used_trace) = jax.lax.scan(
+                scan_step,
+                (key, state0, store0, logw0, logz0),
+                jnp.arange(cfg.n_steps),
+            )
+            _, state, store, logw, logz = carry
+            return (
+                sharded_lib.restack(store),
+                state,
+                logw,
+                logz,
+                ess_trace,
+                resampled,
+                used_trace,
+            )
+
+        ax = P(axis)
+        fn = shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(), P(), P()),
+            out_specs=(
+                sharded_lib.store_specs(axis),
+                ax,
+                ax,
+                P(),
+                P(),
+                P(),
+                P(),
+            ),
+            check_rep=False,
+        )
+        store, state, logw, logz, ess_trace, resampled, used_trace = fn(
+            key, params, observations
+        )
         return FilterResult(
             store=store,
             state=state,

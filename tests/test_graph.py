@@ -14,6 +14,8 @@ Covers:
 from __future__ import annotations
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (dev extra)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.config import ALL_MODES, CopyMode

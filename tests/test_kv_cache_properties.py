@@ -19,6 +19,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (dev extra)")
 from hypothesis import given, settings, strategies as st
 
 from repro.serving import kv_cache as kvc
