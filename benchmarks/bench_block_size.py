@@ -18,7 +18,7 @@ from repro.core.config import CopyMode
 from repro.core import store as store_lib
 from repro.core.store import StoreConfig
 
-from benchmarks.common import csv_row
+from benchmarks.common import emit
 
 
 def run(n: int = 128, t: int = 64):
@@ -39,14 +39,14 @@ def run(n: int = 128, t: int = 64):
         peak_items = int(s.peak_blocks) * bs
         table_entries = n * cfg.max_blocks
         rows.append(
-            csv_row(
+            emit(
+                "block",
                 f"block_size_{bs}",
                 0.0,
                 f"peak_item_equiv={peak_items};table_entries={table_entries};"
                 f"dense={n * t}",
             )
         )
-        print(rows[-1], flush=True)
     return rows
 
 

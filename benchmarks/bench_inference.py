@@ -6,7 +6,7 @@ from __future__ import annotations
 from repro.core.config import ALL_MODES
 from repro.smc.programs import PROBLEMS
 
-from benchmarks.common import build_runner, csv_row, time_run
+from benchmarks.common import build_runner, emit, time_run
 
 
 def run(n: int = 128, t: int = 48, reps: int = 3):
@@ -17,14 +17,14 @@ def run(n: int = 128, t: int = 48, reps: int = 3):
             secs, peak, logz = time_run(runner, reps)
             block_bytes = cfg.block_size * 4  # f32 items
             rows.append(
-                csv_row(
+                emit(
+                    "fig5",
                     f"fig5_inference_{name}_{mode.value}",
                     secs,
                     f"peak_blocks={peak};peak_kb={peak * block_bytes // 1024};"
                     f"logZ={logz:.2f};N={n};T={t}",
                 )
             )
-            print(rows[-1], flush=True)
     return rows
 
 

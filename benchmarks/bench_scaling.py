@@ -13,7 +13,7 @@ import numpy as np
 from repro.core.config import CopyMode
 from repro.smc.programs import PROBLEMS
 
-from benchmarks.common import KEY, build_runner, csv_row, time_run
+from benchmarks.common import KEY, build_runner, emit, time_run
 
 
 def run(n: int = 128, t: int = 64, problems=("rbpf", "mot")):
@@ -30,13 +30,13 @@ def run(n: int = 128, t: int = 64, problems=("rbpf", "mot")):
             # growth ratio: time(T) / time(T/2) — ~2 for linear, ~4 quadratic
             growth = times[-1][1] / max(times[1][1], 1e-9)
             rows.append(
-                csv_row(
+                emit(
+                    "fig7",
                     f"fig7_scaling_{name}_{mode.value}",
                     times[-1][1],
                     f"growthT/T2={growth:.2f};{trace}",
                 )
             )
-            print(rows[-1], flush=True)
     return rows
 
 

@@ -17,7 +17,7 @@ from repro.configs import smoke_config
 from repro.models.model import LanguageModel
 from repro.serving.smc_decode import SMCDecoder
 
-from benchmarks.common import KEY, csv_row
+from benchmarks.common import KEY, emit
 
 
 def run(steps: int = 32, prompt_len: int = 16):
@@ -38,7 +38,8 @@ def run(steps: int = 32, prompt_len: int = 16):
         used = int(res.used_blocks_trace[-1])
         peak = int(np.max(np.asarray(res.used_blocks_trace)))
         rows.append(
-            csv_row(
+            emit(
+                "serve",
                 f"serving_smc_N{n}",
                 secs / steps,
                 f"peak_blocks={peak};final_blocks={used};dense_equiv={dense};"
@@ -46,7 +47,6 @@ def run(steps: int = 32, prompt_len: int = 16):
                 f"resampled={int(res.resampled.sum())};steps={steps}",
             )
         )
-        print(rows[-1], flush=True)
     return rows
 
 

@@ -1,4 +1,4 @@
-"""Sharded-population scaling benchmark (DESIGN.md §4).
+"""Sharded-population scaling benchmark (DESIGN.md §5).
 
 Runs the bootstrap filter with the population split over a faked
 multi-device host mesh (``--xla_force_host_platform_device_count``) and
@@ -43,6 +43,14 @@ from repro.core.config import ALL_MODES, CopyMode
 from repro.distributed import sharded_store as sharded_lib
 from repro.smc.filters import FilterConfig, ParticleFilter, SSMDef
 
+if __package__ in (None, ""):  # invoked as a file path (the documented usage)
+    import pathlib
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from benchmarks.common import emit
+
 A, Q, R = 0.9, 0.5, 0.3
 KEY = jax.random.PRNGKey(0)
 
@@ -85,11 +93,15 @@ def run(n: int = 256, t: int = 48, reps: int = 3, tol: float = 3.0):
     secs0, res0 = _time(pf0.jitted(), KEY, obs, reps)
     ref_logz = float(res0.log_evidence)
     rows.append(
-        f"sharded_single_device_lazy_sr,{secs0 * 1e6:.0f},"
-        f"pps={n * t / secs0:.0f};logZ={ref_logz:.3f};"
-        f"peak={int(res0.store.peak_blocks)}"
+        emit(
+            "sharded",
+            "sharded_single_device_lazy_sr",
+            secs0,
+            f"pps={n * t / secs0:.0f};logZ={ref_logz:.3f};"
+            f"peak={int(res0.store.peak_blocks)}",
+            n=n, t=t,
+        )
     )
-    print(rows[-1], flush=True)
 
     shard_counts = [s for s in (1, 2, 4) if s <= max_shards and n % s == 0]
     logz_by_cfg = {}
@@ -114,22 +126,29 @@ def run(n: int = 256, t: int = 48, reps: int = 3, tol: float = 3.0):
             logz = float(res.log_evidence)
             logz_by_cfg[(s, mode)] = logz
             rows.append(
-                f"sharded_s{s}_{mode.value},{secs * 1e6:.0f},"
-                f"pps={n * t / secs:.0f};logZ={logz:.3f};"
-                f"used_per_shard={'/'.join(map(str, used))};"
-                f"peak_per_shard={'/'.join(map(str, peak))};oom={int(oom)}"
+                emit(
+                    "sharded",
+                    f"sharded_s{s}_{mode.value}",
+                    secs,
+                    f"pps={n * t / secs:.0f};logZ={logz:.3f};"
+                    f"used_per_shard={'/'.join(map(str, used))};"
+                    f"peak_per_shard={'/'.join(map(str, peak))};oom={int(oom)}",
+                    n=n, t=t, shards=s, mode=mode.value,
+                )
             )
-            print(rows[-1], flush=True)
 
     # the acceptance check: multi-shard LAZY_SR vs single-device logZ
     s_chk = shard_counts[-1]
     delta = abs(logz_by_cfg[(s_chk, CopyMode.LAZY_SR)] - ref_logz)
     verdict = "ok" if delta < tol else "FAIL"
     rows.append(
-        f"sharded_logz_check_s{s_chk},0,"
-        f"delta={delta:.3f};tol={tol};verdict={verdict}"
+        emit(
+            "sharded",
+            f"sharded_logz_check_s{s_chk}",
+            0.0,
+            f"delta={delta:.3f};tol={tol};verdict={verdict}",
+        )
     )
-    print(rows[-1], flush=True)
     if verdict == "FAIL":
         raise SystemExit(
             f"{s_chk}-shard LAZY_SR logZ diverged from single-device: "
@@ -145,6 +164,13 @@ if __name__ == "__main__":
     ap.add_argument("--n", type=int, default=256)
     ap.add_argument("--t", type=int, default=48)
     ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--json", default="")
     args = ap.parse_args()
+    if args.json:
+        from benchmarks import common
+
+        common.enable_json(args.json)
     print("name,us_per_call,derived")
     run(n=args.n, t=args.t, reps=args.reps)
+    if args.json:
+        common.flush_json()

@@ -6,7 +6,7 @@ from __future__ import annotations
 from repro.core.config import ALL_MODES
 from repro.smc.programs import PROBLEMS
 
-from benchmarks.common import build_runner, csv_row, time_run
+from benchmarks.common import build_runner, emit, time_run
 
 
 def run(n: int = 128, t: int = 48, reps: int = 3):
@@ -16,13 +16,13 @@ def run(n: int = 128, t: int = 48, reps: int = 3):
             runner, cfg = build_runner(name, mode, n, t, simulate=True)
             secs, peak, _ = time_run(runner, reps)
             rows.append(
-                csv_row(
+                emit(
+                    "fig6",
                     f"fig6_simulation_{name}_{mode.value}",
                     secs,
                     f"peak_blocks={peak};N={n};T={t}",
                 )
             )
-            print(rows[-1], flush=True)
     return rows
 
 

@@ -17,7 +17,7 @@ from repro.core.config import CopyMode
 from repro.core import store as store_lib
 from repro.core.store import StoreConfig
 
-from benchmarks.common import csv_row
+from benchmarks.common import emit
 
 
 def run(t: int = 100):
@@ -40,14 +40,14 @@ def run(t: int = 100):
             worst_ratio = max(worst_ratio, used / bound)
         final = int(store_lib.used_blocks(cfg, s))
         rows.append(
-            csv_row(
+            emit(
+                "tree",
                 f"tree_bound_N{n}",
                 0.0,
                 f"final_blocks={final};dense={n * t};"
                 f"worst_used/bound={worst_ratio:.3f};bound_c=6",
             )
         )
-        print(rows[-1], flush=True)
     return rows
 
 

@@ -1,0 +1,230 @@
+"""Write-path benchmark: µs/append and µs/clone, legacy vs kernelized.
+
+Times the pre-kernelization six-pass jnp write path (reconstructed here:
+``nonzero`` free-scan alloc, dense source gather, masked copy scatter,
+separate item scatter, chained clone bookkeeping) against the current
+fused path (free-stack alloc + ``cow_write`` + ``refcount_update``,
+DESIGN.md §3) across N and block_size.
+
+On CPU hosts the Pallas kernels run in interpret mode — wall-clocking
+them measures the interpreter, not the kernel — so the kernel path's
+advantage is asserted through the roofline byte/pass model
+(:mod:`repro.roofline.write_path`): at N >= 1024 with auto-sized pools
+the kernel must move >= 2x fewer bytes and make >= 2x fewer HBM passes
+per append than the legacy jnp path.  The model rows are emitted next to
+the wall-clock rows so the trajectory is trackable from the JSON
+artifacts.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pool as pool_lib
+from repro.core import store as store_lib
+from repro.core.config import CopyMode
+from repro.core.pool import NULL_BLOCK
+from repro.core.store import StoreConfig
+from repro.roofline.write_path import append_cost, clone_cost
+
+from benchmarks.common import emit
+
+
+# -- the pre-kernelization path, reconstructed for A/B timing ---------------
+
+
+def legacy_append(cfg: StoreConfig, store, values):
+    """The six-pass write path this PR replaced (see module docstring)."""
+    n = cfg.n
+    rows = jnp.arange(n, dtype=jnp.int32)
+    pool = store.pool
+    bs = cfg.block_size
+    idx = store.lengths // bs
+    pos = store.lengths % bs
+    cur_bid = store.tables[rows, idx]
+    fresh = cur_bid == NULL_BLOCK
+    if cfg.mode is CopyMode.LAZY:
+        shared = pool.frozen[jnp.where(cur_bid >= 0, cur_bid, 0)]
+    else:
+        shared = pool.refcount[jnp.where(cur_bid >= 0, cur_bid, 0)] > 1
+    need_copy = (~fresh) & shared
+    need_block = fresh | need_copy
+
+    pool, new_bid = pool_lib.alloc_scan(pool, n, commit=need_block)  # pass 1
+    src = jnp.where(need_copy, cur_bid, 0)
+    copied = pool.data[src]  # pass 2: dense gather of every row
+    pool = pool_lib.write_blocks(pool, new_bid, copied, mask=need_copy)  # 3
+    pool = pool_lib.sub_refs(pool, jnp.where(need_copy, cur_bid, NULL_BLOCK))  # 4
+    bid = jnp.where(need_block, new_bid, cur_bid)
+    tables = store.tables.at[rows, idx].set(bid)
+    write_bid = jnp.where(bid >= 0, bid, pool.num_blocks)
+    data = pool.data.at[write_bid, pos].set(values, mode="drop")  # pass 5
+    data = data.at[pool.num_blocks].set(0)
+    pool = pool._replace(data=data)
+    return store._replace(pool=pool, tables=tables, lengths=store.lengths + 1)
+
+
+def legacy_clone(cfg: StoreConfig, store, ancestors):
+    """Three-pass clone bookkeeping (add_refs / sub_refs / freeze)."""
+    lengths = store.lengths[ancestors]
+    new_tables = store.tables[ancestors]
+    pool = pool_lib.add_refs(store.pool, new_tables)
+    pool = pool_lib.sub_refs(pool, store.tables)
+    if cfg.mode is CopyMode.LAZY:
+        pool = pool_lib.freeze(pool, new_tables)
+    return store._replace(pool=pool, tables=new_tables, lengths=lengths)
+
+
+# -- harness ----------------------------------------------------------------
+
+
+def _time_program(cfg, append_fn, clone_fn, t: int, reps: int):
+    """Append-heavy LAZY_SR program: a clone every block boundary, appends
+    in between (the paper's motivating resample-every-generation churn).
+    Returns (us_per_append, us_per_clone)."""
+    rng = np.random.default_rng(0)
+    ancs = [
+        jnp.asarray(rng.integers(0, cfg.n, cfg.n).astype(np.int32))
+        for _ in range(t // cfg.block_size + 1)
+    ]
+    vals = jnp.ones((cfg.n,), jnp.float32)
+
+    def program():
+        s = store_lib.create(cfg)
+        n_app = n_cl = 0
+        app_s = cl_s = 0.0
+        for step in range(t):
+            if step and step % cfg.block_size == 0:
+                t0 = time.time()
+                s = clone_fn(cfg, s, ancs[step // cfg.block_size])
+                jax.block_until_ready(s.lengths)
+                cl_s += time.time() - t0
+                n_cl += 1
+            t0 = time.time()
+            s = append_fn(cfg, s, vals)
+            jax.block_until_ready(s.lengths)
+            app_s += time.time() - t0
+            n_app += 1
+        return app_s / n_app, cl_s / max(n_cl, 1)
+
+    program()  # warmup/compile
+    out = [program() for _ in range(reps)]
+    return (
+        float(np.median([a for a, _ in out])),
+        float(np.median([c for _, c in out])),
+    )
+
+
+def _model_rows(cfg: StoreConfig, suffix: str):
+    """Roofline byte/pass model rows for one config (host-independent)."""
+    item_bytes = 4
+    for d in cfg.item_shape:
+        item_bytes *= d
+    block_bytes = item_bytes * cfg.block_size
+    nb = cfg.pool_blocks
+    kw = dict(
+        n=cfg.n,
+        touched=cfg.n,
+        copies=cfg.n // 4,  # post-resampling divergence front
+        num_blocks=nb,
+        block_bytes=block_bytes,
+        item_bytes=item_bytes,
+    )
+    costs = {p: append_cost(p, **kw) for p in ("legacy", "fused_jnp", "kernel")}
+    clones = {
+        p: clone_cost(p, table_entries=cfg.n * cfg.max_blocks, num_blocks=nb)
+        for p in ("legacy", "fused_jnp", "kernel")
+    }
+    rows = [
+        emit(
+            "write",
+            f"write_model_{suffix}",
+            0.0,
+            f"append_bytes_legacy={costs['legacy'].bytes};"
+            f"append_bytes_fused_jnp={costs['fused_jnp'].bytes};"
+            f"append_bytes_kernel={costs['kernel'].bytes};"
+            f"append_passes={costs['legacy'].passes}/"
+            f"{costs['fused_jnp'].passes}/{costs['kernel'].passes};"
+            f"kernel_vs_legacy={costs['kernel'].speedup_over(costs['legacy']):.2f}x;"
+            f"clone_bytes={clones['legacy'].bytes}/{clones['kernel'].bytes};"
+            f"clone_passes={clones['legacy'].passes}/{clones['kernel'].passes}",
+            n=cfg.n,
+            block_size=cfg.block_size,
+            pool_blocks=nb,
+        )
+    ]
+    return rows, costs, clones
+
+
+def run(quick: bool = False, reps: int = 3, t: int = 32):
+    rows = []
+    sizes = [(256, 4)] if quick else [(256, 4), (1024, 4), (1024, 16)]
+    for n, bs in sizes:
+        cfg = StoreConfig(
+            mode=CopyMode.LAZY_SR,
+            n=n,
+            block_size=bs,
+            max_blocks=-(-t // bs),
+        )
+        append_new = jax.jit(store_lib.append, static_argnums=0)
+        clone_new = jax.jit(store_lib.clone, static_argnums=0)
+        append_old = jax.jit(legacy_append, static_argnums=0)
+        clone_old = jax.jit(legacy_clone, static_argnums=0)
+        app_new, cl_new = _time_program(cfg, append_new, clone_new, t, reps)
+        app_old, cl_old = _time_program(cfg, append_old, clone_old, t, reps)
+        rows.append(
+            emit(
+                "write",
+                f"write_append_N{n}_bs{bs}",
+                app_new,
+                f"legacy_us={app_old * 1e6:.0f};"
+                f"speedup={app_old / max(app_new, 1e-9):.2f}x;"
+                f"pool_blocks={cfg.pool_blocks};T={t}",
+                n=n,
+                block_size=bs,
+            )
+        )
+        rows.append(
+            emit(
+                "write",
+                f"write_clone_N{n}_bs{bs}",
+                cl_new,
+                f"legacy_us={cl_old * 1e6:.0f};"
+                f"speedup={cl_old / max(cl_new, 1e-9):.2f}x;"
+                f"table_entries={n * cfg.max_blocks}",
+                n=n,
+                block_size=bs,
+            )
+        )
+        mrows, _, _ = _model_rows(cfg, f"N{n}_bs{bs}")
+        rows += mrows
+
+    # The acceptance gate (host-independent, asserted even under --quick):
+    # at N >= 1024 with the auto-sized pool, the kernel write path must
+    # make >= 2x fewer HBM passes per append than the legacy jnp path and
+    # strictly reduce bytes moved; at the filter's default COW granularity
+    # (block_size=4 — the append-heavy LAZY_SR shape) the byte reduction
+    # itself must be >= 2x.  Clone bookkeeping must drop from three passes
+    # to one.
+    for bs in (4, 16):
+        gate = StoreConfig(
+            mode=CopyMode.LAZY_SR, n=1024, block_size=bs, max_blocks=-(-64 // bs)
+        )
+        grows, costs, clones = _model_rows(gate, f"gate_N1024_bs{bs}")
+        rows += grows
+        assert costs["legacy"].passes >= 2 * costs["kernel"].passes, costs
+        assert costs["kernel"].bytes < costs["fused_jnp"].bytes < costs["legacy"].bytes, costs
+        if bs == 4:
+            assert costs["kernel"].speedup_over(costs["legacy"]) >= 2.0, costs
+        assert clones["kernel"].bytes < clones["legacy"].bytes, clones
+        assert clones["legacy"].passes >= 2 * clones["kernel"].passes, clones
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

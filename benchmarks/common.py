@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 from typing import Callable, Dict, Tuple
 
@@ -61,3 +63,46 @@ def time_run(run: Callable, reps: int = 3) -> Tuple[float, int, float]:
 
 def csv_row(name: str, seconds: float, derived: str) -> str:
     return f"{name},{seconds * 1e6:.0f},{derived}"
+
+
+# -- machine-readable results ------------------------------------------------
+#
+# ``run.py --json DIR`` turns every emitted row into an entry of
+# ``DIR/BENCH_<suite>.json`` so the perf trajectory is trackable across
+# PRs; without it ``emit`` is just the csv print the suites always did.
+
+_json_dir: pathlib.Path | None = None
+_json_rows: Dict[str, list] = {}
+
+
+def enable_json(path: str) -> None:
+    global _json_dir
+    _json_dir = pathlib.Path(path)
+    _json_dir.mkdir(parents=True, exist_ok=True)
+
+
+def emit(suite: str, name: str, seconds: float, derived: str, **config) -> str:
+    """Print one benchmark row (and record it when JSON output is on)."""
+    row = csv_row(name, seconds, derived)
+    print(row, flush=True)
+    if _json_dir is not None:
+        _json_rows.setdefault(suite, []).append(
+            {
+                "name": name,
+                "us_per_call": seconds * 1e6,
+                "derived": derived,
+                "config": config,
+            }
+        )
+    return row
+
+
+def flush_json() -> None:
+    """Write one ``BENCH_<suite>.json`` per recorded suite."""
+    if _json_dir is None:
+        return
+    for suite, rows in _json_rows.items():
+        out = _json_dir / f"BENCH_{suite}.json"
+        out.write_text(json.dumps({"suite": suite, "rows": rows}, indent=2))
+        print(f"wrote {out}", flush=True)
+    _json_rows.clear()

@@ -5,11 +5,18 @@
 #   fig7  — time/memory scaling in t
 #   tree  — Jacob et al. reachable-set bound
 #   serve — beyond-paper: COW-paged KV under SMC decoding
-#   sharded — beyond-paper: multi-device population (DESIGN.md §4)
+#   sharded — beyond-paper: multi-device population (DESIGN.md §5)
+#   write — the kernelized COW write path vs the legacy jnp path
+#           (DESIGN.md §3; includes the roofline byte/pass gate)
 #
 # ``--quick`` shrinks N/T for CI-speed runs; default sizes run in
 # minutes on a CPU host.  The at-scale numbers live in the dry-run
 # roofline tables (results/, EXPERIMENTS.md), not here.
+#
+# ``--json DIR`` additionally writes one machine-readable
+# ``DIR/BENCH_<suite>.json`` per suite (name, us_per_call, derived,
+# config per row) so the perf trajectory is trackable across PRs; CI
+# uploads these as artifacts.
 
 from __future__ import annotations
 
@@ -21,11 +28,32 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument(
         "--only", default="",
-        help="comma list of {fig5,fig6,fig7,tree,serve,block,sharded}",
+        help="comma list of {fig5,fig6,fig7,tree,serve,block,sharded,write}",
+    )
+    ap.add_argument(
+        "--json", default="",
+        help="directory to write BENCH_<suite>.json result files into",
     )
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
+    from benchmarks import common
+
+    if args.json:
+        common.enable_json(args.json)
+
+    n, t = (48, 24) if args.quick else (128, 48)
+    print("name,us_per_call,derived")
+    try:
+        _run_suites(args, only, n, t)
+    finally:
+        # Flush whatever completed even when a suite (e.g. the write-path
+        # perf gate) fails — those are the runs whose evidence matters.
+        if args.json:
+            common.flush_json()
+
+
+def _run_suites(args, only, n: int, t: int) -> None:
     from benchmarks import (
         bench_block_size,
         bench_inference,
@@ -33,10 +61,9 @@ def main() -> None:
         bench_serving,
         bench_simulation,
         bench_tree_bound,
+        bench_write_path,
     )
 
-    n, t = (48, 24) if args.quick else (128, 48)
-    print("name,us_per_call,derived")
     if only is None or "fig5" in only:
         bench_inference.run(n=n, t=t, reps=2 if args.quick else 3)
     if only is None or "fig6" in only:
@@ -49,24 +76,27 @@ def main() -> None:
         bench_serving.run(steps=16 if args.quick else 32)
     if only is None or "block" in only:
         bench_block_size.run(n=n, t=2 * t)
+    if only is None or "write" in only:
+        bench_write_path.run(quick=args.quick, reps=2 if args.quick else 3)
     if only is None or "sharded" in only:
         # Subprocess: bench_sharded fakes a multi-device host via
         # XLA_FLAGS, which must not leak into the other benchmarks'
-        # timings (same isolation idiom as the multi-device tests).
+        # timings (same isolation idiom as the multi-device tests).  It
+        # writes its own BENCH_sharded.json when --json is set.
         import pathlib
         import subprocess
         import sys
 
-        subprocess.run(
-            [
-                sys.executable,
-                str(pathlib.Path(__file__).resolve().parent / "bench_sharded.py"),
-                f"--n={n * 2}",
-                f"--t={t}",
-                f"--reps={2 if args.quick else 3}",
-            ],
-            check=True,
-        )
+        cmd = [
+            sys.executable,
+            str(pathlib.Path(__file__).resolve().parent / "bench_sharded.py"),
+            f"--n={n * 2}",
+            f"--t={t}",
+            f"--reps={2 if args.quick else 3}",
+        ]
+        if args.json:
+            cmd.append(f"--json={args.json}")
+        subprocess.run(cmd, check=True)
 
 
 if __name__ == "__main__":

@@ -19,19 +19,36 @@ single-reference opt   in-place write when ``refcount == 1``
 =====================  ====================================================
 
 Everything here is functional and jittable: fixed shapes, no host
-round-trips.  Allocation uses ``jnp.nonzero(..., size=n)`` (static size)
-over the free mask; failed allocations surface through the ``oom`` flag
-rather than raising, so the caller can handle exhaustion under jit.
+round-trips.  Failed allocations surface through the ``oom`` flag rather
+than raising, so the caller can handle exhaustion under jit.
 
-Masked/NULL entries in every scatter are routed to an out-of-bounds
-index and dropped (``mode="drop"``) — never clipped — so duplicate
-indices cannot clobber live blocks.
+Allocation (DESIGN.md §3) pops from a maintained **free stack**: a
+``[num_blocks] int32`` array of free block ids plus a ``free_top``
+count, updated incrementally by :func:`alloc` (pops) and
+:func:`sub_refs` (pushes blocks whose refcount drops to zero).  An
+``alloc`` is therefore O(n) gathers instead of the O(num_blocks)
+``jnp.nonzero`` free-scan it used to be; the scan survives as the
+debug/verify path (:func:`alloc_scan`, :func:`free_stack_consistent`).
+Stack invariant: ``free_stack[:free_top]`` holds exactly the ids with
+``refcount == 0``, each once.  The one operation that could silently
+break it is :func:`add_refs` resurrecting a freed block (refcount
+0 -> 1 leaves a stale id in the stack); every caller in this repo only
+ever ``add_refs`` blocks reachable from a live table, which by
+construction have refcount >= 1.
+
+Masked/NULL entries in every data scatter are routed to the pool's
+**dump row** — ``data`` carries ``num_blocks + 1`` rows, and row
+``num_blocks`` is a write-only garbage slab that no table can reference
+— so duplicate indices cannot clobber live blocks, and the Pallas write
+kernels (:mod:`repro.kernels.cow_write`) have an always-safe destination
+for masked-out grid steps.  Bookkeeping scatters (refcount / frozen)
+still use ``mode="drop"`` on exactly-sized arrays.
 
 The pool composes with ``shard_map``: each device shard owns an
-independent pool (per-shard free lists, no cross-device allocation), the
-same way the paper gives each thread its own context stack.  That
+independent pool (per-shard free stacks, no cross-device allocation),
+the same way the paper gives each thread its own context stack.  That
 composition is built in :mod:`repro.distributed.sharded_store` and
-documented in DESIGN.md §4; only trajectories whose resampling ancestor
+documented in DESIGN.md §5; only trajectories whose resampling ancestor
 lives on another shard ever move between pools.
 """
 
@@ -46,6 +63,7 @@ __all__ = [
     "BlockPool",
     "init",
     "alloc",
+    "alloc_scan",
     "alloc_compact",
     "add_refs",
     "sub_refs",
@@ -54,6 +72,9 @@ __all__ = [
     "read_blocks",
     "blocks_in_use",
     "blocks_free",
+    "push_free_mask",
+    "rebuild_free_stack",
+    "free_stack_consistent",
     "NULL_BLOCK",
 ]
 
@@ -64,22 +85,29 @@ class BlockPool(NamedTuple):
     """A pool of reference-counted payload blocks.
 
     Attributes:
-      data:     ``[num_blocks, *block_shape]`` payload slabs.
-      refcount: ``[num_blocks] int32`` — 0 means free.
-      frozen:   ``[num_blocks] bool`` — the paper's read-only set ``R``.
-                Only consulted in ``CopyMode.LAZY`` (no single-reference
-                optimization); ``LAZY_SR`` uses ``refcount == 1`` instead.
-      oom:      scalar bool, sticky: an allocation ever failed.
+      data:       ``[num_blocks + 1, *block_shape]`` payload slabs; the
+                  trailing row is the write-only dump row (see module
+                  docstring) and is never addressed by a table.
+      refcount:   ``[num_blocks] int32`` — 0 means free.
+      frozen:     ``[num_blocks] bool`` — the paper's read-only set ``R``.
+                  Only consulted in ``CopyMode.LAZY`` (no single-reference
+                  optimization); ``LAZY_SR`` uses ``refcount == 1`` instead.
+      free_stack: ``[num_blocks] int32`` — LIFO stack of free block ids;
+                  ``free_stack[:free_top]`` is exactly the free set.
+      free_top:   scalar int32 — number of live entries in ``free_stack``.
+      oom:        scalar bool, sticky: an allocation ever failed.
     """
 
     data: jax.Array
     refcount: jax.Array
     frozen: jax.Array
+    free_stack: jax.Array
+    free_top: jax.Array
     oom: jax.Array
 
     @property
     def num_blocks(self) -> int:
-        return self.data.shape[0]
+        return self.data.shape[0] - 1
 
     @property
     def block_shape(self) -> Tuple[int, ...]:
@@ -91,17 +119,29 @@ def init(
     block_shape: Sequence[int],
     dtype: jnp.dtype = jnp.float32,
 ) -> BlockPool:
-    """Create an empty pool of ``num_blocks`` blocks."""
+    """Create an empty pool of ``num_blocks`` blocks (+ the dump row).
+
+    The free stack is seeded descending so pops hand out ascending block
+    ids — the same order the legacy ``nonzero`` scan produced on an
+    empty pool.
+    """
     return BlockPool(
-        data=jnp.zeros((num_blocks, *block_shape), dtype=dtype),
+        data=jnp.zeros((num_blocks + 1, *block_shape), dtype=dtype),
         refcount=jnp.zeros((num_blocks,), dtype=jnp.int32),
         frozen=jnp.zeros((num_blocks,), dtype=jnp.bool_),
+        free_stack=jnp.arange(num_blocks - 1, -1, -1, dtype=jnp.int32),
+        free_top=jnp.asarray(num_blocks, dtype=jnp.int32),
         oom=jnp.zeros((), dtype=jnp.bool_),
     )
 
 
 def _scatter_ids(num_blocks: int, ids: jax.Array, mask: jax.Array | None = None) -> jax.Array:
-    """Route NULL/masked entries out of bounds so drop-mode scatters skip them."""
+    """Route NULL/masked entries to the dump index so scatters skip them.
+
+    Bookkeeping arrays (refcount/frozen/claim) are exactly
+    ``num_blocks``-sized and pair this with ``mode="drop"``; ``data``
+    scatters land in the dump row instead.
+    """
     ok = ids >= 0
     if mask is not None:
         ok = ok & mask
@@ -113,19 +153,91 @@ def _gather_ids(ids: jax.Array) -> jax.Array:
     return jnp.where(ids >= 0, ids, 0)
 
 
-def alloc(pool: BlockPool, n: int, commit: jax.Array | None = None) -> Tuple[BlockPool, jax.Array]:
-    """Allocate up to ``n`` blocks (static ``n``).
+def _push_free_ids(
+    stack: jax.Array, top: jax.Array, ids: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Push non-NULL ids (must be distinct, and absent from the stack)."""
+    valid = ids >= 0
+    rank = jnp.cumsum(valid.astype(jnp.int32)) - 1
+    pos = jnp.where(valid, top + rank, stack.shape[0])
+    stack = stack.at[pos].set(ids, mode="drop")
+    return stack, top + jnp.sum(valid, dtype=jnp.int32)
 
-    Returns the first ``n`` free block indices.  ``commit`` (``[n] bool``,
+
+def push_free_mask(
+    stack: jax.Array, top: jax.Array, freed: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Push every block selected by ``freed`` (``[num_blocks] bool``).
+
+    The mask-shaped push used by the fused clone bookkeeping
+    (:mod:`repro.kernels.refcount_update` emits the newly-freed mask in
+    the same pass that computes the refcount delta).  Ids are pushed in
+    ascending order; the caller guarantees none is already in the stack.
+    """
+    nb = stack.shape[0]
+    ids = jnp.arange(nb, dtype=jnp.int32)
+    rank = jnp.cumsum(freed.astype(jnp.int32)) - 1
+    pos = jnp.where(freed, top + rank, nb)
+    stack = stack.at[pos].set(ids, mode="drop")
+    return stack, top + jnp.sum(freed, dtype=jnp.int32)
+
+
+def alloc(pool: BlockPool, n: int, commit: jax.Array | None = None) -> Tuple[BlockPool, jax.Array]:
+    """Allocate up to ``n`` blocks (static ``n``) by popping the free stack.
+
+    Returns the top ``n`` free block ids.  ``commit`` (``[n] bool``,
     default all-true) selects which candidates are actually committed
-    (refcount set to 1, unfrozen); uncommitted candidates stay free, which
-    lets callers over-provision candidates for data-dependent allocation
-    counts without host synchronization.
+    (refcount set to 1, unfrozen); uncommitted candidates are pushed
+    straight back, which lets callers over-provision candidates for
+    data-dependent allocation counts without host synchronization.
 
     Committed entries of the returned index vector are valid block ids;
     uncommitted entries come back as ``NULL_BLOCK``.  If fewer blocks are
     free than committed requests, the ``oom`` flag goes sticky and the
     unsatisfied entries come back as ``NULL_BLOCK``.
+
+    Cost: O(n) gathers/scatters — no pass over the pool.  The legacy
+    free-scan survives as :func:`alloc_scan`.
+    """
+    if commit is None:
+        commit = jnp.ones((n,), dtype=jnp.bool_)
+    nb = pool.num_blocks
+    top = pool.free_top
+    i = jnp.arange(n, dtype=jnp.int32)
+    have = i < top
+    cand_pos = jnp.clip(top - 1 - i, 0, max(nb - 1, 0))
+    cand = jnp.where(have, pool.free_stack[cand_pos], NULL_BLOCK)
+    ok = have & commit
+    sids = _scatter_ids(nb, cand, ok)
+    refcount = pool.refcount.at[sids].add(1, mode="drop")
+    frozen = pool.frozen.at[sids].set(False, mode="drop")
+    oom = pool.oom | jnp.any(commit & ~have)
+    # Remove the committed candidates from the stack window, compacting
+    # the uncommitted survivors downward in their original relative
+    # order — an alloc whose commits all fail is a bit-exact no-op, which
+    # the sharded store's fixed-shape exchange relies on (its all-local
+    # steps still trace an alloc_compact of zero blocks).
+    keep = have & ~commit
+    kept = jnp.cumsum(keep.astype(jnp.int32))
+    base = top - jnp.sum(have, dtype=jnp.int32)
+    tgt = jnp.where(keep, base + (kept[-1] - kept), nb)
+    stack = pool.free_stack.at[tgt].set(cand, mode="drop")
+    top = top - jnp.sum(ok, dtype=jnp.int32)
+    out_ids = jnp.where(ok, cand, NULL_BLOCK)
+    pool = pool._replace(
+        refcount=refcount, frozen=frozen, oom=oom, free_stack=stack, free_top=top
+    )
+    return pool, out_ids
+
+
+def alloc_scan(
+    pool: BlockPool, n: int, commit: jax.Array | None = None
+) -> Tuple[BlockPool, jax.Array]:
+    """Debug/verify allocator: the legacy O(num_blocks) ``nonzero`` scan.
+
+    Same contract as :func:`alloc`; candidates are the *lowest* free ids
+    instead of the stack top.  Rebuilds the free stack canonically
+    afterwards so the two allocators can interleave.
     """
     if commit is None:
         commit = jnp.ones((n,), dtype=jnp.bool_)
@@ -137,7 +249,8 @@ def alloc(pool: BlockPool, n: int, commit: jax.Array | None = None) -> Tuple[Blo
     frozen = pool.frozen.at[sids].set(False, mode="drop")
     oom = pool.oom | jnp.any(commit & (cand < 0))
     out_ids = jnp.where(ok, cand, NULL_BLOCK)
-    return pool._replace(refcount=refcount, frozen=frozen, oom=oom), out_ids
+    pool = pool._replace(refcount=refcount, frozen=frozen, oom=oom)
+    return rebuild_free_stack(pool), out_ids
 
 
 def alloc_compact(
@@ -145,14 +258,16 @@ def alloc_compact(
 ) -> Tuple[BlockPool, jax.Array]:
     """Like :func:`alloc`, but with rank-compacted candidate assignment.
 
-    :func:`alloc` pairs request ``i`` with the ``i``-th free block, so a
-    *sparse* commit mask can exhaust the candidate list while most of the
-    pool is still free (a committed request at position ``i`` needs at
-    least ``i + 1`` free blocks).  Here committed requests are packed by
-    their rank ``cumsum(commit) - 1`` onto the first free candidates, so
-    allocation succeeds whenever ``sum(commit)`` blocks are free — the
-    shape the sharded store's trajectory imports need, where the commit
-    mask is scattered over a ``[n_particles, max_blocks]`` grid.
+    :func:`alloc` pairs request ``i`` with the ``i``-th candidate popped
+    off the free stack, so a *sparse* commit mask can exhaust the
+    candidate list while most of the pool is still free (a committed
+    request at position ``i`` needs at least ``i + 1`` free blocks).
+    Here committed requests are packed by their rank
+    ``cumsum(commit) - 1`` onto the first candidates, so allocation
+    succeeds whenever ``sum(commit)`` blocks are free — the shape the
+    sharded store's trajectory imports need, where the commit mask is
+    scattered over a ``[n_particles, max_blocks]`` grid.  Each shard
+    pops from its own free stack (per-shard pools, DESIGN.md §5).
     """
     total = jnp.sum(commit)
     prefix = jnp.arange(n, dtype=jnp.int32) < total
@@ -166,6 +281,10 @@ def add_refs(pool: BlockPool, ids: jax.Array, amount: jax.Array | int = 1) -> Bl
     """Increment refcounts (the bookkeeping half of a lazy deep copy).
 
     ``ids`` may contain repeats and ``NULL_BLOCK`` entries (ignored).
+    Every id must reference a *live* block (refcount >= 1): resurrecting
+    a freed block would leave a stale entry in the free stack.  All
+    in-repo callers satisfy this by construction — they only add refs to
+    blocks reachable from a live table.
     """
     ids = ids.reshape(-1)
     amt = jnp.broadcast_to(jnp.asarray(amount, jnp.int32), ids.shape)
@@ -175,16 +294,30 @@ def add_refs(pool: BlockPool, ids: jax.Array, amount: jax.Array | int = 1) -> Bl
 
 
 def sub_refs(pool: BlockPool, ids: jax.Array, amount: jax.Array | int = 1) -> BlockPool:
-    """Decrement refcounts; blocks hitting zero are implicitly freed.
+    """Decrement refcounts; blocks hitting zero are freed onto the stack.
 
-    (Freeing is implicit: ``refcount == 0`` *is* the free list — rule 4 of
-    the paper's count scheme collapses to this in a cycle-free pool.)
+    (``refcount == 0`` *is* the free set — rule 4 of the paper's count
+    scheme collapses to this in a cycle-free pool.)  The newly-freed ids
+    are pushed incrementally: O(k) work for ``k = ids.size``, with a
+    first-occurrence claim pass deduplicating repeated ids, rather than
+    any rescan of the pool.
     """
     ids = ids.reshape(-1)
+    k = ids.shape[0]
     amt = jnp.broadcast_to(jnp.asarray(amount, jnp.int32), ids.shape)
-    sids = _scatter_ids(pool.num_blocks, ids)
+    nb = pool.num_blocks
+    sids = _scatter_ids(nb, ids)
     refcount = pool.refcount.at[sids].add(-amt, mode="drop")
-    return pool._replace(refcount=refcount)
+    gids = _gather_ids(ids)
+    flip = (ids >= 0) & (pool.refcount[gids] > 0) & (refcount[gids] == 0)
+    # One push per freed block: the first occurrence of each id claims it.
+    order = jnp.arange(k, dtype=jnp.int32)
+    claim = jnp.full((nb + 1,), k, dtype=jnp.int32).at[sids].min(order, mode="drop")
+    rep = flip & (claim[gids] == order)
+    stack, top = _push_free_ids(
+        pool.free_stack, pool.free_top, jnp.where(rep, ids, NULL_BLOCK)
+    )
+    return pool._replace(refcount=refcount, free_stack=stack, free_top=top)
 
 
 def freeze(pool: BlockPool, ids: jax.Array) -> BlockPool:
@@ -204,12 +337,15 @@ def write_blocks(
 ) -> BlockPool:
     """Overwrite whole blocks (``values: [k, *block_shape]``), masked.
 
-    Valid (unmasked, non-NULL) ids must be distinct; masked/NULL rows are
-    dropped rather than written.
+    Valid (unmasked, non-NULL) ids must be distinct; masked/NULL rows
+    land in the dump row rather than a live block.  The dump row is
+    re-zeroed afterwards, so pools stay comparable leaf-for-leaf across
+    code paths that differ only in dropped writes.
     """
     ids = ids.reshape(-1)
     sids = _scatter_ids(pool.num_blocks, ids, mask)
     data = pool.data.at[sids].set(values, mode="drop")
+    data = data.at[pool.num_blocks].set(0)
     return pool._replace(data=data)
 
 
@@ -226,7 +362,44 @@ def blocks_in_use(pool: BlockPool) -> jax.Array:
 
 def blocks_free(pool: BlockPool) -> jax.Array:
     """Allocation headroom.  Per-shard headroom matters for the sharded
-    store (DESIGN.md §4): cross-shard imports land as fresh allocations on
+    store (DESIGN.md §5): cross-shard imports land as fresh allocations on
     the *importing* shard, so a skewed resampling step consumes headroom
     there even while global occupancy is flat."""
     return jnp.sum(pool.refcount == 0)
+
+
+def rebuild_free_stack(pool: BlockPool) -> BlockPool:
+    """Recompute the canonical free stack from the refcount mask.
+
+    O(num_blocks); used by :func:`alloc_scan` (the debug allocator) and
+    available to tests.  Canonical form: free ids descending, so pops
+    yield ascending ids.
+    """
+    nb = pool.num_blocks
+    free = pool.refcount == 0
+    count = jnp.sum(free, dtype=jnp.int32)
+    asc = jnp.nonzero(free, size=nb, fill_value=-1)[0].astype(jnp.int32)
+    pos = jnp.clip(count - 1 - jnp.arange(nb, dtype=jnp.int32), 0, max(nb - 1, 0))
+    stack = jnp.where(jnp.arange(nb, dtype=jnp.int32) < count, asc[pos], NULL_BLOCK)
+    return pool._replace(free_stack=stack, free_top=count)
+
+
+def free_stack_consistent(pool: BlockPool) -> jax.Array:
+    """Scalar bool: does the free stack agree with the refcount mask?
+
+    True iff ``free_stack[:free_top]`` contains exactly the ids with
+    ``refcount == 0``, each once.  The verify half of the debug path —
+    jittable, used by the allocator property tests.
+    """
+    nb = pool.num_blocks
+    live = jnp.arange(nb, dtype=jnp.int32) < pool.free_top
+    ids = pool.free_stack
+    valid = jnp.all(~live | (ids >= 0))
+    sids = _scatter_ids(nb, jnp.where(live, ids, NULL_BLOCK))
+    counts = jnp.zeros((nb,), jnp.int32).at[sids].add(1, mode="drop")
+    free = (pool.refcount == 0).astype(jnp.int32)
+    return (
+        valid
+        & (pool.free_top == jnp.sum(free))
+        & jnp.all(counts == free)
+    )

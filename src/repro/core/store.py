@@ -36,7 +36,9 @@ All operations are functional, fixed-shape, and jittable; the store
 config is a hashable static argument.
 
 DESIGN.md §2 tabulates the full paper→array-world correspondence this
-module realizes; §4 describes how the store scales across devices
+module realizes; §3 specifies the kernelized write path (free-stack
+allocation, fused COW write, single-pass clone bookkeeping — the
+``use_kernels`` switch); §5 describes how the store scales across devices
 (:mod:`repro.distributed.sharded_store`), for which this module supplies
 the per-shard halves of the resampling exchange: :func:`clone_partial`
 (lazy, within-shard), :func:`materialize_batch` (export) and
@@ -56,6 +58,9 @@ import jax.numpy as jnp
 from repro.core import pool as pool_lib
 from repro.core.config import CopyMode
 from repro.core.pool import NULL_BLOCK, BlockPool
+from repro.kernels.cow_gather import cow_gather
+from repro.kernels.cow_write import cow_write
+from repro.kernels.refcount_update import refcount_update
 
 __all__ = [
     "StoreConfig",
@@ -87,6 +92,11 @@ class StoreConfig:
     item_shape: Tuple[int, ...] = ()
     dtype: str = "float32"
     num_blocks: int = 0  # pool capacity; 0 = auto
+    # Route the write path / clone bookkeeping / batch materialization
+    # through the Pallas kernels (cow_write, refcount_update, cow_gather;
+    # DESIGN.md §3).  Interpret mode on non-TPU backends; bit-exact with
+    # the fused jnp fallback on every non-dump pool row.
+    use_kernels: bool = False
 
     @property
     def capacity(self) -> int:
@@ -211,10 +221,6 @@ def _write_impl(
     store = store._replace(
         peak_blocks=jnp.maximum(store.peak_blocks, pool_lib.blocks_in_use(pool))
     )
-    # COW: initialize copied blocks from their originals.
-    src = jnp.where(need_copy, cur_bid, 0)
-    copied = pool.data[src]
-    pool = pool_lib.write_blocks(pool, new_bid, copied, mask=need_copy)
     # Release the writer's reference on blocks it copied away from.
     pool = pool_lib.sub_refs(pool, jnp.where(need_copy, cur_bid, NULL_BLOCK))
 
@@ -222,11 +228,18 @@ def _write_impl(
     tables = store.tables.at[rows, idx].set(
         jnp.where(mask, bid, store.tables[rows, idx])
     )
-    # Write the item itself: masked/NULL rows are routed out of bounds and
-    # dropped (two unmasked writers can never share a block: either the
-    # block was exclusively owned, or COW just gave each its own copy).
-    write_bid = jnp.where(mask & (bid >= 0), bid, pool.num_blocks)
-    data = pool.data.at[write_bid, pos].set(values, mode="drop")
+    # Fused COW + item write (DESIGN.md §3): copy rows stream their
+    # source block, in-place/fresh rows read-modify-write their own
+    # block, masked/NULL rows self-copy the dump row — one gather + one
+    # scatter total, instead of the legacy dense gather / copy scatter /
+    # item scatter trio.  Two unmasked writers can never share a
+    # destination: either the block was exclusively owned, or COW just
+    # gave each its own copy.
+    dst = jnp.where(mask & (bid >= 0), bid, pool.num_blocks)
+    src = jnp.where(need_copy, cur_bid, dst)
+    data = cow_write(
+        pool.data, src, dst, pos, values, use_kernel=cfg.use_kernels
+    )
     pool = pool._replace(data=data)
     lengths = store.lengths + jnp.where(mask, 1, 0) if advance else store.lengths
     return store._replace(pool=pool, tables=tables, lengths=lengths)
@@ -239,6 +252,33 @@ def _expand(mask: jax.Array, ndim: int) -> jax.Array:
 # ---------------------------------------------------------------------------
 # clone (the deep copy at resampling)
 # ---------------------------------------------------------------------------
+
+
+def _clone_bookkeeping(
+    cfg: StoreConfig, pool: BlockPool, old_tables: jax.Array, new_tables: jax.Array
+) -> BlockPool:
+    """Single-pass clone bookkeeping (DESIGN.md §3).
+
+    ``refcount += multiplicity(new) - multiplicity(old)``, the LAZY
+    freeze bits, and the newly-freed push onto the free stack — one
+    fused pass over the tables (:mod:`repro.kernels.refcount_update`)
+    instead of the legacy ``add_refs`` / ``sub_refs`` / ``freeze``
+    triple.  ``new_tables`` must only reference blocks live under
+    ``old_tables`` (always true for resampling ancestors), so no block
+    is resurrected behind the stack's back.
+    """
+    refcount, frozen, freed = refcount_update(
+        pool.refcount,
+        pool.frozen,
+        new_tables,
+        old_tables,
+        do_freeze=cfg.mode is CopyMode.LAZY,
+        use_kernel=cfg.use_kernels,
+    )
+    stack, top = pool_lib.push_free_mask(pool.free_stack, pool.free_top, freed)
+    return pool._replace(
+        refcount=refcount, frozen=frozen, free_stack=stack, free_top=top
+    )
 
 
 def clone(cfg: StoreConfig, store: ParticleStore, ancestors: jax.Array) -> ParticleStore:
@@ -255,14 +295,11 @@ def clone(cfg: StoreConfig, store: ParticleStore, ancestors: jax.Array) -> Parti
         store = store._replace(dense=dense, lengths=lengths)
         return _bump_peak(cfg, store)
 
-    pool = store.pool
-    new_tables = store.tables[ancestors]
     # refcount += multiplicity(new) - multiplicity(old); blocks dropping
-    # to zero are thereby freed (reference-counting GC).
-    pool = pool_lib.add_refs(pool, new_tables)
-    pool = pool_lib.sub_refs(pool, store.tables)
-    if cfg.mode is CopyMode.LAZY:
-        pool = pool_lib.freeze(pool, new_tables)
+    # to zero are thereby freed onto the stack (reference-counting GC) —
+    # all in one fused bookkeeping pass.
+    new_tables = store.tables[ancestors]
+    pool = _clone_bookkeeping(cfg, store.pool, store.tables, new_tables)
     store = store._replace(pool=pool, tables=new_tables, lengths=lengths)
     return _bump_peak(cfg, store)
 
@@ -276,7 +313,7 @@ def clone_partial(
     subsequent :func:`import_trajectories`.  The old generation's
     references are released for every slot, valid or not.  With ``valid``
     all-true this is exactly :func:`clone`; it exists for the sharded
-    store (DESIGN.md §4), where slots whose ancestor lives on another
+    store (DESIGN.md §5), where slots whose ancestor lives on another
     shard are filled by the cross-shard exchange instead of a refcount
     bump.
     """
@@ -288,14 +325,10 @@ def clone_partial(
         store = store._replace(dense=dense, lengths=lengths)
         return _bump_peak(cfg, store)
 
-    pool = store.pool
     new_tables = jnp.where(
         valid[:, None], store.tables[ancestors], NULL_BLOCK
     )
-    pool = pool_lib.add_refs(pool, new_tables)
-    pool = pool_lib.sub_refs(pool, store.tables)
-    if cfg.mode is CopyMode.LAZY:
-        pool = pool_lib.freeze(pool, new_tables)
+    pool = _clone_bookkeeping(cfg, store.pool, store.tables, new_tables)
     store = store._replace(pool=pool, tables=new_tables, lengths=lengths)
     return _bump_peak(cfg, store)
 
@@ -366,10 +399,7 @@ def trajectory(cfg: StoreConfig, store: ParticleStore, i: int | jax.Array) -> ja
     if cfg.mode is CopyMode.EAGER:
         return store.dense[i]
     tab = store.tables[i]
-    blocks = store.pool.data[jnp.where(tab >= 0, tab, 0)]
-    blocks = jnp.where(
-        _expand(tab >= 0, blocks.ndim), blocks, jnp.zeros_like(blocks)
-    )
+    blocks = cow_gather(store.pool.data, tab, use_kernel=cfg.use_kernels)
     return blocks.reshape((cfg.capacity, *cfg.item_shape))
 
 
@@ -396,9 +426,10 @@ def materialize_batch(
     if cfg.mode is CopyMode.EAGER:
         return store.dense[ids]
     tab = store.tables[ids]  # [k, max_blocks]
-    blocks = store.pool.data[jnp.where(tab >= 0, tab, 0)]
-    blocks = jnp.where(
-        _expand(tab >= 0, blocks.ndim), blocks, jnp.zeros_like(blocks)
+    # cow_gather: NULL entries yield zero blocks; kernel path streams one
+    # pool block per table entry via scalar prefetch.
+    blocks = cow_gather(
+        store.pool.data, tab.reshape(-1), use_kernel=cfg.use_kernels
     )
     return blocks.reshape((ids.shape[0], cfg.capacity, *cfg.item_shape))
 

@@ -1,7 +1,7 @@
 """Sharded multi-device ParticleStore: per-shard block pools under shard_map.
 
 This module builds the composition that :mod:`repro.core.pool` promises
-(DESIGN.md §4): each device shard owns an **independent** block pool and
+(DESIGN.md §5): each device shard owns an **independent** block pool and
 an ``n_local = N / num_shards`` slice of the population — per-shard free
 lists, per-shard refcounts, no cross-device allocation — the array-world
 analogue of the paper giving each thread its own context stack so
@@ -40,7 +40,8 @@ Two API layers:
   :class:`~repro.core.store.ParticleStore` whose leaves carry the shard
   axis (shard-major: global particle ``i`` lives on shard
   ``i // n_local``; pool data is the concatenation of the per-shard
-  pools, so global block id = local id + shard * pool_blocks).  These
+  pools *including each shard's trailing dump row*, so global data row =
+  local id + shard * (pool_blocks + 1)).  These
   serve :mod:`repro.serving.smc_decode`, the benchmarks, and tests.
 
 Capacity note: imports land as fresh allocations on the *importing*
@@ -218,8 +219,9 @@ def sharded_clone(
 # ---------------------------------------------------------------------------
 #
 # Leaves of the stacked store carry the shard axis: tables [N, mb] (ids
-# LOCAL to each shard's pool), lengths [N], pool.data [S*pool_blocks, ...],
-# pool.oom / peak_blocks [S].  `unstack`/`restack` bridge the [1]-leaf
+# LOCAL to each shard's pool), lengths [N], pool.data
+# [S*(pool_blocks+1), ...] (each shard's dump row rides along),
+# pool.oom / peak_blocks / free_top [S].  `unstack`/`restack` bridge the [1]-leaf
 # view shard_map hands a rank-preserving spec and the scalar leaves the
 # local store ops expect.
 
@@ -227,7 +229,10 @@ def sharded_clone(
 def unstack(store: ParticleStore) -> ParticleStore:
     """Inside shard_map: [1]-shaped scalar leaves -> local scalars."""
     return store._replace(
-        pool=store.pool._replace(oom=store.pool.oom.reshape(())),
+        pool=store.pool._replace(
+            oom=store.pool.oom.reshape(()),
+            free_top=store.pool.free_top.reshape(()),
+        ),
         peak_blocks=store.peak_blocks.reshape(()),
     )
 
@@ -235,16 +240,27 @@ def unstack(store: ParticleStore) -> ParticleStore:
 def restack(store: ParticleStore) -> ParticleStore:
     """Inside shard_map: local scalar leaves -> [1]-shaped for stacking."""
     return store._replace(
-        pool=store.pool._replace(oom=store.pool.oom.reshape((1,))),
+        pool=store.pool._replace(
+            oom=store.pool.oom.reshape((1,)),
+            free_top=store.pool.free_top.reshape((1,)),
+        ),
         peak_blocks=store.peak_blocks.reshape((1,)),
     )
 
 
 def store_specs(axis_name: str) -> ParticleStore:
-    """PartitionSpec pytree: every leaf sharded on its leading axis."""
+    """PartitionSpec pytree: every leaf sharded on its leading axis.
+
+    Pool bookkeeping (refcount, frozen, the free stack and its top) is
+    per-shard state: each shard allocates by popping its own stack, so
+    ``alloc_compact`` for trajectory imports never contends across
+    devices.
+    """
     sp = P(axis_name)
     return ParticleStore(
-        pool=BlockPool(data=sp, refcount=sp, frozen=sp, oom=sp),
+        pool=BlockPool(
+            data=sp, refcount=sp, frozen=sp, free_stack=sp, free_top=sp, oom=sp
+        ),
         dense=sp,
         tables=sp,
         lengths=sp,

@@ -2,6 +2,10 @@
 #
 #   cow_gather       — block-table gather / pool compaction (the COW
 #                      platform's data-movement primitive)
+#   cow_write        — fused copy-on-write + item write (the write half:
+#                      one read + one write per touched block)
+#   refcount_update  — fused clone bookkeeping (refcount delta + freeze
+#                      membership + newly-freed mask in one table pass)
 #   resample         — systematic resampling (tiled inverse-CDF counts)
 #   flash_attention  — train/prefill attention (causal + window + GQA)
 #   paged_attention  — decode attention over the COW block pool

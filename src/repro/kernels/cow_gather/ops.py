@@ -11,6 +11,7 @@ import jax
 
 from repro.kernels.cow_gather.kernel import cow_gather_pallas
 from repro.kernels.cow_gather.ref import cow_gather_ref
+from repro.kernels.dispatch import resolve_kernel_mode
 
 
 def cow_gather(
@@ -25,8 +26,7 @@ def cow_gather(
     pool: [num_blocks, *block_shape]; table: [k] int32.
     Returns [k, *block_shape].
     """
-    if use_kernel is None:
-        use_kernel = jax.default_backend() == "tpu" or interpret
+    use_kernel, interpret = resolve_kernel_mode(use_kernel, interpret)
     if not use_kernel:
         return cow_gather_ref(pool, table)
     shape = pool.shape

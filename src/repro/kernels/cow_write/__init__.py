@@ -1,0 +1,3 @@
+from repro.kernels.cow_write.ops import cow_write
+
+__all__ = ["cow_write"]

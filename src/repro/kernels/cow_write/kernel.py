@@ -1,0 +1,91 @@
+"""Pallas kernel: fused copy-on-write + item write over the block pool.
+
+The write half of the lazy-copy platform (DESIGN.md §3).  One grid step
+per particle: the source block is streamed HBM->VMEM once (scalar-
+prefetched index, so the DMA is issued before the body runs), the
+written item is merged at its in-block offset on the VPU, and the merged
+block is emitted at the destination index — Algorithm 5's GET->COPY and
+the item write fused into a single read + single write per touched
+block, instead of the gather / block-scatter / item-scatter trio the jnp
+path pays.
+
+Routing contract (established by ``store._write_impl``):
+
+* COW rows:       ``src = current block``, ``dst = fresh allocation``;
+* in-place/fresh: ``src = dst`` (read-modify-write of the own block);
+* masked-out:     ``src = dst = num_blocks`` — the pool's dump row, a
+  write-only slab nothing ever reads, so skipped rows cost one
+  cache-resident self-copy rather than a branch.
+
+The output aliases the pool (``input_output_aliases``), so untouched
+blocks are not rewritten.  Aliasing is race-free because no row's
+``src`` can be another row's ``dst`` within one call: copy sources are
+shared (refcount > 1, or frozen under LAZY) while destinations are
+fresh (refcount 0) or exclusively owned (refcount 1, unfrozen) — the
+dump row excepted, which only ever holds garbage.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(src_ref, dst_ref, pos_ref, data_ref, val_ref, out_ref):
+    del src_ref, dst_ref  # consumed by the index maps
+    i = pl.program_id(0)
+    pos = pos_ref[i]
+    block = data_ref[...]  # [1, block_elems] — the source block
+    val = val_ref[...]  # [1, item_elems]
+    be = block.shape[1]
+    ie = val.shape[1]
+    bs = be // ie
+    # Lane j belongs to item j // ie; merge the value into item `pos`.
+    item_of_lane = jax.lax.broadcasted_iota(jnp.int32, (1, be), 1) // ie
+    val_tiled = jnp.broadcast_to(val.reshape(1, 1, ie), (1, bs, ie)).reshape(1, be)
+    out_ref[...] = jnp.where(item_of_lane == pos, val_tiled, block)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cow_write_pallas(
+    data: jax.Array,  # [num_blocks + 1, block_elems]; trailing dump row
+    src: jax.Array,  # [n] int32 — block to stream (dump for skipped rows)
+    dst: jax.Array,  # [n] int32 — block to emit (dump for skipped rows)
+    pos: jax.Array,  # [n] int32 — item offset within the block
+    values: jax.Array,  # [n, item_elems]
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    n = src.shape[0]
+    block_elems = data.shape[1]
+    item_elems = values.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec(
+                (1, block_elems),
+                lambda i, src_ref, dst_ref, pos_ref: (src_ref[i], 0),
+            ),
+            pl.BlockSpec(
+                (1, item_elems),
+                lambda i, src_ref, dst_ref, pos_ref: (i, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_elems),
+            lambda i, src_ref, dst_ref, pos_ref: (dst_ref[i], 0),
+        ),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(data.shape, data.dtype),
+        input_output_aliases={3: 0},  # flat operand 3 = `data` (after 3 prefetch args)
+        interpret=interpret,
+    )(src, dst, pos, data, values)

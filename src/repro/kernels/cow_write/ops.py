@@ -1,0 +1,46 @@
+"""Public entry point for the fused COW write.
+
+On TPU this dispatches to the Pallas kernel; elsewhere (CPU hosts) a
+``use_kernel=True`` request runs the kernel body in interpret mode, and
+the default falls back to the jnp oracle.  Both paths are bit-exact on
+every non-dump row (the dump row's content is unspecified — see
+``repro.core.pool``).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.cow_write.kernel import cow_write_pallas
+from repro.kernels.cow_write.ref import cow_write_ref
+from repro.kernels.dispatch import resolve_kernel_mode
+
+
+def cow_write(
+    data: jax.Array,
+    src: jax.Array,
+    dst: jax.Array,
+    pos: jax.Array,
+    values: jax.Array,
+    *,
+    use_kernel: bool | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused copy-on-write + item write.
+
+    data: [num_blocks + 1, *block_shape] (trailing dump row);
+    src/dst/pos: [n] int32 (dump-routed rows are skipped);
+    values: [n, *item_shape].  Returns the updated data array.
+    """
+    use_kernel, interpret = resolve_kernel_mode(use_kernel, interpret)
+    if not use_kernel:
+        out = cow_write_ref(data, src, dst, pos, values)
+    else:
+        shape = data.shape
+        flat = data.reshape(shape[0], -1)
+        vals = values.reshape(values.shape[0], -1).astype(data.dtype)
+        out = cow_write_pallas(flat, src, dst, pos, vals, interpret=interpret)
+        out = out.reshape(shape)
+    # Skipped rows self-copied the dump row in whatever order the backend
+    # chose; re-zero it so pools compare leaf-for-leaf across paths.
+    return out.at[out.shape[0] - 1].set(0)

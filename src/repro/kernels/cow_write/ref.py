@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for cow_write — also the CPU/fallback write path.
+
+Same routing contract as the kernel (see kernel.py): one gather of the
+source blocks, item merge, one scatter to the destinations.  Masked-out
+rows carry ``src = dst = num_blocks`` (the dump row), so this is a
+single fused gather+scatter with no separate item pass — the fix for
+the dense-copy waste the legacy path paid (it gathered *every* row's
+block, scattered the copies, then issued a third scatter for the items).
+
+Only the dump row ever sees duplicate destination indices; its content
+is unspecified and unread.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cow_write_ref(
+    data: jax.Array,  # [num_blocks + 1, *block_shape]
+    src: jax.Array,  # [n] int32
+    dst: jax.Array,  # [n] int32
+    pos: jax.Array,  # [n] int32
+    values: jax.Array,  # [n, *item_shape]
+) -> jax.Array:
+    n = src.shape[0]
+    blocks = data[src]  # [n, block_size, *item]
+    blocks = blocks.at[jnp.arange(n), pos].set(values.astype(data.dtype))
+    return data.at[dst].set(blocks)

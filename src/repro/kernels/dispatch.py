@@ -1,0 +1,25 @@
+"""Shared backend-dispatch policy for kernel entry points.
+
+Every ops.py wrapper resolves the same way: ``use_kernel=None`` means
+"kernel on TPU, oracle elsewhere" (interpret requests opt in to the
+kernel body), and a kernel request off-TPU runs in interpret mode —
+Pallas has no compiled CPU path.  Centralized so the policy can't drift
+between the COW kernel packages.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def resolve_kernel_mode(
+    use_kernel: bool | None, interpret: bool
+) -> Tuple[bool, bool]:
+    """Returns the resolved ``(use_kernel, interpret)`` pair."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu" or interpret
+    if use_kernel and jax.default_backend() != "tpu":
+        interpret = True
+    return use_kernel, interpret

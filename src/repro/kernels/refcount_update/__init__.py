@@ -1,0 +1,3 @@
+from repro.kernels.refcount_update.ops import refcount_update
+
+__all__ = ["refcount_update"]

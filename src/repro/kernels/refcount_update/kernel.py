@@ -1,0 +1,82 @@
+"""Pallas kernel: fused clone bookkeeping — refcount delta + membership.
+
+The lazy deep copy at resampling (Algorithm 3 + FREEZE of Algorithm 7)
+is pure bookkeeping: ``refcount += multiplicity(new_tables) -
+multiplicity(old_tables)``, plus the frozen bits for every block the new
+generation can reach.  The legacy path made three scatter passes over
+the pool (``add_refs``, ``sub_refs``, ``freeze``); here both the signed
+histogram and the membership mask accumulate in VMEM in a single pass
+over the flattened tables (DESIGN.md §3).
+
+Grid: one step per table chunk.  Each step one-hot-expands its chunk of
+new/old entries against the block-id lane (``[chunk, nb]`` compares on
+the VPU — compute-cheap, and the tables are read exactly once from HBM)
+and accumulates into the ``[1, nb]`` delta / membership outputs, whose
+index map pins them to a single revisited block.  NULL (-1) entries
+match no block id and drop out for free.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_CHUNK = 256
+
+
+def _kernel(new_ref, old_ref, delta_ref, member_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        delta_ref[...] = jnp.zeros_like(delta_ref)
+        member_ref[...] = jnp.zeros_like(member_ref)
+
+    nb = delta_ref.shape[1]
+    chunk = new_ref.shape[1]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (chunk, nb), 1)
+    new_hits = new_ref[...].reshape(chunk, 1) == lane  # [chunk, nb]
+    old_hits = old_ref[...].reshape(chunk, 1) == lane
+    delta_ref[...] += (
+        new_hits.astype(jnp.int32) - old_hits.astype(jnp.int32)
+    ).sum(axis=0, keepdims=True)
+    member_ref[...] |= new_hits.any(axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("num_blocks", "interpret"))
+def refcount_delta_pallas(
+    new_tables: jax.Array,  # [e] int32, flattened (NULL = -1 allowed)
+    old_tables: jax.Array,  # [e] int32
+    *,
+    num_blocks: int,
+    interpret: bool = False,
+):
+    """Returns ``(delta [num_blocks] int32, member [num_blocks] bool)``."""
+    e = new_tables.shape[0]
+    chunk = min(_CHUNK, max(e, 1))
+    pad = (-e) % chunk
+    new_p = jnp.pad(new_tables, (0, pad), constant_values=-1).reshape(-1, chunk)
+    old_p = jnp.pad(old_tables, (0, pad), constant_values=-1).reshape(-1, chunk)
+    steps = new_p.shape[0]
+    delta, member = pl.pallas_call(
+        _kernel,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, num_blocks), lambda i: (0, 0)),
+            pl.BlockSpec((1, num_blocks), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, num_blocks), jnp.int32),
+            jax.ShapeDtypeStruct((1, num_blocks), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(new_p, old_p)
+    return delta[0], member[0]

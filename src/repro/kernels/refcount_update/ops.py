@@ -1,0 +1,48 @@
+"""Public entry point for the fused clone bookkeeping.
+
+``refcount_update`` replaces the ``add_refs`` -> ``sub_refs`` ->
+``freeze`` triple of the legacy clone with one delta pass: it returns
+the new refcount, the new frozen mask, and the newly-freed mask (blocks
+whose refcount dropped to zero) so the caller can push them onto the
+pool's free stack in the same step (``pool.push_free_mask``).
+
+Bit-exact with the legacy triple: integer refcount arithmetic commutes,
+and FREEZE is idempotent membership.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.kernels.dispatch import resolve_kernel_mode
+from repro.kernels.refcount_update.kernel import refcount_delta_pallas
+from repro.kernels.refcount_update.ref import refcount_delta_ref
+
+
+def refcount_update(
+    refcount: jax.Array,  # [num_blocks] int32
+    frozen: jax.Array,  # [num_blocks] bool
+    new_tables: jax.Array,  # any shape, int32 (NULL = -1 allowed)
+    old_tables: jax.Array,  # any shape, int32
+    *,
+    do_freeze: bool,
+    use_kernel: bool | None = None,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns ``(refcount', frozen', newly_freed [num_blocks] bool)``."""
+    use_kernel, interpret = resolve_kernel_mode(use_kernel, interpret)
+    nb = refcount.shape[0]
+    new_flat = new_tables.reshape(-1)
+    old_flat = old_tables.reshape(-1)
+    if not use_kernel:
+        delta, member = refcount_delta_ref(new_flat, old_flat, nb)
+    else:
+        delta, member = refcount_delta_pallas(
+            new_flat, old_flat, num_blocks=nb, interpret=interpret
+        )
+    new_refcount = refcount + delta
+    newly_freed = (refcount > 0) & (new_refcount == 0)
+    new_frozen = frozen | member if do_freeze else frozen
+    return new_refcount, new_frozen, newly_freed

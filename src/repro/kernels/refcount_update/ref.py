@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the fused clone bookkeeping.
+
+Computes the same signed histogram + membership the kernel produces, as
+two drop-mode scatters over exactly-sized accumulators (still one
+logical pass: the tables are read once, no intermediate refcount state
+is materialized the way chained add_refs/sub_refs/freeze did).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def refcount_delta_ref(
+    new_tables: jax.Array,  # [e] int32 (NULL = -1 allowed)
+    old_tables: jax.Array,  # [e] int32
+    num_blocks: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns ``(delta [num_blocks] int32, member [num_blocks] bool)``."""
+
+    def sids(ids):
+        return jnp.where(ids >= 0, ids, num_blocks)
+
+    delta = (
+        jnp.zeros((num_blocks,), jnp.int32)
+        .at[sids(new_tables)]
+        .add(1, mode="drop")
+        .at[sids(old_tables)]
+        .add(-1, mode="drop")
+    )
+    member = (
+        jnp.zeros((num_blocks,), jnp.bool_)
+        .at[sids(new_tables)]
+        .set(True, mode="drop")
+    )
+    return delta, member

@@ -1,3 +1,12 @@
 from repro.roofline.analysis import TPU_V5E, Roofline, analyze_compiled
+from repro.roofline.write_path import WRITE_PATHS, WriteCost, append_cost, clone_cost
 
-__all__ = ["TPU_V5E", "Roofline", "analyze_compiled"]
+__all__ = [
+    "TPU_V5E",
+    "Roofline",
+    "analyze_compiled",
+    "WRITE_PATHS",
+    "WriteCost",
+    "append_cost",
+    "clone_cost",
+]

@@ -1,0 +1,120 @@
+"""Analytic HBM-traffic model for the COW write path (DESIGN.md §3).
+
+The paper's bound (Algorithms 3/5, Remark 1) is that a write moves at
+most one block (the COW copy) and a clone moves none — everything else
+is bookkeeping.  This module prices the three implementations of that
+contract in bytes-moved and HBM passes, so benchmarks and tests can
+assert the kernelization's op-count reduction on hosts with no TPU
+(wall-clocking an interpret-mode kernel would measure the interpreter):
+
+``legacy``
+    the pre-kernelization jnp path: an O(num_blocks) ``nonzero``
+    free-scan per alloc, a dense gather of *every* row's source block,
+    a masked block-copy scatter, a separate item scatter, and separate
+    refcount passes — six round-trips over pool state per append.
+``fused_jnp``
+    the current fallback: free-stack alloc (O(n) pops), one fused
+    gather + one scatter over all n rows (masked rows self-copy the
+    dump row), single-pass clone bookkeeping.
+``kernel``
+    the Pallas path: one block read + one block write per *touched*
+    row (cow_write), tables read once per clone (refcount_update);
+    skipped rows cost a cache-resident dump-row self-copy, charged 0
+    HBM bytes.
+
+The model is the charitable in-place one: scatters are charged for the
+rows they write, not for their full operand (XLA's ``cost_analysis``
+charges full operands, which flatters this comparison even further —
+``benchmarks/bench_write_path.py`` prints the measured numbers next to
+the model).  All callers of the model pass ``touched``/``copies``
+counts, so masked ``write_at`` sweeps price correctly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+WRITE_PATHS = ("legacy", "fused_jnp", "kernel")
+
+_ID = 4  # int32 bookkeeping entry bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class WriteCost:
+    """Bytes moved and HBM passes for one store operation.
+
+    ``passes`` counts round-trips over pool/block-shaped state (the
+    "six HBM round-trips" of the legacy path); ``bytes`` is the total
+    traffic under the in-place model above.
+    """
+
+    passes: int
+    bytes: int
+
+    def speedup_over(self, other: "WriteCost") -> float:
+        """How much less traffic ``self`` moves than ``other``."""
+        return other.bytes / max(self.bytes, 1)
+
+
+def append_cost(
+    path: str,
+    *,
+    n: int,
+    touched: int,
+    copies: int,
+    num_blocks: int,
+    block_bytes: int,
+    item_bytes: int,
+) -> WriteCost:
+    """One ``append``/``write_at`` over ``n`` rows.
+
+    ``touched``: rows that actually write (unmasked, non-OOM);
+    ``copies``: the subset that COWs a shared block.  For the paper's
+    motivating append-heavy pattern ``touched == n`` and ``copies`` is
+    the post-resampling divergence front.
+    """
+    if path == "legacy":
+        scan = 2 * num_blocks * _ID  # nonzero over the free mask
+        gather = 2 * n * block_bytes  # every row's source block, dense
+        copy_scatter = n * block_bytes + copies * block_bytes
+        item_scatter = n * item_bytes + touched * item_bytes
+        bookkeeping = 3 * 2 * n * _ID  # alloc refcount+frozen, release
+        return WriteCost(
+            passes=6, bytes=scan + gather + copy_scatter + item_scatter + bookkeeping
+        )
+    if path == "fused_jnp":
+        gather = 2 * n * block_bytes  # src rows (dump rows included)
+        scatter = n * block_bytes  # one fused write, item pre-merged
+        bookkeeping = 3 * 2 * n * _ID + 2 * n * _ID  # alloc pops + claim push
+        return WriteCost(passes=3, bytes=gather + scatter + bookkeeping)
+    if path == "kernel":
+        data = 2 * touched * block_bytes  # one read + one write per touched row
+        scalars = 3 * n * _ID + n * item_bytes  # prefetched src/dst/pos + values
+        bookkeeping = 3 * 2 * n * _ID
+        return WriteCost(passes=2, bytes=data + scalars + bookkeeping)
+    raise ValueError(f"unknown write path {path!r}; want one of {WRITE_PATHS}")
+
+
+def clone_cost(
+    path: str,
+    *,
+    table_entries: int,
+    num_blocks: int,
+) -> WriteCost:
+    """One resampling ``clone`` (``table_entries = n * max_blocks``).
+
+    Lazy clones move zero payload in every implementation; the model
+    prices the bookkeeping passes: legacy walks the tables three times
+    (``add_refs``/``sub_refs``/``freeze``) with a refcount round-trip
+    each, the fused paths walk them once and apply one delta.
+    """
+    if path == "legacy":
+        tables = 3 * table_entries * _ID
+        refcount = 3 * 2 * num_blocks * _ID
+        return WriteCost(passes=3, bytes=tables + refcount)
+    if path in ("fused_jnp", "kernel"):
+        tables = 2 * table_entries * _ID  # new + old, read once
+        refcount = 2 * num_blocks * _ID  # one delta apply
+        push = 2 * num_blocks * _ID  # newly-freed mask -> stack
+        return WriteCost(passes=1, bytes=tables + refcount + push)
+    raise ValueError(f"unknown write path {path!r}; want one of {WRITE_PATHS}")

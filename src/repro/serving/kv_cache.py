@@ -59,7 +59,7 @@ class KVCacheConfig:
 
 
 class PagedKVCache(NamedTuple):
-    pool: BlockPool  # data [num_blocks, L, 2, bs, KVH, hd]
+    pool: BlockPool  # data [num_blocks + 1, L, 2, bs, KVH, hd] (dump row last)
     tables: jax.Array  # [max_seqs, max_blocks_per_seq] int32
     lengths: jax.Array  # [max_seqs] int32
 
@@ -110,7 +110,9 @@ def ensure_writable(
     need_block = fresh | need_copy
 
     pool, new_bid = pool_lib.alloc(cache.pool, n, commit=need_block)
-    src = jnp.where(need_copy, cur, 0)
+    # Rows that don't COW read the dump row instead of materializing a
+    # live block's copy (same masked-gather fix as store._write_impl).
+    src = jnp.where(need_copy, cur, pool.num_blocks)
     pool = pool_lib.write_blocks(pool, new_bid, pool.data[src], mask=need_copy)
     pool = pool_lib.sub_refs(pool, jnp.where(need_copy, cur, NULL_BLOCK))
     bid = jnp.where(need_block, new_bid, cur)
@@ -137,6 +139,9 @@ def write_kv(
     data = data.at[sid, layer, 1, pos].set(
         v.astype(cache.pool.data.dtype), mode="drop"
     )
+    # Masked rows landed in the dump row; re-zero its touched layer so
+    # the kept-zero dump-row contract (repro.core.pool) holds here too.
+    data = data.at[cache.pool.num_blocks, layer].set(0)
     return cache._replace(pool=cache.pool._replace(data=data))
 
 
@@ -145,7 +150,8 @@ def advance(cache: PagedKVCache, mask: jax.Array) -> PagedKVCache:
 
 
 def layer_views(cache: PagedKVCache, layer) -> Tuple[jax.Array, jax.Array]:
-    """(k_pool, v_pool) as [num_blocks, bs, KVH, hd] for paged attention."""
+    """(k_pool, v_pool) as [num_blocks + 1, bs, KVH, hd] for paged
+    attention (the trailing dump row is unreachable through any table)."""
     return cache.pool.data[:, layer, 0], cache.pool.data[:, layer, 1]
 
 

@@ -18,7 +18,7 @@ Token *histories* get the same treatment as the KV data: they live in a
 :class:`repro.core.store.ParticleStore` (int32 items), so a resampling
 step clones them by refcount bump instead of the O(N·T) gather a dense
 token matrix would pay.  Passing ``mesh=`` shards that store across
-devices (per-shard block pools, boundary-only exchange — DESIGN.md §4);
+devices (per-shard block pools, boundary-only exchange — DESIGN.md §5);
 the KV cache itself stays on the default device, so this wires the
 population's trajectory state, not the model, across the mesh.
 """
@@ -53,6 +53,7 @@ class _TokenTrace:
         block_size: int,
         mesh: Optional[Mesh],
         data_axes: str,
+        use_kernels: bool = False,
     ):
         block_size = min(block_size, max(steps, 1))
         self.cfg = StoreConfig(
@@ -62,6 +63,7 @@ class _TokenTrace:
             max_blocks=-(-max(steps, 1) // block_size),
             item_shape=(),
             dtype="int32",
+            use_kernels=use_kernels,
         )
         self.mesh = mesh
         if mesh is not None:
@@ -121,6 +123,7 @@ class SMCDecoder:
         token_copy_mode: CopyMode = CopyMode.LAZY_SR,
         mesh: Optional[Mesh] = None,
         data_axes: str = "shards",
+        use_store_kernels: bool = False,
     ):
         from repro.serving.kv_cache import KVCacheConfig
 
@@ -143,6 +146,9 @@ class SMCDecoder:
         self.mesh = mesh
         self.data_axes = data_axes
         self.token_block_size = block_size
+        # Pallas write-path kernels for the token-history store
+        # (DESIGN.md §3); the KV pool keeps its own paged kernels.
+        self.use_store_kernels = use_store_kernels
 
     def run(self, key: jax.Array, prompt: jax.Array, steps: int) -> SMCDecodeResult:
         n = self.n
@@ -162,6 +168,7 @@ class SMCDecoder:
             self.token_block_size,
             self.mesh,
             self.data_axes,
+            use_kernels=self.use_store_kernels,
         )
         esss, useds, ress = [], [], []
         for t in range(steps):

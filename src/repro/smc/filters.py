@@ -17,7 +17,7 @@ Setting ``FilterConfig.mesh`` scales N across devices: the scan runs
 under ``shard_map`` with an independent per-shard block pool, resampling
 all-gathers only the weight vector, and only trajectories whose ancestor
 lives on another shard are materialized and exchanged
-(:mod:`repro.distributed.sharded_store`, DESIGN.md §4).
+(:mod:`repro.distributed.sharded_store`, DESIGN.md §5).
 """
 
 from __future__ import annotations
@@ -85,7 +85,11 @@ class FilterConfig:
     pool_blocks: int = 0  # 0 = auto
     max_retries: int = 0  # alive-filter retries (0 = plain PF)
     dtype: str = "float32"
-    # Multi-device scaling (DESIGN.md §4): when ``mesh`` is set, the N
+    # Route the store's write path / clone bookkeeping through the Pallas
+    # kernels (cow_write / refcount_update / cow_gather, DESIGN.md §3);
+    # interpret-mode on CPU, bit-exact with the jnp path.
+    use_kernels: bool = False
+    # Multi-device scaling (DESIGN.md §5): when ``mesh`` is set, the N
     # particles are split over the ``data_axes`` mesh axis — each shard
     # owns an independent block pool, resampling all-gathers only the
     # [N] weight vector, and only boundary-crossing trajectories are
@@ -105,6 +109,7 @@ class FilterConfig:
             item_shape=record_shape,
             dtype=self.dtype,
             num_blocks=self.pool_blocks,
+            use_kernels=self.use_kernels,
         )
 
 
@@ -297,7 +302,7 @@ class ParticleFilter:
     def _run_sharded(
         self, key: jax.Array, params: Any, observations: jax.Array, simulate: bool
     ) -> FilterResult:
-        """The bootstrap filter scan under ``shard_map`` (DESIGN.md §4).
+        """The bootstrap filter scan under ``shard_map`` (DESIGN.md §5).
 
         Mirrors :meth:`_run` operation for operation: with a 1-device
         mesh every collective is the identity and the same keys drive the

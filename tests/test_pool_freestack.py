@@ -1,0 +1,221 @@
+"""Allocator invariants for the free-stack BlockPool (DESIGN.md §3).
+
+The free stack (``free_stack``/``free_top``) must agree with the
+``refcount == 0`` mask after *any* interleaving of ``alloc`` /
+``sub_refs`` / store-level ``clone``s, the sticky ``oom`` flag must fire
+exactly when the stack empties under a committed request, and the hot
+allocation path must never trace an O(num_blocks) ``nonzero`` scan
+(that's now the :func:`repro.core.pool.alloc_scan` debug path).
+
+Property tests run under hypothesis when it is installed (the dev
+extra) and fall back to a fixed seeded sweep otherwise, so the
+invariants are exercised on bare CI hosts too.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pool as pool_lib
+from repro.core import store as store_lib
+from repro.core.config import CopyMode
+from repro.core.store import StoreConfig
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare CI hosts
+    HAVE_HYPOTHESIS = False
+
+
+def seeded_property(max_examples: int = 25, fallback_seeds: int = 12):
+    """@given(seed) under hypothesis, a seeded parametrize without."""
+
+    def deco(fn):
+        if HAVE_HYPOTHESIS:
+            return settings(max_examples=max_examples, deadline=None)(
+                given(seed=st.integers(0, 10_000))(fn)
+            )
+        return pytest.mark.parametrize("seed", range(fallback_seeds))(fn)
+
+    return deco
+
+
+def consistent(pool) -> bool:
+    return bool(pool_lib.free_stack_consistent(pool))
+
+
+class TestFreeStackInvariants:
+    @seeded_property()
+    def test_pool_interleavings(self, seed):
+        """free_stack == {refcount == 0} after arbitrary alloc/sub_refs
+        interleavings, and oom goes sticky exactly on over-commit."""
+        rng = np.random.default_rng(seed)
+        nb = int(rng.integers(4, 17))
+        pool = pool_lib.init(nb, (2,))
+        live: dict[int, int] = {}  # id -> refcount (python model)
+        expect_oom = False
+        for _ in range(30):
+            op = rng.integers(0, 3)
+            if op == 0:  # alloc with a random commit mask
+                k = int(rng.integers(1, 6))
+                commit = rng.integers(0, 2, k).astype(bool)
+                free_before = nb - len(live)
+                pool, ids = pool_lib.alloc(pool, k, commit=jnp.asarray(commit))
+                ids = np.asarray(ids)
+                granted = int((ids >= 0).sum())
+                # candidate i exists iff i < free_before
+                expect_oom |= bool((commit & (np.arange(k) >= free_before)).any())
+                assert granted == int(
+                    (commit & (np.arange(k) < free_before)).sum()
+                )
+                for b in ids[ids >= 0]:
+                    assert int(b) not in live
+                    live[int(b)] = 1
+            elif op == 1 and live:  # add refs to live blocks (repeats ok)
+                picks = rng.choice(list(live), size=rng.integers(1, 4))
+                pool = pool_lib.add_refs(pool, jnp.asarray(picks, jnp.int32))
+                for b in picks:
+                    live[int(b)] += 1
+            elif op == 2 and live:  # release refs, possibly freeing
+                picks = []
+                budget = dict(live)
+                for b in rng.permutation(list(live))[: rng.integers(1, 4)]:
+                    take = int(rng.integers(1, budget[int(b)] + 1))
+                    picks += [int(b)] * take
+                    budget[int(b)] -= take
+                pool = pool_lib.sub_refs(pool, jnp.asarray(picks, jnp.int32))
+                for b in picks:
+                    live[b] -= 1
+                    if live[b] == 0:
+                        del live[b]
+            assert consistent(pool), (seed, live)
+            assert int(pool_lib.blocks_in_use(pool)) == len(live)
+        assert bool(pool.oom) == expect_oom
+
+    @seeded_property(max_examples=20, fallback_seeds=8)
+    def test_store_programs_keep_stack_consistent(self, seed):
+        """Random append/clone/write_at programs (the satellite's
+        'arbitrary interleavings ... clone') preserve the invariant in
+        every lazy mode, on both the jnp and kernel paths."""
+        rng = np.random.default_rng(seed)
+        use_kernels = bool(seed % 2)
+        for mode in (CopyMode.LAZY, CopyMode.LAZY_SR):
+            cfg = StoreConfig(
+                mode=mode,
+                n=4,
+                block_size=3,
+                max_blocks=5,
+                num_blocks=40,
+                use_kernels=use_kernels,
+            )
+            s = store_lib.create(cfg)
+            length = 0
+            r = np.random.default_rng(seed)
+            for step in range(14):
+                op = r.integers(0, 3)
+                if op == 0 and length < cfg.capacity:
+                    s = store_lib.append(cfg, s, jnp.full((4,), float(step)))
+                    length += 1
+                elif op == 1 and length:
+                    anc = jnp.asarray(r.integers(0, 4, 4).astype(np.int32))
+                    s = store_lib.clone(cfg, s, anc)
+                elif length:
+                    s = store_lib.write_at(
+                        cfg,
+                        s,
+                        jnp.full((4,), int(r.integers(0, length)), jnp.int32),
+                        jnp.full((4,), -float(step)),
+                        mask=jnp.asarray(r.integers(0, 2, 4).astype(bool)),
+                    )
+                assert consistent(s.pool), (seed, mode, use_kernels, step)
+                assert not bool(s.pool.oom)
+
+    def test_oom_fires_exactly_when_stack_empties(self):
+        pool = pool_lib.init(3, (2,))
+        pool, ids = pool_lib.alloc(pool, 3)  # empties the stack exactly
+        assert int(pool.free_top) == 0 and not bool(pool.oom)
+        pool, ids = pool_lib.alloc(pool, 1)  # nothing left -> sticky oom
+        assert bool(pool.oom) and int(np.asarray(ids)[0]) == -1
+        pool = pool_lib.sub_refs(pool, jnp.array([0, 1, 2]))
+        assert int(pool.free_top) == 3 and consistent(pool)
+        pool, _ = pool_lib.alloc(pool, 2)
+        assert bool(pool.oom)  # sticky
+        # an uncommitted request beyond the stack is NOT an oom
+        pool2 = pool_lib.init(2, (2,))
+        pool2, _ = pool_lib.alloc(
+            pool2, 4, commit=jnp.array([True, True, False, False])
+        )
+        assert not bool(pool2.oom) and int(pool2.free_top) == 0
+
+    def test_failed_alloc_is_identity_on_the_stack(self):
+        """An alloc whose commits all fail must not reorder the stack —
+        the 1-shard sharded exchange relies on this for bit-exactness."""
+        pool = pool_lib.init(8, (2,))
+        pool, _ = pool_lib.alloc(pool, 3)
+        before = np.asarray(pool.free_stack).copy(), int(pool.free_top)
+        pool2, ids = pool_lib.alloc_compact(pool, 6, commit=jnp.zeros((6,), bool))
+        np.testing.assert_array_equal(np.asarray(pool2.free_stack), before[0])
+        assert int(pool2.free_top) == before[1]
+        assert np.all(np.asarray(ids) == -1)
+
+    def test_alloc_scan_interleaves_with_alloc(self):
+        """The debug scan allocator rebuilds a canonical stack the fast
+        allocator can continue from."""
+        pool = pool_lib.init(8, (2,))
+        pool, a = pool_lib.alloc(pool, 2)
+        pool, b = pool_lib.alloc_scan(pool, 2)
+        assert consistent(pool)
+        pool = pool_lib.sub_refs(pool, a)
+        pool, c = pool_lib.alloc(pool, 3)
+        assert consistent(pool)
+        taken = set(np.asarray(b).tolist()) | set(np.asarray(c).tolist())
+        assert len(taken) == 5  # all distinct, no double-grant
+
+
+class TestNoScanOnHotPath:
+    @pytest.mark.parametrize("use_kernels", [False, True])
+    def test_append_traces_no_nonzero(self, monkeypatch, use_kernels):
+        """The jaxpr of a jitted append must contain no free-scan: count
+        jnp.nonzero calls during tracing (tracing runs the python body)."""
+        calls = {"n": 0}
+        orig = jnp.nonzero
+
+        def counting(*args, **kwargs):
+            calls["n"] += 1
+            return orig(*args, **kwargs)
+
+        monkeypatch.setattr(jnp, "nonzero", counting)
+        cfg = StoreConfig(
+            mode=CopyMode.LAZY_SR,
+            n=8,
+            block_size=4,
+            max_blocks=8,
+            use_kernels=use_kernels,
+        )
+        s = store_lib.create(cfg)
+        jax.make_jaxpr(lambda st, v: store_lib.append(cfg, st, v))(
+            s, jnp.ones((8,))
+        )
+        jax.make_jaxpr(
+            lambda st, p, v: store_lib.write_at(cfg, st, p, v)
+        )(s, jnp.zeros((8,), jnp.int32), jnp.ones((8,)))
+        assert calls["n"] == 0
+
+    def test_debug_scan_still_scans(self, monkeypatch):
+        """...while alloc_scan (the debug path) does use the scan."""
+        calls = {"n": 0}
+        orig = jnp.nonzero
+
+        def counting(*args, **kwargs):
+            calls["n"] += 1
+            return orig(*args, **kwargs)
+
+        monkeypatch.setattr(jnp, "nonzero", counting)
+        pool = pool_lib.init(8, (2,))
+        jax.make_jaxpr(lambda p: pool_lib.alloc_scan(p, 2)[0])(pool)
+        assert calls["n"] > 0

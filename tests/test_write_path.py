@@ -1,0 +1,236 @@
+"""Kernelized write path: interpret-mode parity + roofline acceptance.
+
+``cow_write`` and ``refcount_update`` must be bit-exact with their
+``ref.py`` oracles, with each other across the ``StoreConfig.use_kernels``
+switch (jnp fused path vs interpret-mode Pallas path) for all three
+CopyModes — including ``write_at`` with partial masks and NULL table
+entries — and with the pre-kernelization six-pass jnp path (reconstructed
+in ``benchmarks/bench_write_path.py``).  Pool content is compared on the
+``num_blocks`` live rows; the dump row is kept zero by contract.
+
+The roofline gate (the PR's acceptance criterion) asserts the byte/pass
+reduction through :mod:`repro.roofline.write_path` — host-independent,
+so it runs on CPU CI where interpret-mode wall-clock would be
+meaningless.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pool as pool_lib
+from repro.core import store as store_lib
+from repro.core.config import ALL_MODES, CopyMode
+from repro.core.store import StoreConfig
+from repro.kernels.cow_write.ops import cow_write
+from repro.kernels.cow_write.ref import cow_write_ref
+from repro.kernels.refcount_update.ops import refcount_update
+from repro.kernels.refcount_update.ref import refcount_delta_ref
+from repro.roofline.write_path import append_cost, clone_cost
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestCowWriteKernel:
+    @pytest.mark.parametrize(
+        "nb,bs,item", [(8, 4, ()), (16, 2, (3,)), (8, 8, (2, 2))]
+    )
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32, jnp.bfloat16])
+    def test_parity_with_ref(self, nb, bs, item, dtype):
+        n = 6
+        if dtype == jnp.int32:
+            data = jax.random.randint(KEY, (nb + 1, bs, *item), 0, 100, dtype)
+            values = jax.random.randint(KEY, (n, *item), 0, 100, dtype)
+        else:
+            data = jax.random.normal(KEY, (nb + 1, bs, *item), dtype)
+            values = jax.random.normal(jax.random.PRNGKey(1), (n, *item), dtype)
+        data = data.at[nb].set(0)
+        # rows: COW (0->5), in-place (1->1), fresh (6->6), dump-skips
+        src = jnp.array([0, 1, 6, nb, nb, 2], jnp.int32)
+        dst = jnp.array([5, 1, 6, nb, nb, 7], jnp.int32)
+        pos = jnp.array([2, 0, bs - 1, 0, 1, 1], jnp.int32)
+        out_k = cow_write(data, src, dst, pos, values, use_kernel=True)
+        out_r = cow_write(data, src, dst, pos, values, use_kernel=False)
+        np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+        # dump row stays zero on both paths
+        assert not np.asarray(out_k[nb]).any()
+        # untouched rows bitwise-preserved
+        untouched = sorted(set(range(nb)) - set(np.asarray(dst).tolist()))
+        np.testing.assert_array_equal(
+            np.asarray(out_k)[untouched], np.asarray(data)[untouched]
+        )
+
+    def test_ref_matches_manual_semantics(self):
+        data = jnp.arange(3 * 4, dtype=jnp.float32).reshape(3, 4)  # nb=2 + dump
+        out = cow_write_ref(
+            data,
+            jnp.array([0], jnp.int32),
+            jnp.array([1], jnp.int32),
+            jnp.array([2], jnp.int32),
+            jnp.array([9.0]),
+        )
+        np.testing.assert_allclose(np.asarray(out[1]), [0.0, 1.0, 9.0, 3.0])
+        np.testing.assert_allclose(np.asarray(out[0]), np.asarray(data[0]))
+
+
+class TestRefcountUpdateKernel:
+    @pytest.mark.parametrize("nb,e", [(8, 12), (40, 64), (16, 300)])
+    def test_parity_with_ref(self, nb, e):
+        rng = np.random.default_rng(nb + e)
+        new = jnp.asarray(rng.integers(-1, nb, e).astype(np.int32))
+        old = jnp.asarray(rng.integers(-1, nb, e).astype(np.int32))
+        refcount = jnp.asarray(rng.integers(0, 4, nb).astype(np.int32))
+        frozen = jnp.asarray(rng.integers(0, 2, nb).astype(bool))
+        for do_freeze in (False, True):
+            rk = refcount_update(
+                refcount, frozen, new, old, do_freeze=do_freeze, use_kernel=True
+            )
+            rr = refcount_update(
+                refcount, frozen, new, old, do_freeze=do_freeze, use_kernel=False
+            )
+            for a, b in zip(rk, rr):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_matches_legacy_triple(self):
+        """delta == add_refs(new) then sub_refs(old); member == freeze set."""
+        nb = 10
+        rng = np.random.default_rng(0)
+        new = jnp.asarray(rng.integers(-1, nb, 20).astype(np.int32))
+        old = jnp.asarray(rng.integers(-1, nb, 20).astype(np.int32))
+        delta, member = refcount_delta_ref(new, old, nb)
+        expect = np.zeros(nb, np.int32)
+        memb = np.zeros(nb, bool)
+        for b in np.asarray(new):
+            if b >= 0:
+                expect[b] += 1
+                memb[b] = True
+        for b in np.asarray(old):
+            if b >= 0:
+                expect[b] -= 1
+        np.testing.assert_array_equal(np.asarray(delta), expect)
+        np.testing.assert_array_equal(np.asarray(member), memb)
+
+
+def _run_program(cfg: StoreConfig):
+    """A program exercising COW, partial-mask write_at, NULL entries,
+    clone-induced frees, and batch materialization."""
+    s = store_lib.create(cfg)
+    rows = jnp.arange(cfg.n, dtype=jnp.float32)
+    for t in range(5):  # short: trailing table entries stay NULL
+        s = store_lib.append(cfg, s, rows * 10 + t)
+    s = store_lib.clone(cfg, s, jnp.zeros((cfg.n,), jnp.int32))
+    s = store_lib.append(cfg, s, rows + 100)  # divergence -> COW
+    s = store_lib.write_at(
+        cfg,
+        s,
+        jnp.full((cfg.n,), 1, jnp.int32),
+        -rows,
+        mask=jnp.asarray([i % 2 == 0 for i in range(cfg.n)]),
+    )
+    s = store_lib.clone(cfg, s, jnp.asarray((np.arange(cfg.n) // 2).astype(np.int32)))
+    mats = store_lib.materialize_batch(cfg, s, jnp.arange(cfg.n, dtype=jnp.int32))
+    return s, mats
+
+
+class TestStoreKernelSwitch:
+    @pytest.mark.parametrize("mode", ALL_MODES)
+    def test_use_kernels_bit_exact(self, mode):
+        base = dict(mode=mode, n=4, block_size=3, max_blocks=4, num_blocks=30)
+        sj, mj = _run_program(StoreConfig(**base, use_kernels=False))
+        sk, mk = _run_program(StoreConfig(**base, use_kernels=True))
+        np.testing.assert_array_equal(np.asarray(mj), np.asarray(mk))
+        np.testing.assert_array_equal(np.asarray(sj.tables), np.asarray(sk.tables))
+        np.testing.assert_array_equal(np.asarray(sj.lengths), np.asarray(sk.lengths))
+        if mode is not CopyMode.EAGER:
+            nb = sj.pool.num_blocks
+            np.testing.assert_array_equal(
+                np.asarray(sj.pool.data), np.asarray(sk.pool.data)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(sj.pool.refcount), np.asarray(sk.pool.refcount)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(sj.pool.frozen), np.asarray(sk.pool.frozen)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(sj.pool.free_stack), np.asarray(sk.pool.free_stack)
+            )
+            assert int(sj.pool.free_top) == int(sk.pool.free_top)
+            assert bool(pool_lib.free_stack_consistent(sk.pool))
+            assert not np.asarray(sk.pool.data[nb]).any()  # dump row zero
+
+    @pytest.mark.parametrize("mode", ALL_MODES)
+    def test_matches_legacy_write_path(self, mode):
+        """Observational equivalence with the pre-kernelization six-pass
+        path (block ids may differ; trajectories must not)."""
+        bench = pytest.importorskip(
+            "benchmarks.bench_write_path",
+            reason="benchmarks package needs repo-root cwd",
+        )
+        cfg = StoreConfig(mode=mode, n=4, block_size=3, max_blocks=4, num_blocks=30)
+        s_new = store_lib.create(cfg)
+        s_old = store_lib.create(cfg)
+        rows = jnp.arange(4, dtype=jnp.float32)
+        for t in range(6):
+            s_new = store_lib.append(cfg, s_new, rows + t)
+            if cfg.mode is CopyMode.EAGER:
+                s_old = store_lib.append(cfg, s_old, rows + t)
+            else:
+                s_old = bench.legacy_append(cfg, s_old, rows + t)
+            if t == 3:
+                anc = jnp.array([0, 0, 1, 2], jnp.int32)
+                s_new = store_lib.clone(cfg, s_new, anc)
+                s_old = (
+                    store_lib.clone(cfg, s_old, anc)
+                    if cfg.mode is CopyMode.EAGER
+                    else bench.legacy_clone(cfg, s_old, anc)
+                )
+        for i in range(4):
+            np.testing.assert_allclose(
+                np.asarray(store_lib.trajectory(cfg, s_new, i))[:6],
+                np.asarray(store_lib.trajectory(cfg, s_old, i))[:6],
+            )
+
+
+class TestRooflineAcceptance:
+    """The PR's perf acceptance, priced host-independently."""
+
+    def test_append_bytes_and_passes(self):
+        cfg = StoreConfig(
+            mode=CopyMode.LAZY_SR, n=1024, block_size=4, max_blocks=16
+        )
+        kw = dict(
+            n=cfg.n,
+            touched=cfg.n,
+            copies=cfg.n // 4,
+            num_blocks=cfg.pool_blocks,
+            block_bytes=4 * cfg.block_size,
+            item_bytes=4,
+        )
+        legacy = append_cost("legacy", **kw)
+        fused = append_cost("fused_jnp", **kw)
+        kernel = append_cost("kernel", **kw)
+        assert legacy.passes >= 2 * kernel.passes
+        assert kernel.bytes < fused.bytes < legacy.bytes
+        assert kernel.speedup_over(legacy) >= 2.0
+
+    def test_clone_passes(self):
+        legacy = clone_cost("legacy", table_entries=1024 * 16, num_blocks=4096)
+        kernel = clone_cost("kernel", table_entries=1024 * 16, num_blocks=4096)
+        assert legacy.passes == 3 and kernel.passes == 1
+        assert kernel.bytes < legacy.bytes
+
+    def test_masked_write_scales_with_touched_rows(self):
+        """The kernel only moves touched blocks; the jnp paths move all
+        n — the satellite's dense-copy-waste fix, visible in the model."""
+        kw = dict(
+            n=1024, copies=0, num_blocks=4096, block_bytes=16, item_bytes=4
+        )
+        sparse = append_cost("kernel", touched=32, **kw)
+        dense = append_cost("kernel", touched=1024, **kw)
+        assert sparse.bytes < dense.bytes
+        jnp_sparse = append_cost("fused_jnp", touched=32, **kw)
+        assert sparse.bytes < jnp_sparse.bytes
