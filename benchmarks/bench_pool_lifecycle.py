@@ -1,0 +1,175 @@
+"""Pool lifecycle benchmark: grow-from-tiny vs oversized-fixed, and
+compaction / shrink-to-fit (DESIGN.md §3.1).
+
+Two workloads, both the paper's motivating resample-every-generation
+pattern on an LGSSM:
+
+* **grow** — the filter starts on a deliberately tiny pool and relies on
+  the generation-boundary lifecycle loop (`FilterConfig.grow`) to reach
+  the end; timed against the same run on an oversized fixed pool.  The
+  gate is correctness, not speed: identical ``log_evidence`` (growth is
+  observationally invisible), no surfaced OOM, and ≥ 1 growth event.
+  The wall-clock ratio prices the shape-keyed recompiles the growth
+  events cost — this is the number that says whether "start small and
+  grow" is a deployable default.
+
+* **compact** — a fig6-style run (simulation task: no resampling, no
+  copies, so live blocks are exactly the population's own trajectories)
+  followed by ``store.compact`` with shrink-to-fit.  Gates: trajectories
+  bit-exact before/after, and post-compaction capacity — the bound on
+  every future ``blocks_in_use`` peak — within 1.25x of the live set.
+  An inference-shaped variant (clones every generation, so the pool is
+  fragmented by COW churn) is emitted alongside.
+
+Roofline model rows (:func:`repro.roofline.write_path.grow_cost` /
+``compact_cost``) are emitted next to the wall-clock rows so the JSON
+artifacts track the analytic cost too.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pool as pool_lib
+from repro.core import store as store_lib
+from repro.core.config import CopyMode
+from repro.roofline.write_path import compact_cost, grow_cost
+from repro.smc.filters import FilterConfig, ParticleFilter
+
+from benchmarks.common import emit, lgssm_def
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _time(fn, reps: int) -> float:
+    fn()  # warmup: compiles (including the growth sequence's shapes)
+    times = []
+    for _ in range(reps):
+        t0 = time.time()
+        out = fn()
+        jax.block_until_ready(out.log_evidence)
+        times.append(time.time() - t0)
+    return float(np.median(times))
+
+
+def run(n: int = 128, t: int = 48, reps: int = 3):
+    rows = []
+    ys = jax.random.normal(KEY, (t,))
+    base = dict(
+        n_particles=n, n_steps=t, mode=CopyMode.LAZY_SR, block_size=4
+    )
+
+    # -- grow: tiny seed pool + lifecycle loop vs oversized fixed pool ------
+    seed_blocks = max(2 * n // 4, 16)  # way under the sparse bound
+    fixed = ParticleFilter(lgssm_def(), FilterConfig(**base))
+    grown = ParticleFilter(
+        lgssm_def(),
+        FilterConfig(**base, pool_blocks=seed_blocks, grow=True, grow_chunk=8),
+    )
+    fixed_fn = fixed.jitted()
+    grown_fn = grown.jitted()
+    secs_fixed = _time(lambda: fixed_fn(KEY, None, ys), reps)
+    secs_grown = _time(lambda: grown_fn(KEY, None, ys), reps)
+    res_fixed = fixed_fn(KEY, None, ys)
+    res_grown = grown_fn(KEY, None, ys)
+    assert not bool(res_grown.oom) and int(res_grown.grew) >= 1, (
+        "growth run must complete via generation-boundary growth",
+        int(res_grown.grew),
+        bool(res_grown.oom),
+    )
+    assert float(res_grown.log_evidence) == float(res_fixed.log_evidence), (
+        "growth must be observationally invisible",
+        float(res_grown.log_evidence),
+        float(res_fixed.log_evidence),
+    )
+    live = int(pool_lib.blocks_in_use(res_grown.store.pool))
+    rows.append(
+        emit(
+            "pool",
+            f"pool_grow_N{n}_T{t}",
+            secs_grown,
+            f"fixed_us={secs_fixed * 1e6:.0f};"
+            f"overhead={secs_grown / max(secs_fixed, 1e-9):.2f}x;"
+            f"grew={int(res_grown.grew)};seed_blocks={seed_blocks};"
+            f"final_blocks={res_grown.store.pool.num_blocks};"
+            f"fixed_blocks={fixed.store_cfg.pool_blocks};live={live}",
+            n=n,
+            t=t,
+            seed_blocks=seed_blocks,
+        )
+    )
+
+    # -- compact: shrink-to-fit after fig6-style and fig5-style runs --------
+    for task, simulate in (("fig6_sim", True), ("fig5_inf", False)):
+        pf = ParticleFilter(lgssm_def(), FilterConfig(**base))
+        res = pf.jitted(simulate=simulate)(KEY, None, ys)
+        scfg = pf.store_cfg
+        store = res.store
+        live = int(pool_lib.blocks_in_use(store.pool))
+        cap_before = store.pool.num_blocks
+        before = np.asarray(
+            store_lib.materialize_batch(scfg, store, jnp.arange(n))
+        )
+        # Shrink to exactly the live set — only possible because the
+        # relocation densifies it (free and live ids interleave after
+        # COW churn, so a slice could never do this).  Warm once so the
+        # timed call measures relocation, not first-call dispatch.
+        target = live
+        store_lib.compact(scfg, store, new_num_blocks=target)
+        t0 = time.time()
+        compacted = store_lib.compact(scfg, store, new_num_blocks=target)
+        jax.block_until_ready(compacted.pool.data)
+        secs_c = time.time() - t0
+        after = np.asarray(
+            store_lib.materialize_batch(scfg, compacted, jnp.arange(n))
+        )
+        np.testing.assert_array_equal(before, after)  # bit-exact, always
+        cap_after = compacted.pool.num_blocks
+        assert not bool(compacted.pool.oom)
+        # The acceptance gate: post-compaction capacity (the ceiling on
+        # every future blocks_in_use peak) within 1.25x of the live set.
+        assert cap_after <= 1.25 * live, (task, cap_after, live)
+        rows.append(
+            emit(
+                "pool",
+                f"pool_compact_{task}_N{n}_T{t}",
+                secs_c,
+                f"live={live};cap_before={cap_before};cap_after={cap_after};"
+                f"fit={cap_after / max(live, 1):.2f}x",
+                n=n,
+                t=t,
+                task=task,
+            )
+        )
+
+    # -- roofline model rows ------------------------------------------------
+    block_bytes = 4 * 4  # float32 items, block_size=4
+    g = grow_cost(old_blocks=seed_blocks, block_bytes=block_bytes)
+    c = compact_cost(
+        live=live,
+        num_blocks=fixed.store_cfg.pool_blocks,
+        table_entries=n * fixed.store_cfg.max_blocks,
+        block_bytes=block_bytes,
+    )
+    rows.append(
+        emit(
+            "pool",
+            f"pool_model_N{n}_T{t}",
+            0.0,
+            f"grow_bytes={g.bytes};grow_passes={g.passes};"
+            f"compact_bytes={c.bytes};compact_passes={c.passes}",
+            n=n,
+            t=t,
+        )
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

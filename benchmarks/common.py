@@ -18,6 +18,28 @@ from repro.smc.programs import PROBLEMS
 
 KEY = jax.random.PRNGKey(0)
 
+# The reference LGSSM (A x + N(0,Q) transitions, N(x,R) emissions) used
+# by benches that need a model lighter than the paper problems.
+LGSSM_A, LGSSM_Q, LGSSM_R = 0.9, 0.5, 0.3
+
+
+def lgssm_def():
+    import math
+
+    from repro.smc.filters import SSMDef
+
+    def init(key, n, params):
+        return jax.random.normal(key, (n,))
+
+    def step(key, x, t, y_t, params):
+        x = LGSSM_A * x + math.sqrt(LGSSM_Q) * jax.random.normal(key, x.shape)
+        logw = -0.5 * (
+            (y_t - x) ** 2 / LGSSM_R + math.log(2 * math.pi * LGSSM_R)
+        )
+        return x, logw, x[:, None]
+
+    return SSMDef(init=init, step=step, record_shape=(1,))
+
 
 def build_runner(name: str, mode: CopyMode, n: int, t: int, simulate: bool):
     mod = PROBLEMS[name]

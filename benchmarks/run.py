@@ -8,6 +8,9 @@
 #   sharded — beyond-paper: multi-device population (DESIGN.md §5)
 #   write — the kernelized COW write path vs the legacy jnp path
 #           (DESIGN.md §3; includes the roofline byte/pass gate)
+#   pool  — pool lifecycle: grow-from-tiny vs oversized-fixed and
+#           compaction/shrink-to-fit (DESIGN.md §3.1; gates logZ
+#           equality, bit-exact compaction, and the 1.25x fit bound)
 #
 # ``--quick`` shrinks N/T for CI-speed runs; default sizes run in
 # minutes on a CPU host.  The at-scale numbers live in the dry-run
@@ -28,7 +31,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument(
         "--only", default="",
-        help="comma list of {fig5,fig6,fig7,tree,serve,block,sharded,write}",
+        help="comma list of {fig5,fig6,fig7,tree,serve,block,sharded,write,pool}",
     )
     ap.add_argument(
         "--json", default="",
@@ -57,6 +60,7 @@ def _run_suites(args, only, n: int, t: int) -> None:
     from benchmarks import (
         bench_block_size,
         bench_inference,
+        bench_pool_lifecycle,
         bench_scaling,
         bench_serving,
         bench_simulation,
@@ -78,6 +82,10 @@ def _run_suites(args, only, n: int, t: int) -> None:
         bench_block_size.run(n=n, t=2 * t)
     if only is None or "write" in only:
         bench_write_path.run(quick=args.quick, reps=2 if args.quick else 3)
+    if only is None or "pool" in only:
+        bench_pool_lifecycle.run(
+            n=n // 2 if args.quick else n, t=t, reps=2 if args.quick else 3
+        )
     if only is None or "sharded" in only:
         # Subprocess: bench_sharded fakes a multi-device host via
         # XLA_FLAGS, which must not leak into the other benchmarks'

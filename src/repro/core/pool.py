@@ -20,7 +20,17 @@ single-reference opt   in-place write when ``refcount == 1``
 
 Everything here is functional and jittable: fixed shapes, no host
 round-trips.  Failed allocations surface through the ``oom`` flag rather
-than raising, so the caller can handle exhaustion under jit.
+than raising, so the caller can handle exhaustion under jit.  The pool is
+*not* permanently fixed-capacity, though: the lifecycle layer
+(DESIGN.md §3.1) handles exhaustion at host boundaries — :func:`grow`
+expands capacity while preserving every block id, refcount, frozen bit
+and the pop order of the free stack (the paper's objects are "of random,
+and possibly unbounded, size", and Birch's reference-counting GC runs
+over a growable heap), and :func:`compact` relocates the live blocks to
+a dense ascending prefix (optionally shrinking to fit), returning the
+old→new id remap so owners can rewrite their block tables.  Both change
+array shapes, so they recompile downstream jits — callers invoke them
+*between* jitted generations, never inside one.
 
 Allocation (DESIGN.md §3) pops from a maintained **free stack**: a
 ``[num_blocks] int32`` array of free block ids plus a ``free_top``
@@ -72,6 +82,10 @@ __all__ = [
     "read_blocks",
     "blocks_in_use",
     "blocks_free",
+    "grow",
+    "compact",
+    "next_capacity",
+    "remap_tables",
     "push_free_mask",
     "rebuild_free_stack",
     "free_stack_consistent",
@@ -366,6 +380,135 @@ def blocks_free(pool: BlockPool) -> jax.Array:
     the *importing* shard, so a skewed resampling step consumes headroom
     there even while global occupancy is flat."""
     return jnp.sum(pool.refcount == 0)
+
+
+def grow(pool: BlockPool, new_num_blocks: int) -> BlockPool:
+    """Expand capacity to ``new_num_blocks`` blocks (DESIGN.md §3.1).
+
+    A host-boundary operation: the array shapes change, so anything jitted
+    over the pool recompiles (shape-keyed) — call it *between* jitted
+    generations, never inside one.  Everything observable is preserved:
+
+    * block ids, payload, refcounts and frozen bits are unchanged, so
+      existing block tables stay valid verbatim;
+    * the kept-zero dump row moves to the new ``num_blocks`` index (the
+      old dump index becomes an ordinary free block, zero-filled like any
+      freshly allocated block);
+    * the live free stack keeps its exact pop order; the fresh ids are
+      inserted *below* it (descending, so they pop ascending), which means
+      recently-freed hot blocks are still reused before cold new ones;
+    * ``oom`` stays sticky — growth adds headroom, it does not declare
+      that no allocation ever failed.  Callers that roll back to a
+      pre-OOM checkpoint (the filter's lifecycle loop) grow the clean
+      checkpoint, so the flag they carry forward is genuine.
+    """
+    nb = pool.num_blocks
+    if new_num_blocks < nb:
+        raise ValueError(
+            f"grow cannot shrink: {new_num_blocks} < {nb} (use compact "
+            "with new_num_blocks for shrink-to-fit)"
+        )
+    if new_num_blocks == nb:
+        return pool
+    g = new_num_blocks - nb
+    data = jnp.zeros(
+        (new_num_blocks + 1, *pool.block_shape), dtype=pool.data.dtype
+    )
+    data = data.at[:nb].set(pool.data[:nb])
+    refcount = jnp.zeros((new_num_blocks,), jnp.int32).at[:nb].set(pool.refcount)
+    frozen = jnp.zeros((new_num_blocks,), jnp.bool_).at[:nb].set(pool.frozen)
+    fresh = jnp.arange(new_num_blocks - 1, nb - 1, -1, dtype=jnp.int32)
+    stack = jnp.concatenate([fresh, pool.free_stack])
+    return BlockPool(
+        data=data,
+        refcount=refcount,
+        frozen=frozen,
+        free_stack=stack,
+        free_top=pool.free_top + g,
+        oom=pool.oom,
+    )
+
+
+def next_capacity(num_blocks: int, demand: int, cap: int, factor: float) -> int:
+    """The growth-sizing policy (DESIGN.md §3.1), shared by every
+    lifecycle driver: geometric growth (so total relocation traffic
+    telescopes) covering at least ``demand`` more blocks, capped at
+    ``cap`` — the dense bound beyond which allocation cannot fail."""
+    return min(cap, max(int(num_blocks * factor), num_blocks + demand))
+
+
+def remap_tables(tables: jax.Array, remap: jax.Array) -> jax.Array:
+    """Rewrite block tables through a :func:`compact` remap; NULL entries
+    stay NULL (and a dropped block maps to NULL, never out of range)."""
+    return jnp.where(
+        tables >= 0, remap[jnp.where(tables >= 0, tables, 0)], NULL_BLOCK
+    )
+
+
+def compact(
+    pool: BlockPool,
+    new_num_blocks: int | None = None,
+    use_kernel: bool | None = None,
+) -> Tuple[BlockPool, jax.Array]:
+    """Relocate live blocks to a dense ascending prefix (DESIGN.md §3.1).
+
+    Returns ``(pool, remap)`` where ``remap[old_id]`` is the block's new
+    id (``NULL_BLOCK`` for free blocks); the caller must rewrite every
+    block table through it (``store.compact`` / ``kv_cache.compact`` do).
+    Payload relocation is one :func:`repro.kernels.cow_gather.pool_compact`
+    pass; bookkeeping is rewritten in the same single sweep, and the free
+    stack comes back canonical (free ids descending).  Compaction is
+    observationally invisible — a table read through the remap yields
+    bit-identical payload — but it densifies HBM locality and, with
+    ``new_num_blocks``, shrinks the pool to fit.
+
+    Like :func:`grow` this is a host-boundary shape-changing op when
+    ``new_num_blocks`` is given; with the default capacity it is jittable
+    (fixed shapes) but still an O(num_blocks) pass, not hot-path work.
+    If ``new_num_blocks`` is too small for the live set the pool comes
+    back with ``oom`` set (blocks are never silently dropped: the remap
+    and relocation keep every live block whose new id fits; callers
+    should treat the flag as "shrink refused, retry bigger").
+    """
+    from repro.kernels.cow_gather import pool_compact
+
+    nb = pool.num_blocks
+    target = nb if new_num_blocks is None else new_num_blocks
+    live = pool.refcount > 0
+    n_live = jnp.sum(live, dtype=jnp.int32)
+    remap = jnp.where(
+        live, jnp.cumsum(live.astype(jnp.int32), dtype=jnp.int32) - 1, NULL_BLOCK
+    )
+    # A too-small shrink maps the overflow to NULL (and flags oom below)
+    # rather than leaving out-of-range ids in the caller's tables.
+    remap = jnp.where(remap < target, remap, NULL_BLOCK)
+    # perm: old id feeding each new slot (NULL -> stays empty/zero).
+    perm = jnp.nonzero(live, size=nb, fill_value=-1)[0].astype(jnp.int32)
+    if target < nb:
+        perm = perm[:target]
+    elif target > nb:
+        perm = jnp.concatenate(
+            [perm, jnp.full((target - nb,), NULL_BLOCK, jnp.int32)]
+        )
+    data = pool_compact(pool.data, perm, use_kernel=use_kernel)
+    safe = jnp.where(perm >= 0, perm, 0)
+    refcount = jnp.where(perm >= 0, pool.refcount[safe], 0)
+    frozen = jnp.where(perm >= 0, pool.frozen[safe], False)
+    # Canonical stack over the dense free suffix: ids descending so pops
+    # hand out ascending ids, same as a fresh pool.
+    n_free = jnp.maximum(target - n_live, 0)
+    slot = jnp.arange(target, dtype=jnp.int32)
+    stack = jnp.where(slot < n_free, target - 1 - slot, NULL_BLOCK)
+    oom = pool.oom | (n_live > target)
+    pool = BlockPool(
+        data=data,
+        refcount=refcount,
+        frozen=frozen,
+        free_stack=stack,
+        free_top=n_free,
+        oom=oom,
+    )
+    return pool, remap
 
 
 def rebuild_free_stack(pool: BlockPool) -> BlockPool:

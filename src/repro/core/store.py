@@ -78,6 +78,10 @@ __all__ = [
     "import_trajectories",
     "used_blocks",
     "used_bytes",
+    "oom_flag",
+    "free_blocks",
+    "grow",
+    "compact",
 ]
 
 
@@ -97,6 +101,13 @@ class StoreConfig:
     # DESIGN.md §3).  Interpret mode on non-TPU backends; bit-exact with
     # the fused jnp fallback on every non-dump pool row.
     use_kernels: bool = False
+    # Opt-in loud-OOM path (DESIGN.md §3.1): trajectory / materialize /
+    # materialize_batch refuse to read from a pool whose sticky ``oom``
+    # flag is set — a host-side RuntimeError when called eagerly, a
+    # ``checkify.check`` under jit (wrap the caller in
+    # ``checkify.checkify`` to discharge it).  Off by default: the flag
+    # is still surfaced through :func:`oom_flag` / ``FilterResult.oom``.
+    strict_oom: bool = False
 
     @property
     def capacity(self) -> int:
@@ -110,6 +121,14 @@ class StoreConfig:
         t_term = self.max_blocks
         n_term = int(10 * self.n * max(1.0, math.log(max(self.n, 2)))) // self.block_size
         return min(self.n * self.max_blocks, max(t_term + n_term + 2 * self.n, 64))
+
+    @property
+    def pool_blocks_cap(self) -> int:
+        """Capacity at which allocation provably cannot fail (DESIGN.md
+        §3.1): every particle owns at most ``max_blocks`` blocks, plus one
+        transient per particle while a COW source and its copy coexist
+        within a write step.  The lifecycle layer's growth ceiling."""
+        return self.n * self.max_blocks + self.n
 
 
 class ParticleStore(NamedTuple):
@@ -378,6 +397,32 @@ def import_trajectories(
 # ---------------------------------------------------------------------------
 
 
+def _check_oom(cfg: StoreConfig, store: ParticleStore, op: str) -> None:
+    """The ``strict_oom`` loud path: refuse to read a corrupted pool.
+
+    Once ``oom`` is sticky, appends have been routed to the dump row and
+    tables hold NULL entries — a trajectory read returns zeros where real
+    records should be.  Eagerly this raises; under jit it emits a
+    ``checkify.check`` (discharge with ``checkify.checkify``; an
+    unwrapped jit fails loudly at trace time, which is still loud).
+    """
+    if not cfg.strict_oom or cfg.mode is CopyMode.EAGER:
+        return
+    oomv = jnp.any(store.pool.oom)
+    msg = (
+        f"ParticleStore.{op} on an exhausted pool: the sticky oom flag is "
+        "set, so trajectories are corrupt (appends were dropped to the "
+        "dump row). Grow the pool at a generation boundary (store.grow / "
+        "FilterConfig.grow) or size num_blocks up."
+    )
+    if isinstance(oomv, jax.core.Tracer):
+        from jax.experimental import checkify
+
+        checkify.check(~oomv, msg)
+    elif bool(oomv):
+        raise RuntimeError(msg)
+
+
 def read_at(cfg: StoreConfig, store: ParticleStore, positions: jax.Array) -> jax.Array:
     """Read one item per particle at ``positions: [N]`` (or scalar)."""
     positions = jnp.broadcast_to(positions, (cfg.n,))
@@ -398,6 +443,7 @@ def trajectory(cfg: StoreConfig, store: ParticleStore, i: int | jax.Array) -> ja
     ``lengths[i]`` are unspecified)."""
     if cfg.mode is CopyMode.EAGER:
         return store.dense[i]
+    _check_oom(cfg, store, "trajectory")
     tab = store.tables[i]
     blocks = cow_gather(store.pool.data, tab, use_kernel=cfg.use_kernels)
     return blocks.reshape((cfg.capacity, *cfg.item_shape))
@@ -425,6 +471,7 @@ def materialize_batch(
     ids = ids.reshape(-1)
     if cfg.mode is CopyMode.EAGER:
         return store.dense[ids]
+    _check_oom(cfg, store, "materialize_batch")
     tab = store.tables[ids]  # [k, max_blocks]
     # cow_gather: NULL entries yield zero blocks; kernel path streams one
     # pool block per table entry via scalar prefetch.
@@ -458,6 +505,61 @@ def used_bytes(cfg: StoreConfig, store: ParticleStore) -> jax.Array:
     block_bytes = item_bytes * cfg.block_size
     table_bytes = 4 * cfg.n * cfg.max_blocks if cfg.mode.is_lazy else 0
     return used_blocks(cfg, store) * block_bytes + table_bytes
+
+
+def oom_flag(cfg: StoreConfig, store: ParticleStore) -> jax.Array:
+    """Scalar bool: did any allocation ever fail?  (Sticky; any-shard for
+    a stacked sharded store, where ``pool.oom`` carries a shard axis.)
+    The signal the lifecycle layer (DESIGN.md §3.1) reads at generation
+    boundaries, and the ``FilterResult.oom`` / SMC-decode ``oom`` field."""
+    if cfg.mode is CopyMode.EAGER:
+        return jnp.zeros((), jnp.bool_)
+    return jnp.any(store.pool.oom)
+
+
+def free_blocks(cfg: StoreConfig, store: ParticleStore) -> jax.Array:
+    """Allocation headroom in blocks: the free-stack depth (min across
+    shards for a stacked store).  EAGER storage never allocates, so its
+    headroom is unbounded (int32 max)."""
+    if cfg.mode is CopyMode.EAGER:
+        return jnp.asarray(jnp.iinfo(jnp.int32).max, jnp.int32)
+    return jnp.min(store.pool.free_top)
+
+
+# ---------------------------------------------------------------------------
+# pool lifecycle (DESIGN.md §3.1) — host-boundary, shape-changing ops
+# ---------------------------------------------------------------------------
+
+
+def grow(cfg: StoreConfig, store: ParticleStore, new_num_blocks: int) -> ParticleStore:
+    """Expand the pool to ``new_num_blocks`` blocks; tables stay valid
+    verbatim (block ids are preserved — see :func:`repro.core.pool.grow`).
+    A host-boundary op: the pool shape changes, so downstream jits
+    recompile.  Call between jitted generations, never inside one."""
+    if cfg.mode is CopyMode.EAGER:
+        raise ValueError("EAGER stores are dense; there is no pool to grow")
+    return store._replace(pool=pool_lib.grow(store.pool, new_num_blocks))
+
+
+def compact(
+    cfg: StoreConfig,
+    store: ParticleStore,
+    new_num_blocks: int | None = None,
+) -> ParticleStore:
+    """Relocate live blocks to a dense prefix and rewrite the tables.
+
+    Observationally invisible: every trajectory reads back bit-exact
+    (enforced by ``tests/test_pool_lifecycle.py``).  With
+    ``new_num_blocks`` this shrinks the pool to fit (must hold the live
+    set: a too-small target surfaces through ``oom`` rather than
+    silently dropping blocks).  EAGER storage is already dense — no-op.
+    """
+    if cfg.mode is CopyMode.EAGER:
+        return store
+    pool, remap = pool_lib.compact(
+        store.pool, new_num_blocks, use_kernel=cfg.use_kernels
+    )
+    return store._replace(pool=pool, tables=pool_lib.remap_tables(store.tables, remap))
 
 
 # Convenience jitted entry points (static cfg).

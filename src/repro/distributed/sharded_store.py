@@ -49,7 +49,13 @@ shard, so a skewed resampling step can concentrate blocks on one pool
 even when global occupancy is flat.  The auto-sized per-shard pool pads
 for this; exhaustion and export-slot overflow both surface through the
 sticky ``pool.oom`` flag rather than raising (everything here is
-jittable, fixed-shape, host-sync-free).
+jittable, fixed-shape, host-sync-free).  At host boundaries the
+lifecycle layer (DESIGN.md §3.1) makes exhaustion recoverable:
+:func:`grow` / :func:`compact` apply :mod:`repro.core.pool`'s growth
+and compaction to every shard **in lockstep**, so all stacked leaves
+keep one shared shape and `store_specs`/`unstack`/`restack` stay
+consistent; the sharded filter's chunked driver
+(``FilterConfig.grow``) watches the worst shard's headroom.
 """
 
 from __future__ import annotations
@@ -63,6 +69,7 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import pool as pool_lib
 from repro.core import store as store_lib
 from repro.core.config import CopyMode
 from repro.core.pool import BlockPool
@@ -76,6 +83,9 @@ __all__ = [
     "append",
     "write_at",
     "clone",
+    "grow",
+    "compact",
+    "local_num_blocks",
     "read_last",
     "trajectories",
     "used_blocks_per_shard",
@@ -226,6 +236,15 @@ def sharded_clone(
 # local store ops expect.
 
 
+def local_num_blocks(store: ParticleStore, num_shards: int) -> int:
+    """Per-shard pool capacity of a *stacked* store (every shard grows in
+    lockstep, so one number).  The stacking convention — per-shard leaves
+    concatenated along their leading axis — lives in this module
+    (``store_specs``/``unstack``/``restack``); lifecycle drivers read the
+    layout through this helper instead of re-deriving it."""
+    return store.pool.refcount.shape[0] // num_shards
+
+
 def unstack(store: ParticleStore) -> ParticleStore:
     """Inside shard_map: [1]-shaped scalar leaves -> local scalars."""
     return store._replace(
@@ -350,6 +369,62 @@ def clone(
 
 def read_last(cfg: ShardedStoreConfig, mesh: Mesh, store: ParticleStore) -> jax.Array:
     return _wrapped("read_last", cfg, mesh)(store)
+
+
+# Lifecycle ops (DESIGN.md §3.1) are cached per target size, not per op
+# name: they change leaf shapes, so each capacity is its own compile.
+
+
+@functools.lru_cache(maxsize=None)
+def _wrapped_grow(cfg: ShardedStoreConfig, mesh: Mesh, new_num_blocks: int):
+    sp = store_specs(cfg.axis_name)
+
+    def fn(st):
+        st = unstack(st)
+        return restack(st._replace(pool=pool_lib.grow(st.pool, new_num_blocks)))
+
+    return jax.jit(
+        shard_map(fn, mesh=mesh, in_specs=(sp,), out_specs=sp, check_rep=False)
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _wrapped_compact(
+    cfg: ShardedStoreConfig, mesh: Mesh, new_num_blocks: int | None
+):
+    sp = store_specs(cfg.axis_name)
+
+    def fn(st):
+        return restack(store_lib.compact(cfg.local, unstack(st), new_num_blocks))
+
+    return jax.jit(
+        shard_map(fn, mesh=mesh, in_specs=(sp,), out_specs=sp, check_rep=False)
+    )
+
+
+def grow(
+    cfg: ShardedStoreConfig, mesh: Mesh, store: ParticleStore, new_num_blocks: int
+) -> ParticleStore:
+    """Grow every shard's pool to ``new_num_blocks`` blocks **in
+    lockstep**, so the stacked layout (`store_specs`/`unstack`/`restack`
+    — every per-shard leaf keeps one shared shape) stays consistent.
+    Block ids are shard-local and preserved, so tables stay valid.  A
+    host-boundary op: leaf shapes change, downstream jits recompile."""
+    return _wrapped_grow(cfg, mesh, new_num_blocks)(store)
+
+
+def compact(
+    cfg: ShardedStoreConfig,
+    mesh: Mesh,
+    store: ParticleStore,
+    new_num_blocks: int | None = None,
+) -> ParticleStore:
+    """Per-shard compaction (each shard densifies its own pool and
+    rewrites its own tables), in lockstep like :func:`grow`.  With
+    ``new_num_blocks``, every shard shrinks to the same capacity — it
+    must hold the *worst* shard's live set (a too-small target surfaces
+    through that shard's ``oom`` flag, never silent truncation)."""
+    return _wrapped_compact(cfg, mesh, new_num_blocks)(store)
 
 
 def trajectories(

@@ -1,3 +1,3 @@
-from repro.kernels.cow_gather.ops import cow_gather
+from repro.kernels.cow_gather.ops import cow_gather, pool_compact
 
-__all__ = ["cow_gather"]
+__all__ = ["cow_gather", "pool_compact"]

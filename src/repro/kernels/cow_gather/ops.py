@@ -1,13 +1,14 @@
-"""Public entry point for the COW block gather.
+"""Public entry points for the COW block gather and pool compaction.
 
-On TPU this dispatches to the Pallas kernel; elsewhere (CPU hosts, and
-whenever ``force_ref``) it falls back to the jnp oracle.  ``interpret``
+On TPU these dispatch to the Pallas kernel; elsewhere (CPU hosts, and
+whenever ``force_ref``) they fall back to the jnp oracle.  ``interpret``
 runs the kernel body in interpret mode (used by the test sweeps).
 """
 
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.cow_gather.kernel import cow_gather_pallas
 from repro.kernels.cow_gather.ref import cow_gather_ref
@@ -33,3 +34,25 @@ def cow_gather(
     flat = pool.reshape(shape[0], -1)
     out = cow_gather_pallas(flat, table, interpret=interpret)
     return out.reshape((table.shape[0],) + shape[1:])
+
+
+def pool_compact(
+    data: jax.Array,
+    perm: jax.Array,
+    *,
+    use_kernel: bool | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Relocate pool payload rows for compaction (DESIGN.md §3.1).
+
+    ``data: [num_blocks + 1, *block_shape]`` is a pool's payload
+    including its trailing dump row; ``perm: [target] int32`` names the
+    old block id feeding each new slot (``-1`` leaves the slot zeroed —
+    used both for the free suffix and for capacity growth during a
+    resize).  Returns ``[target + 1, *block_shape]`` with a fresh
+    kept-zero dump row at the new ``target`` index.  One streamed gather
+    pass over the live payload — the same scalar-prefetch kernel that
+    materializes trajectories.
+    """
+    rows = cow_gather(data, perm, use_kernel=use_kernel, interpret=interpret)
+    return jnp.concatenate([rows, jnp.zeros_like(rows[:1])], axis=0)

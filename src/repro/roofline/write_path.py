@@ -95,6 +95,35 @@ def append_cost(
     raise ValueError(f"unknown write path {path!r}; want one of {WRITE_PATHS}")
 
 
+def grow_cost(*, old_blocks: int, block_bytes: int) -> WriteCost:
+    """One pool ``grow`` (DESIGN.md §3.1): every retained payload row is
+    read once and written once into the larger allocation (fresh rows are
+    zero-fill, charged nothing under the in-place model), plus one pass
+    over the int32 bookkeeping (refcount + frozen + free stack).  The
+    lifecycle policy doubles capacity per event, so total growth traffic
+    for a run that ends at ``B`` blocks telescopes to < ``4·B·block_bytes``
+    — amortized O(1) bytes per block ever allocated, which is why growth
+    at generation boundaries does not disturb the paper's O(DT + DN log DN)
+    steady state."""
+    data = 2 * old_blocks * block_bytes
+    bookkeeping = 3 * 2 * old_blocks * _ID
+    return WriteCost(passes=1, bytes=data + bookkeeping)
+
+
+def compact_cost(
+    *, live: int, num_blocks: int, table_entries: int, block_bytes: int
+) -> WriteCost:
+    """One pool ``compact`` + table rewrite (DESIGN.md §3.1): the
+    ``cow_gather``-based relocation streams each *live* block once
+    (read + write at its dense slot); the remap build and bookkeeping
+    rewrite are one pass over the int32 pool state, and every table
+    entry is read and rewritten through the remap."""
+    data = 2 * live * block_bytes
+    bookkeeping = 3 * 2 * num_blocks * _ID
+    tables = 2 * table_entries * _ID
+    return WriteCost(passes=2, bytes=data + bookkeeping + tables)
+
+
 def clone_cost(
     path: str,
     *,

@@ -82,9 +82,31 @@ class ServeEngine:
     def free(self, mask: jax.Array) -> None:
         self.cache = kvc.free(self.cache, mask)
 
+    def grow_cache(self, new_num_blocks: int) -> None:
+        """Expand the KV page pool between decode steps (DESIGN.md §3.1).
+
+        Sequence tables stay valid (ids preserved); the jitted decode /
+        prefill recompile on the next call (shape-keyed) since the cache
+        leaves change shape.  Capped growth loops live in the callers
+        (e.g. ``SMCDecoder``), which watch ``free_blocks`` per token.
+        """
+        self.cache = kvc.grow(self.cache, new_num_blocks)
+
     @property
     def used_blocks(self) -> int:
         return int(kvc.used_blocks(self.cache))
+
+    @property
+    def free_blocks(self) -> int:
+        return int(kvc.free_blocks(self.cache))
+
+    @property
+    def oom(self) -> bool:
+        return bool(kvc.oom_flag(self.cache))
+
+    @property
+    def num_blocks(self) -> int:
+        return self.cache.pool.num_blocks
 
 
 # ---------------------------------------------------------------------------

@@ -33,7 +33,8 @@ from repro.core import pool as pool_lib
 from repro.core.pool import NULL_BLOCK, BlockPool
 
 __all__ = ["KVCacheConfig", "PagedKVCache", "create", "fork", "ensure_writable",
-           "write_kv", "advance", "layer_views", "used_blocks", "free"]
+           "write_kv", "advance", "layer_views", "used_blocks", "free_blocks",
+           "oom_flag", "grow", "compact", "free"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +57,14 @@ class KVCacheConfig:
         n, t = self.max_seqs, self.max_blocks_per_seq
         bound = t + int(4 * n * max(1.0, math.log(max(n, 2)))) + 2 * n
         return min(n * t, max(bound, 16))
+
+    @property
+    def pool_blocks_cap(self) -> int:
+        """Capacity at which allocation provably cannot fail: every
+        sequence owns at most ``max_blocks_per_seq`` pages plus one
+        transient while a COW source and its copy coexist inside
+        ``ensure_writable``.  The serving growth ceiling (DESIGN.md §3.1)."""
+        return self.max_seqs * self.max_blocks_per_seq + self.max_seqs
 
 
 class PagedKVCache(NamedTuple):
@@ -157,6 +166,36 @@ def layer_views(cache: PagedKVCache, layer) -> Tuple[jax.Array, jax.Array]:
 
 def used_blocks(cache: PagedKVCache) -> jax.Array:
     return pool_lib.blocks_in_use(cache.pool)
+
+
+def free_blocks(cache: PagedKVCache) -> jax.Array:
+    """Allocation headroom in pages (the free-stack depth)."""
+    return cache.pool.free_top
+
+
+def oom_flag(cache: PagedKVCache) -> jax.Array:
+    """Sticky allocation-failure flag: when set, page writes have been
+    dropped to the dump row and decoded logits are not trustworthy."""
+    return cache.pool.oom
+
+
+def grow(cache: PagedKVCache, new_num_blocks: int) -> PagedKVCache:
+    """Expand the page pool (DESIGN.md §3.1); block ids are preserved so
+    sequence tables stay valid verbatim.  Host-boundary op: the pool
+    shape changes, so the jitted decode step recompiles (shape-keyed) —
+    call between decode steps, e.g. when ``free_blocks`` dips under the
+    per-step worst case of one page per active sequence."""
+    return cache._replace(pool=pool_lib.grow(cache.pool, new_num_blocks))
+
+
+def compact(cache: PagedKVCache, new_num_blocks: int | None = None) -> PagedKVCache:
+    """Relocate live pages to a dense prefix and rewrite the sequence
+    tables (optionally shrinking to fit) — observationally invisible to
+    paged attention, which only ever reads through the tables."""
+    pool, remap = pool_lib.compact(cache.pool, new_num_blocks)
+    return cache._replace(
+        pool=pool, tables=pool_lib.remap_tables(cache.tables, remap)
+    )
 
 
 def free(cache: PagedKVCache, mask: jax.Array) -> PagedKVCache:

@@ -30,8 +30,10 @@ from typing import Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh
 
+from repro.core import pool as pool_lib
 from repro.core import store as store_lib
 from repro.core.config import CopyMode
 from repro.core.store import StoreConfig
@@ -88,6 +90,74 @@ class _TokenTrace:
         else:
             self.store = store_lib.clone(self.cfg, self.store, ancestors)
 
+    def oom(self) -> bool:
+        return bool(store_lib.oom_flag(self.cfg, self.store))
+
+    def ensure_clone_headroom(self, ancestors: jax.Array, factor: float) -> int:
+        """Grow so the cross-shard imports of the coming clone cannot OOM.
+
+        A single-device clone is refcount-only (never allocates), but a
+        sharded resample imports boundary-crossing trajectories as fresh
+        blocks on the importing shard — and a skewed ancestor vector can
+        demand more than the one-block-per-particle append watermark.
+        The demand is exactly computable on host from the replicated
+        ancestor vector and the current lengths, *before* the clone runs
+        (clone releases the old generation first, so free can only be
+        higher at import time than at this check).  Returns the number
+        of growth events (0 or 1).
+        """
+        if self.mesh is None or self.cfg.mode is CopyMode.EAGER:
+            return 0
+        S, nl, bs = self.shcfg.num_shards, self.shcfg.n_local, self.cfg.block_size
+        anc = np.asarray(ancestors)
+        lengths = np.asarray(self.store.lengths)
+        slot_shard = np.arange(self.cfg.n) // nl
+        cross = (anc // nl) != slot_shard
+        blocks = -(-np.maximum(lengths[anc], 0) // bs)
+        demand = int(
+            max(
+                (blocks[cross & (slot_shard == s)].sum() for s in range(S)),
+                default=0,
+            )
+        )
+        nb = sharded_lib.local_num_blocks(self.store, S)
+        cap = self.shcfg.local.pool_blocks_cap
+        free = int(store_lib.free_blocks(self.cfg, self.store))
+        if free >= demand or nb >= cap:
+            return 0
+        new_nb = pool_lib.next_capacity(nb, demand - free, cap, factor)
+        self.store = sharded_lib.grow(self.shcfg, self.mesh, self.store, new_nb)
+        return 1
+
+    def ensure_headroom(self, factor: float) -> int:
+        """Grow so the next append (≤ one block per particle) cannot OOM.
+
+        The decode loop already syncs with the host every token, so this
+        piggybacks a free-stack depth read on that boundary; growth is
+        per-shard-lockstep for a sharded trace (DESIGN.md §3.1/§5) and
+        capped at the dense bound.  Returns the number of growth events
+        (0 or 1).
+        """
+        if self.cfg.mode is CopyMode.EAGER:
+            return 0
+        if self.mesh is not None:
+            need = self.shcfg.n_local
+            nb = sharded_lib.local_num_blocks(self.store, self.shcfg.num_shards)
+            cap = self.shcfg.local.pool_blocks_cap
+        else:
+            need = self.cfg.n
+            nb = self.store.pool.num_blocks
+            cap = self.cfg.pool_blocks_cap
+        free = int(store_lib.free_blocks(self.cfg, self.store))
+        if free >= need or nb >= cap:
+            return 0
+        new_nb = pool_lib.next_capacity(nb, need - free, cap, factor)
+        if self.mesh is not None:
+            self.store = sharded_lib.grow(self.shcfg, self.mesh, self.store, new_nb)
+        else:
+            self.store = store_lib.grow(self.cfg, self.store, new_nb)
+        return 1
+
     def tokens(self, steps: int) -> jax.Array:
         """Materialize all histories: ``[N, steps]`` int32."""
         if self.mesh is not None:
@@ -106,6 +176,13 @@ class SMCDecodeResult(NamedTuple):
     ess_trace: jax.Array  # [steps]
     used_blocks_trace: jax.Array  # [steps]
     resampled: jax.Array  # [steps] bool
+    # Lifecycle surface (DESIGN.md §3.1): ``oom`` is the sticky
+    # allocation-failure flag of the KV page pool OR the token-history
+    # store — if True, ``tokens`` is not trustworthy; ``grew`` counts
+    # pool growth events across both (0 with ``grow_stores=False`` and a
+    # sufficient pool).
+    oom: jax.Array  # scalar bool
+    grew: jax.Array  # scalar int32
 
 
 class SMCDecoder:
@@ -124,6 +201,9 @@ class SMCDecoder:
         mesh: Optional[Mesh] = None,
         data_axes: str = "shards",
         use_store_kernels: bool = False,
+        kv_num_blocks: int = 0,
+        grow_stores: bool = True,
+        grow_factor: float = 2.0,
     ):
         from repro.serving.kv_cache import KVCacheConfig
 
@@ -135,6 +215,7 @@ class SMCDecoder:
             block_size=block_size,
             max_seqs=n_particles,
             max_blocks_per_seq=-(-max_len // block_size),
+            num_blocks=kv_num_blocks,
             dtype=cfg.dtype,
         )
         self.engine = ServeEngine(lm, params, cache_cfg)
@@ -149,10 +230,36 @@ class SMCDecoder:
         # Pallas write-path kernels for the token-history store
         # (DESIGN.md §3); the KV pool keeps its own paged kernels.
         self.use_store_kernels = use_store_kernels
+        # Pool lifecycle (DESIGN.md §3.1): the decode loop syncs with the
+        # host every token anyway, so both pools (KV pages and token
+        # history) grow *pre-emptively* when headroom dips under one
+        # block per particle — OOM never fires, nothing corrupts, and
+        # the sticky flags are surfaced in the result either way.
+        self.grow_stores = grow_stores
+        self.grow_factor = grow_factor
+
+    def _ensure_kv_headroom(self, need: int) -> int:
+        """Grow the KV page pool so the next step's ``need`` page
+        allocations cannot fail; returns the number of growth events."""
+        eng = self.engine
+        cap = self.engine.cache_cfg.pool_blocks_cap
+        nb = eng.num_blocks
+        free = eng.free_blocks
+        if free >= need or nb >= cap:
+            return 0
+        eng.grow_cache(
+            pool_lib.next_capacity(nb, need - free, cap, self.grow_factor)
+        )
+        return 1
 
     def run(self, key: jax.Array, prompt: jax.Array, steps: int) -> SMCDecodeResult:
         n = self.n
         eng = self.engine
+        grew = 0
+        if self.grow_stores:
+            # The prompt prefills ceil(plen/bs) pages into slot 0.
+            bs = eng.cache_cfg.block_size
+            grew += self._ensure_kv_headroom(-(-prompt.shape[0] // bs))
         # prefill the prompt ONCE into slot 0, then fork the population:
         # O(1) per particle — the lazy deep copy.
         logits = eng.prefill(prompt[None, :], jnp.array([0], jnp.int32))
@@ -187,10 +294,20 @@ class SMCDecoder:
             do_resample = bool(ess < self.ess_threshold * n)
             if do_resample:
                 ancestors = resampling.resample_systematic(k_res, logw)
+                if self.grow_stores:
+                    # Sharded traces import boundary-crossers as fresh
+                    # blocks; size that demand BEFORE the clone runs.
+                    grew += trace.ensure_clone_headroom(ancestors, self.grow_factor)
                 eng.fork(ancestors)  # zero-copy clone of all KV lineages
                 trace.clone(ancestors)  # refcount bump, not an O(N·T) gather
                 token = token[ancestors]
                 logw = jnp.full((n,), -math.log(n))
+            if self.grow_stores:
+                # Decode COWs/allocates at most one page per particle and
+                # the trace append at most one block per particle; the
+                # host boundary is already paid (used_blocks below).
+                grew += self._ensure_kv_headroom(n)
+                grew += trace.ensure_headroom(self.grow_factor)
             logits = eng.decode(token[:, None])
             trace.append(token.astype(jnp.int32))
             esss.append(ess)
@@ -203,6 +320,8 @@ class SMCDecoder:
             ess_trace=jnp.stack(esss),
             used_blocks_trace=jnp.asarray(useds),
             resampled=jnp.asarray(ress),
+            oom=jnp.asarray(trace.oom() or eng.oom),
+            grew=jnp.asarray(grew, jnp.int32),
         )
 
     def dense_equivalent_blocks(self, steps: int, prompt_len: int) -> int:

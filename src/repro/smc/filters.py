@@ -32,6 +32,7 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import pool as pool_lib
 from repro.core import store as store_lib
 from repro.core.config import CopyMode
 from repro.core.store import ParticleStore, StoreConfig
@@ -98,6 +99,17 @@ class FilterConfig:
     mesh: Optional[Mesh] = None
     data_axes: str = "shards"  # mesh axis carrying the population
     max_exports: int = 0  # per-shard exchange slots; 0 = n_local (safe)
+    # Pool lifecycle (DESIGN.md §3.1): with ``grow=True`` the filter runs
+    # as a sequence of jitted generation chunks with a host-side headroom
+    # / OOM check between them — a filling pool grows (shape-keyed
+    # recompile of the chunk) instead of sticking its ``oom`` flag and
+    # corrupting trajectories.  Growth is capped at the dense bound
+    # (``StoreConfig.pool_blocks_cap``), beyond which allocation provably
+    # cannot fail.  ``jitted()`` returns the host-boundary driver in this
+    # mode (its chunks are jitted internally); do not wrap it in jit.
+    grow: bool = False
+    grow_chunk: int = 8  # generations per jitted chunk between host checks
+    grow_factor: float = 2.0  # capacity multiplier per growth event
 
     def store_config(self, record_shape: Tuple[int, ...]) -> StoreConfig:
         max_blocks = -(-self.n_steps // self.block_size)
@@ -121,10 +133,29 @@ class FilterResult(NamedTuple):
     ess_trace: jax.Array  # [T]
     resampled: jax.Array  # [T] bool
     used_blocks_trace: jax.Array  # [T] memory over time (Figure 7)
+    # Lifecycle surface (DESIGN.md §3.1): ``oom`` is the store's sticky
+    # allocation-failure flag (any shard) — if it is True the trajectories
+    # in ``store`` are NOT trustworthy; ``grew`` counts generation-boundary
+    # pool growth events (always 0 when ``FilterConfig.grow`` is off).
+    oom: jax.Array  # scalar bool
+    grew: jax.Array  # scalar int32
 
 
 def _default_clone(state: Any, ancestors: jax.Array) -> Any:
     return jax.tree.map(lambda x: x[ancestors], state)
+
+
+def _concat_chunk_outs(outs):
+    """Stitch per-chunk (ess, resampled, used) traces back into full-run
+    traces; an empty run yields the same empty traces the monolithic
+    scan produces for ``n_steps == 0``."""
+    if outs:
+        return tuple(jnp.concatenate([o[i] for o in outs]) for i in range(3))
+    return (
+        jnp.zeros((0,), jnp.float32),
+        jnp.zeros((0,), jnp.bool_),
+        jnp.zeros((0,), jnp.int32),
+    )
 
 
 class ParticleFilter:
@@ -135,6 +166,9 @@ class ParticleFilter:
         self.config = config
         self.store_cfg = config.store_config(ssm.record_shape)
         self._resample = resampling.RESAMPLERS[config.resampler]
+        # Lifecycle chunk jits, cached per instance so repeated runs hit
+        # the compile cache; only growth events (new pool shapes) recompile.
+        self._chunk_cache: dict = {}
         self.sharded_cfg: Optional[sharded_lib.ShardedStoreConfig] = None
         if config.mesh is not None:
             if ssm.lookahead is not None or (
@@ -167,6 +201,11 @@ class ParticleFilter:
 
     def jitted(self, simulate: bool = False):
         fn = self.simulate if simulate else self.run
+        if self.config.grow:
+            # The lifecycle driver syncs with the host between generation
+            # chunks (headroom / OOM checks, shape-changing growth); the
+            # chunks themselves are jitted internally.
+            return fn
         return jax.jit(fn)
 
     # -- internals ----------------------------------------------------------
@@ -178,13 +217,41 @@ class ParticleFilter:
             return self._run_sharded(key, params, observations, simulate)
         cfg, ssm, scfg = self.config, self.ssm, self.store_cfg
         n = cfg.n_particles
-        clone_state = ssm.clone_state or _default_clone
 
         key, init_key = jax.random.split(key)
         state0 = ssm.init(init_key, n, params)
         store0 = store_lib.create(scfg)
         logw0 = jnp.full((n,), -math.log(n))
         logz0 = jnp.zeros(())
+
+        init_carry = (key, state0, store0, logw0, logz0)
+        if cfg.grow:
+            return self._run_lifecycle(init_carry, params, observations, simulate)
+        scan_step = self._make_scan_step(params, observations, simulate)
+        carry, (ess_trace, resampled, used_trace) = jax.lax.scan(
+            scan_step, init_carry, jnp.arange(cfg.n_steps)
+        )
+        _, state, store, logw, logz = carry
+        return FilterResult(
+            store=store,
+            state=state,
+            log_weights=logw,
+            log_evidence=logz,
+            ess_trace=ess_trace,
+            resampled=resampled,
+            used_blocks_trace=used_trace,
+            oom=store_lib.oom_flag(scfg, store),
+            grew=jnp.zeros((), jnp.int32),
+        )
+
+    def _make_scan_step(self, params, observations, simulate):
+        """Build the single-device per-generation scan step (shared by the
+        monolithic scan and the lifecycle chunks).  ``params`` and
+        ``observations`` may be tracers: the lifecycle's cached chunk jit
+        passes them as arguments so one compile serves every run."""
+        cfg, ssm, scfg = self.config, self.ssm, self.store_cfg
+        n = cfg.n_particles
+        clone_state = ssm.clone_state or _default_clone
 
         def maybe_resample(key, t, state, store, logw):
             if simulate:
@@ -283,12 +350,91 @@ class ParticleFilter:
             )
             return (key, state, store, logw, logz), out
 
-        carry, (ess_trace, resampled, used_trace) = jax.lax.scan(
-            scan_step,
-            (key, state0, store0, logw0, logz0),
-            jnp.arange(cfg.n_steps),
-        )
+        return scan_step
+
+    def _chunk_fn(self, simulate: bool):
+        """Per-instance cache of the jitted lifecycle chunk.  The chunk
+        takes ``(carry, ts, params, observations)``, so the *same*
+        compiled function serves every run (and every rep of a
+        benchmark) — only growth events recompile, shape-keyed on the
+        pool leaves."""
+        key = ("local", bool(simulate))
+        fn = self._chunk_cache.get(key)
+        if fn is None:
+
+            def chunk(carry, ts, params, observations):
+                scan_step = self._make_scan_step(params, observations, simulate)
+                return jax.lax.scan(scan_step, carry, ts)
+
+            fn = self._chunk_cache[key] = jax.jit(chunk)
+        return fn
+
+    def _run_lifecycle(
+        self, init_carry, params, observations, simulate: bool
+    ) -> FilterResult:
+        """Generation-boundary pool lifecycle (DESIGN.md §3.1).
+
+        The scan over generations is cut into jitted chunks; between
+        chunks the host reads the surfaced headroom / OOM signal and
+        grows the pool outside jit (shape-keyed recompile of the chunk).
+        Two layers keep it correct *and* cheap:
+
+        * **pre-emptive watermark growth** — a chunk of G generations
+          can pop at most ``G * N`` blocks (one append per particle per
+          generation; clones only free), and an append with a committed
+          request at row ``i`` needs ``free_top > i``, so entering a
+          chunk with ``free >= G * N`` provably cannot OOM.  On the
+          single-device path this makes the retry below unreachable.
+        * **rollback-retry backstop** — if a chunk still sticks the
+          ``oom`` flag (possible on the sharded path, where import skew
+          can demand more than the watermark), the chunk's outputs are
+          discarded, the *pre-chunk checkpoint* (whose flag is clean)
+          grows, and the chunk re-runs with the same keys — bit-exact
+          with a run that had the capacity from the start.  This is why
+          the chunk carry is not jit-donated: the checkpoint must
+          outlive the chunk call.
+
+        Growth is capped at ``StoreConfig.pool_blocks_cap`` (the dense
+        bound + one transient block per particle), where allocation
+        provably cannot fail; an ``oom`` that persists at the cap (e.g.
+        export-slot overflow, which no amount of pool capacity fixes) is
+        surfaced in ``FilterResult.oom`` instead of looping forever.
+        """
+        cfg, scfg = self.config, self.store_cfg
+        n = cfg.n_particles
+        cap = scfg.pool_blocks_cap
+        chunk = max(1, cfg.grow_chunk)
+        chunk_fn = self._chunk_fn(simulate)
+
+        def grown(carry, new_nb):
+            key, state, store, logw, logz = carry
+            return (key, state, store_lib.grow(scfg, store, new_nb), logw, logz)
+
+        carry, outs, grew, t = init_carry, [], 0, 0
+        while t < cfg.n_steps:
+            ts = jnp.arange(t, min(t + chunk, cfg.n_steps))
+            need = int(ts.shape[0]) * n
+            store = carry[2]
+            free = int(store_lib.free_blocks(scfg, store))
+            nb = store.pool.num_blocks
+            if free < need and nb < cap:
+                carry = grown(
+                    carry,
+                    pool_lib.next_capacity(nb, need - free, cap, cfg.grow_factor),
+                )
+                grew += 1
+            new_carry, out = chunk_fn(carry, ts, params, observations)
+            nb = carry[2].pool.num_blocks
+            if bool(store_lib.oom_flag(scfg, new_carry[2])) and nb < cap:
+                carry = grown(
+                    carry, pool_lib.next_capacity(nb, need, cap, cfg.grow_factor)
+                )
+                grew += 1
+                continue  # retry the same chunk from the clean checkpoint
+            carry, t = new_carry, t + int(ts.shape[0])
+            outs.append(out)
         _, state, store, logw, logz = carry
+        ess_trace, resampled, used_trace = _concat_chunk_outs(outs)
         return FilterResult(
             store=store,
             state=state,
@@ -297,6 +443,8 @@ class ParticleFilter:
             ess_trace=ess_trace,
             resampled=resampled,
             used_blocks_trace=used_trace,
+            oom=store_lib.oom_flag(scfg, store),
+            grew=jnp.asarray(grew, jnp.int32),
         )
 
     def _run_sharded(
@@ -322,88 +470,20 @@ class ParticleFilter:
         mesh, axis = cfg.mesh, cfg.data_axes
         n, n_shards, nl = cfg.n_particles, shcfg.num_shards, shcfg.n_local
         local = shcfg.local
-        clone_state = ssm.clone_state or _default_clone
-
-        def shard_key(k, s):
-            # 1-shard meshes keep the exact single-device key stream.
-            return k if n_shards == 1 else jax.random.fold_in(k, s)
+        if cfg.grow:
+            return self._run_sharded_lifecycle(key, params, observations, simulate)
 
         def body(key, params, observations):
             s = lax.axis_index(axis)
-            lo = s * nl
+            scan_step, shard_key = self._make_sharded_step(
+                params, observations, simulate
+            )
 
             key, init_key = jax.random.split(key)
             state0 = ssm.init(shard_key(init_key, s), nl, params)
             store0 = store_lib.create(local)
             logw0 = jnp.full((nl,), -math.log(n))
             logz0 = jnp.zeros(())
-
-            def maybe_resample(key, t, state, store, logw):
-                if simulate:
-                    return state, store, logw, jnp.zeros((), jnp.bool_)
-                if cfg.always_resample:
-                    do = t > 0
-                else:
-                    glogw = sharded_lib.gather_global(logw, axis)
-                    do = (t > 0) & resampling.should_resample(
-                        glogw, cfg.ess_threshold
-                    )
-
-                def yes(operand):
-                    key, state, store, logw = operand
-                    # Weights are globally normalized in the carry, so the
-                    # gathered vector is the full population's weights.
-                    glw = sharded_lib.gather_global(logw, axis)
-                    ancestors = self._resample(key, glw)  # [N]; same on
-                    # every shard (shared key, replicated weights).
-                    full_state = jax.tree.map(
-                        lambda x: sharded_lib.gather_global(x, axis), state
-                    )
-                    state = jax.tree.map(
-                        lambda x: lax.dynamic_slice_in_dim(x, lo, nl),
-                        clone_state(full_state, ancestors),
-                    )
-                    store = sharded_lib.sharded_clone(shcfg, store, ancestors)
-                    new_logw = jnp.full((nl,), -math.log(n))
-                    return state, store, new_logw
-
-                def no(operand):
-                    _, state, store, logw = operand
-                    return state, store, logw
-
-                state, store, logw = jax.lax.cond(
-                    do, yes, no, (key, state, store, logw)
-                )
-                return state, store, logw, do
-
-            def propagate(key, state, t, logw):
-                obs_t = jax.tree.map(lambda o: o[t], observations)
-                state, dlogw, record = ssm.step(
-                    shard_key(key, s), state, t, obs_t, params
-                )
-                if simulate:
-                    dlogw = jnp.zeros_like(dlogw)
-                return state, dlogw, record
-
-            def scan_step(carry, t):
-                key, state, store, logw, logz = carry
-                key, k_res, k_prop, _k_alive = jax.random.split(key, 4)
-                state, store, logw, did = maybe_resample(
-                    k_res, t, state, store, logw
-                )
-                state, dlogw, record = propagate(k_prop, state, t, logw)
-                lw = logw + dlogw
-                glw = sharded_lib.gather_global(lw, axis)
-                logz = logz + jax.scipy.special.logsumexp(glw)
-                glw_norm = resampling.normalize(glw)
-                logw = lax.dynamic_slice_in_dim(glw_norm, lo, nl)
-                store = store_lib.append(local, store, record)
-                out = (
-                    resampling.ess(glw_norm),
-                    did,
-                    lax.psum(store_lib.used_blocks(local, store), axis),
-                )
-                return (key, state, store, logw, logz), out
 
             carry, (ess_trace, resampled, used_trace) = jax.lax.scan(
                 scan_step,
@@ -448,4 +528,212 @@ class ParticleFilter:
             ess_trace=ess_trace,
             resampled=resampled,
             used_blocks_trace=used_trace,
+            oom=jnp.any(store.pool.oom),
+            grew=jnp.zeros((), jnp.int32),
+        )
+
+    def _make_sharded_step(self, params, observations, simulate):
+        """Build the per-generation scan step that runs *inside*
+        ``shard_map`` (shared by the monolithic scan and the lifecycle
+        chunks).  Carry: ``(key, state, local store, logw, logz)``; the
+        shard index is re-derived from ``lax.axis_index`` on every call,
+        so the step closes over nothing shard-specific."""
+        cfg, ssm = self.config, self.ssm
+        shcfg = self.sharded_cfg
+        mesh, axis = cfg.mesh, cfg.data_axes
+        n, n_shards, nl = cfg.n_particles, shcfg.num_shards, shcfg.n_local
+        local = shcfg.local
+        clone_state = ssm.clone_state or _default_clone
+
+        def shard_key(k, s):
+            # 1-shard meshes keep the exact single-device key stream.
+            return k if n_shards == 1 else jax.random.fold_in(k, s)
+
+        def maybe_resample(key, t, state, store, logw, s, lo):
+            if simulate:
+                return state, store, logw, jnp.zeros((), jnp.bool_)
+            if cfg.always_resample:
+                do = t > 0
+            else:
+                glogw = sharded_lib.gather_global(logw, axis)
+                do = (t > 0) & resampling.should_resample(
+                    glogw, cfg.ess_threshold
+                )
+
+            def yes(operand):
+                key, state, store, logw = operand
+                # Weights are globally normalized in the carry, so the
+                # gathered vector is the full population's weights.
+                glw = sharded_lib.gather_global(logw, axis)
+                ancestors = self._resample(key, glw)  # [N]; same on
+                # every shard (shared key, replicated weights).
+                full_state = jax.tree.map(
+                    lambda x: sharded_lib.gather_global(x, axis), state
+                )
+                state = jax.tree.map(
+                    lambda x: lax.dynamic_slice_in_dim(x, lo, nl),
+                    clone_state(full_state, ancestors),
+                )
+                store = sharded_lib.sharded_clone(shcfg, store, ancestors)
+                new_logw = jnp.full((nl,), -math.log(n))
+                return state, store, new_logw
+
+            def no(operand):
+                _, state, store, logw = operand
+                return state, store, logw
+
+            state, store, logw = jax.lax.cond(
+                do, yes, no, (key, state, store, logw)
+            )
+            return state, store, logw, do
+
+        def propagate(key, state, t, logw, s):
+            obs_t = jax.tree.map(lambda o: o[t], observations)
+            state, dlogw, record = ssm.step(
+                shard_key(key, s), state, t, obs_t, params
+            )
+            if simulate:
+                dlogw = jnp.zeros_like(dlogw)
+            return state, dlogw, record
+
+        def scan_step(carry, t):
+            key, state, store, logw, logz = carry
+            s = lax.axis_index(axis)
+            lo = s * nl
+            key, k_res, k_prop, _k_alive = jax.random.split(key, 4)
+            state, store, logw, did = maybe_resample(
+                k_res, t, state, store, logw, s, lo
+            )
+            state, dlogw, record = propagate(k_prop, state, t, logw, s)
+            lw = logw + dlogw
+            glw = sharded_lib.gather_global(lw, axis)
+            logz = logz + jax.scipy.special.logsumexp(glw)
+            glw_norm = resampling.normalize(glw)
+            logw = lax.dynamic_slice_in_dim(glw_norm, lo, nl)
+            store = store_lib.append(local, store, record)
+            out = (
+                resampling.ess(glw_norm),
+                did,
+                lax.psum(store_lib.used_blocks(local, store), axis),
+            )
+            return (key, state, store, logw, logz), out
+
+        return scan_step, shard_key
+
+    def _run_sharded_lifecycle(
+        self, key: jax.Array, params: Any, observations: jax.Array, simulate: bool
+    ) -> FilterResult:
+        """The lifecycle driver of :meth:`_run_lifecycle`, shard-mapped.
+
+        Same chunked structure, with the per-shard pools growing **in
+        lockstep**: every shard's pool keeps an identical capacity, so
+        the stacked-store layout (`store_specs`/`unstack`/`restack`)
+        stays consistent across growth events.  The host reads the
+        stacked per-shard ``free_top``/``oom`` leaves, takes the worst
+        shard, and grows all pools together — cross-shard import skew
+        (DESIGN.md §5's capacity note) is exactly why the rollback-retry
+        backstop exists: a skewed resampling step can concentrate more
+        than the watermark's worth of imports on one shard.
+        """
+        cfg, ssm = self.config, self.ssm
+        shcfg = self.sharded_cfg
+        mesh, axis = cfg.mesh, cfg.data_axes
+        n, n_shards, nl = cfg.n_particles, shcfg.num_shards, shcfg.n_local
+        local = shcfg.local
+        sp = sharded_lib.store_specs(axis)
+        ax = P(axis)
+
+        init_fn = self._chunk_cache.get("sharded_init")
+        if init_fn is None:
+
+            def init_body(key, params):
+                s = lax.axis_index(axis)
+                key, init_key = jax.random.split(key)
+                if n_shards > 1:  # 1-shard keeps the single-device stream
+                    init_key = jax.random.fold_in(init_key, s)
+                state0 = ssm.init(init_key, nl, params)
+                return key, state0, sharded_lib.restack(store_lib.create(local))
+
+            init_fn = self._chunk_cache["sharded_init"] = jax.jit(
+                shard_map(
+                    init_body,
+                    mesh=mesh,
+                    in_specs=(P(), P()),
+                    out_specs=(P(), ax, sp),
+                    check_rep=False,
+                )
+            )
+        key, state, store = init_fn(key, params)
+
+        chunk_fn = self._chunk_cache.get(("sharded", bool(simulate)))
+        if chunk_fn is None:
+
+            def chunk_body(key, state, store, logw, logz, ts, params, observations):
+                scan_step, _ = self._make_sharded_step(
+                    params, observations, simulate
+                )
+                carry = (key, state, sharded_lib.unstack(store), logw, logz)
+                carry, (ess, did, used) = jax.lax.scan(scan_step, carry, ts)
+                key, state, store, logw, logz = carry
+                return (
+                    key,
+                    state,
+                    sharded_lib.restack(store),
+                    logw,
+                    logz,
+                    ess,
+                    did,
+                    used,
+                )
+
+            chunk_fn = self._chunk_cache[("sharded", bool(simulate))] = jax.jit(
+                shard_map(
+                    chunk_body,
+                    mesh=mesh,
+                    in_specs=(P(), ax, sp, ax, P(), P(), P(), P()),
+                    out_specs=(P(), ax, sp, ax, P(), P(), P(), P()),
+                    check_rep=False,
+                )
+            )
+
+        # EAGER stores carry a 1-block dummy pool — nothing to grow.
+        cap = 0 if local.mode is CopyMode.EAGER else local.pool_blocks_cap
+        chunk = max(1, cfg.grow_chunk)
+        logw = jnp.full((n,), -math.log(n))
+        logz = jnp.zeros(())
+        outs, grew, t = [], 0, 0
+
+        while t < cfg.n_steps:
+            ts = jnp.arange(t, min(t + chunk, cfg.n_steps))
+            need = int(ts.shape[0]) * nl
+            nb = sharded_lib.local_num_blocks(store, n_shards)
+            free = int(store_lib.free_blocks(local, store))  # worst shard
+            if free < need and nb < cap:
+                new_nb = pool_lib.next_capacity(nb, need - free, cap, cfg.grow_factor)
+                store = sharded_lib.grow(shcfg, mesh, store, new_nb)
+                grew += 1
+            ckpt = (key, state, store, logw, logz)
+            key, state, new_store, logw, logz, ess, did, used = chunk_fn(
+                *ckpt, ts, params, observations
+            )
+            nb = sharded_lib.local_num_blocks(ckpt[2], n_shards)
+            if bool(jnp.any(new_store.pool.oom)) and nb < cap:
+                new_nb = pool_lib.next_capacity(nb, need, cap, cfg.grow_factor)
+                key, state, _, logw, logz = ckpt
+                store = sharded_lib.grow(shcfg, mesh, ckpt[2], new_nb)
+                grew += 1
+                continue  # retry the chunk from the clean checkpoint
+            store, t = new_store, t + int(ts.shape[0])
+            outs.append((ess, did, used))
+        ess_trace, resampled, used_trace = _concat_chunk_outs(outs)
+        return FilterResult(
+            store=store,
+            state=state,
+            log_weights=logw,
+            log_evidence=logz,
+            ess_trace=ess_trace,
+            resampled=resampled,
+            used_blocks_trace=used_trace,
+            oom=jnp.any(store.pool.oom),
+            grew=jnp.asarray(grew, jnp.int32),
         )

@@ -145,4 +145,6 @@ class ParticleGibbs:
             ess_trace=ess_trace,
             resampled=resampled,
             used_blocks_trace=used_trace,
+            oom=store_lib.oom_flag(scfg, store),
+            grew=jnp.zeros((), jnp.int32),
         )

@@ -1,0 +1,21 @@
+"""Shared test helpers.
+
+The reference linear-Gaussian SSM lives in ``benchmarks/common.py`` (one
+definition for benches and tests alike); this conftest re-exports it for
+test modules.  `test_filters.py` and `test_sharded_store.py` predate the
+shared helper and still carry their own copies.
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.common import (  # noqa: E402,F401
+    LGSSM_A,
+    LGSSM_Q,
+    LGSSM_R,
+    lgssm_def,
+)

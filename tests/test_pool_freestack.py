@@ -177,6 +177,87 @@ class TestFreeStackInvariants:
         assert len(taken) == 5  # all distinct, no double-grant
 
 
+class TestAllocEdgeCases:
+    """Tiny-pool regressions for the `cand_pos` clip and the `keep`
+    compaction window: `n > num_blocks`, `top == 0`, and all-uncommitted
+    requests after a sticky OOM (DESIGN.md §3.1 satellite audit)."""
+
+    def test_request_larger_than_pool(self):
+        pool = pool_lib.init(2, (2,))
+        pool, ids = pool_lib.alloc(pool, 5)
+        ids = np.asarray(ids)
+        # the two real blocks granted, the over-ask comes back NULL + oom
+        assert list(ids[:2]) == [0, 1] and np.all(ids[2:] == -1)
+        assert bool(pool.oom) and int(pool.free_top) == 0
+        assert consistent(pool)
+
+    def test_request_larger_than_pool_uncommitted_tail_no_oom(self):
+        pool = pool_lib.init(2, (2,))
+        pool, ids = pool_lib.alloc(
+            pool, 5, commit=jnp.array([True, True, False, False, False])
+        )
+        assert not bool(pool.oom)  # nothing *committed* beyond the stack
+        assert list(np.asarray(ids)) == [0, 1, -1, -1, -1]
+        assert consistent(pool)
+
+    def test_alloc_on_empty_stack_is_identity(self):
+        """top == 0: every candidate is NULL, the stack window writes are
+        all dropped, and only a committed request flips oom."""
+        pool = pool_lib.init(3, (2,))
+        pool, _ = pool_lib.alloc(pool, 3)  # drain
+        before = np.asarray(pool.free_stack).copy(), int(pool.free_top)
+        # uncommitted request on an empty stack: bit-exact no-op, no oom
+        p2, ids = pool_lib.alloc(pool, 2, commit=jnp.zeros((2,), bool))
+        np.testing.assert_array_equal(np.asarray(p2.free_stack), before[0])
+        assert int(p2.free_top) == 0 and not bool(p2.oom)
+        assert np.all(np.asarray(ids) == -1)
+        assert consistent(p2)
+        # committed request on an empty stack: NULL grant + oom, stack still intact
+        p3, ids = pool_lib.alloc(pool, 2)
+        np.testing.assert_array_equal(np.asarray(p3.free_stack), before[0])
+        assert int(p3.free_top) == 0 and bool(p3.oom)
+        assert np.all(np.asarray(ids) == -1)
+        assert consistent(p3)
+
+    def test_all_uncommitted_after_oom_keeps_stack_and_flag(self):
+        """The sharded exchange's all-local step traces an alloc_compact
+        of zero blocks even after a pool has gone sticky-oom: it must
+        stay a stack no-op and must not clear (or re-trip) the flag."""
+        pool = pool_lib.init(2, (2,))
+        pool, _ = pool_lib.alloc(pool, 3)  # over-ask: sticky oom
+        assert bool(pool.oom)
+        pool = pool_lib.sub_refs(pool, jnp.array([0]))  # one block back
+        before = np.asarray(pool.free_stack).copy(), int(pool.free_top)
+        p2, ids = pool_lib.alloc_compact(pool, 4, commit=jnp.zeros((4,), bool))
+        np.testing.assert_array_equal(np.asarray(p2.free_stack), before[0])
+        assert int(p2.free_top) == before[1]
+        assert np.all(np.asarray(ids) == -1)
+        assert bool(p2.oom) and consistent(p2)
+
+    def test_alloc_compact_sparse_commit_on_tiny_pool(self):
+        """Rank compaction must satisfy a sparse commit mask whenever
+        sum(commit) blocks are free — even when the committed positions
+        sit far beyond num_blocks."""
+        pool = pool_lib.init(2, (2,))
+        commit = jnp.zeros((8,), bool).at[jnp.array([5, 7])].set(True)
+        pool, ids = pool_lib.alloc_compact(pool, 8, commit=commit)
+        ids = np.asarray(ids)
+        assert not bool(pool.oom)
+        assert set(ids[[5, 7]].tolist()) == {0, 1}
+        assert np.all(ids[[0, 1, 2, 3, 4, 6]] == -1)
+        assert consistent(pool)
+
+    def test_single_block_pool_roundtrip(self):
+        pool = pool_lib.init(1, (2,))
+        pool, a = pool_lib.alloc(pool, 1)
+        assert int(np.asarray(a)[0]) == 0
+        pool, b = pool_lib.alloc(pool, 1)
+        assert bool(pool.oom) and int(np.asarray(b)[0]) == -1
+        pool = pool_lib.sub_refs(pool, a)
+        pool, c = pool_lib.alloc(pool, 1)
+        assert int(np.asarray(c)[0]) == 0 and consistent(pool)
+
+
 class TestNoScanOnHotPath:
     @pytest.mark.parametrize("use_kernels", [False, True])
     def test_append_traces_no_nonzero(self, monkeypatch, use_kernels):

@@ -1,0 +1,374 @@
+"""Pool lifecycle tests (DESIGN.md §3.1): grow, compact, surfaced OOM.
+
+Four layers of validation:
+
+  * **property**: `grow` and `compact` preserve the free-stack ≡
+    refcount-mask invariant of `test_pool_freestack.py` under random
+    pool states, and preserve every observable (ids / refcounts / frozen
+    bits / payload / free-stack pop order for grow; payload-through-
+    tables for compact);
+  * **observational invisibility**: compaction (and shrink-to-fit)
+    leaves every trajectory bit-exact in all three copy modes, on the
+    jnp and kernel paths, and through the 1-shard sharded store;
+  * **the acceptance scenario**: a filter sized to overflow the seed
+    pool silently corrupts trajectories on the no-lifecycle path (the
+    bug this layer fixes — `oom` is at least surfaced now), while the
+    same run with `FilterConfig.grow` completes via generation-boundary
+    growth and matches an oversized-fixed-pool reference bit-exactly;
+  * **strict_oom**: the opt-in loud path refuses to materialize from an
+    exhausted pool (host RuntimeError eagerly, checkify under jit).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import lgssm_def
+
+from repro.core import pool as pool_lib
+from repro.core import store as store_lib
+from repro.core.config import ALL_MODES, CopyMode
+from repro.core.store import StoreConfig
+from repro.smc.filters import FilterConfig, ParticleFilter
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare CI hosts
+    HAVE_HYPOTHESIS = False
+
+
+def seeded_property(max_examples: int = 25, fallback_seeds: int = 12):
+    """@given(seed) under hypothesis, a seeded parametrize without."""
+
+    def deco(fn):
+        if HAVE_HYPOTHESIS:
+            return settings(max_examples=max_examples, deadline=None)(
+                given(seed=st.integers(0, 10_000))(fn)
+            )
+        return pytest.mark.parametrize("seed", range(fallback_seeds))(fn)
+
+    return deco
+
+
+def random_pool(rng, nb: int):
+    """A pool with random live/free structure and distinct payloads."""
+    pool = pool_lib.init(nb, (2,))
+    k = int(rng.integers(0, nb + 1))
+    if k:
+        pool, ids = pool_lib.alloc(pool, k)
+        pool = pool_lib.write_blocks(
+            pool, ids, jnp.arange(2 * k, dtype=jnp.float32).reshape(k, 2) + 1
+        )
+        extra = rng.integers(0, 3, k)
+        for i, e in zip(np.asarray(ids), extra):
+            if e:
+                pool = pool_lib.add_refs(pool, jnp.full((int(e),), int(i)))
+        drop = np.asarray(ids)[rng.random(k) < 0.4]
+        if drop.size:
+            pool = pool_lib.sub_refs(pool, jnp.asarray(drop, jnp.int32))
+        if rng.random() < 0.3:
+            pool = pool_lib.freeze(pool, ids)
+    return pool
+
+
+class TestGrowProperties:
+    @seeded_property()
+    def test_grow_preserves_everything(self, seed):
+        rng = np.random.default_rng(seed)
+        nb = int(rng.integers(2, 12))
+        pool = random_pool(rng, nb)
+        new_nb = nb + int(rng.integers(1, 9))
+        g = pool_lib.grow(pool, new_nb)
+        assert g.num_blocks == new_nb
+        # invariant: free_stack ≡ {refcount == 0}
+        assert bool(pool_lib.free_stack_consistent(g)), seed
+        # ids, payload, bookkeeping preserved verbatim
+        np.testing.assert_array_equal(
+            np.asarray(g.data[:nb]), np.asarray(pool.data[:nb])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(g.refcount[:nb]), np.asarray(pool.refcount[:nb])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(g.frozen[:nb]), np.asarray(pool.frozen[:nb])
+        )
+        # fresh blocks are free and zeroed; both dump rows kept-zero
+        assert not np.any(np.asarray(g.refcount[nb:]))
+        assert not np.any(np.asarray(g.data[nb:]))
+        assert bool(g.oom) == bool(pool.oom)  # sticky flag preserved
+        # pop order: the old free set pops first, in its old order, then
+        # the fresh ids ascending
+        old_top = int(pool.free_top)
+        old_order = [
+            int(pool.free_stack[i]) for i in range(old_top - 1, -1, -1)
+        ]
+        expect = old_order + list(range(nb, new_nb))
+        g2, got = pool_lib.alloc(g, len(expect))
+        assert list(np.asarray(got)) == expect, seed
+        assert bool(pool_lib.free_stack_consistent(g2))
+
+    def test_grow_rejects_shrink_and_noops_equal(self):
+        pool = pool_lib.init(4, (2,))
+        assert pool_lib.grow(pool, 4) is pool
+        with pytest.raises(ValueError):
+            pool_lib.grow(pool, 3)
+
+
+class TestCompactProperties:
+    @seeded_property()
+    def test_compact_invariant_and_remap(self, seed):
+        rng = np.random.default_rng(seed)
+        nb = int(rng.integers(2, 14))
+        pool = random_pool(rng, nb)
+        live = np.asarray(pool.refcount) > 0
+        c, remap = pool_lib.compact(pool)
+        remap = np.asarray(remap)
+        assert bool(pool_lib.free_stack_consistent(c)), seed
+        assert int(pool_lib.blocks_in_use(c)) == int(live.sum())
+        # live blocks land densely at the front, in ascending-id order
+        assert sorted(remap[live]) == list(range(int(live.sum())))
+        assert np.all(remap[~live] == -1)
+        for old in np.nonzero(live)[0]:
+            new = remap[old]
+            np.testing.assert_array_equal(
+                np.asarray(c.data[new]), np.asarray(pool.data[old])
+            )
+            assert int(c.refcount[new]) == int(pool.refcount[old])
+            assert bool(c.frozen[new]) == bool(pool.frozen[old])
+        # shrink-to-fit down to exactly the live count
+        c2, _ = pool_lib.compact(pool, new_num_blocks=max(int(live.sum()), 1))
+        assert bool(pool_lib.free_stack_consistent(c2))
+        assert not bool(c2.oom) or bool(pool.oom)
+
+    def test_too_small_shrink_flags_oom_not_silent(self):
+        pool = pool_lib.init(6, (2,))
+        pool, ids = pool_lib.alloc(pool, 4)
+        c, remap = pool_lib.compact(pool, new_num_blocks=2)
+        assert bool(c.oom)
+        # the remap never points past the new capacity
+        assert int(np.asarray(remap).max()) < 2
+
+    @pytest.mark.parametrize("mode", ALL_MODES)
+    @pytest.mark.parametrize("use_kernels", [False, True])
+    def test_store_compact_trajectories_bit_exact(self, mode, use_kernels):
+        """compact → materialize_batch ≡ materialize_batch (all modes,
+        both write paths), including shrink-to-fit."""
+        cfg = StoreConfig(
+            mode=mode,
+            n=6,
+            block_size=3,
+            max_blocks=4,
+            num_blocks=64,
+            use_kernels=use_kernels,
+        )
+        s = store_lib.create(cfg)
+        rng = np.random.default_rng(0)
+        for t in range(10):
+            s = store_lib.append(
+                cfg, s, jnp.asarray(rng.normal(size=6).astype(np.float32))
+            )
+            if t in (3, 7):
+                anc = jnp.asarray(rng.integers(0, 6, 6).astype(np.int32))
+                s = store_lib.clone(cfg, s, anc)
+        ids = jnp.arange(6, dtype=jnp.int32)
+        ref = np.asarray(store_lib.materialize_batch(cfg, s, ids))
+        for target in (None, None if mode is CopyMode.EAGER else
+                       int(pool_lib.blocks_in_use(s.pool))):
+            sc = store_lib.compact(cfg, s, new_num_blocks=target)
+            got = np.asarray(store_lib.materialize_batch(cfg, sc, ids))
+            np.testing.assert_array_equal(ref, got)
+            if mode is not CopyMode.EAGER:
+                assert bool(pool_lib.free_stack_consistent(sc.pool))
+                # compaction is restartable: appends keep working after it
+                s2 = store_lib.append(cfg, sc, jnp.zeros((6,)))
+                assert not bool(store_lib.oom_flag(cfg, s2))
+
+    @pytest.mark.parametrize("mode", ALL_MODES)
+    def test_sharded_1mesh_compact_bit_exact(self, mode):
+        from jax.sharding import Mesh
+        from repro.distributed import sharded_store as sharded_lib
+
+        mesh = Mesh(np.array(jax.devices()[:1]), ("shards",))
+        base = StoreConfig(
+            mode=mode, n=8, block_size=2, max_blocks=4, item_shape=()
+        )
+        shcfg = sharded_lib.ShardedStoreConfig(base=base, num_shards=1)
+        st = sharded_lib.create(shcfg, mesh)
+        for t in range(5):
+            st = sharded_lib.append(
+                shcfg, mesh, st, jnp.arange(8, dtype=jnp.float32) + t
+            )
+            if t == 2:
+                st = sharded_lib.clone(
+                    shcfg, mesh, st, jnp.array([1, 1, 0, 3, 3, 3, 2, 0], jnp.int32)
+                )
+        ref = np.asarray(sharded_lib.trajectories(shcfg, mesh, st))
+        stc = sharded_lib.compact(shcfg, mesh, st)
+        got = np.asarray(sharded_lib.trajectories(shcfg, mesh, stc))
+        np.testing.assert_array_equal(ref, got)
+        assert not bool(np.any(np.asarray(stc.pool.oom)))
+
+
+class TestLifecycleFilter:
+    """The acceptance scenario: overflow the seed pool capacity."""
+
+    N, T = 32, 32
+    SMALL = 40  # well under the ~N·log N + T/B sparse need for this run
+
+    def _base(self, **kw):
+        return dict(
+            n_particles=self.N,
+            n_steps=self.T,
+            mode=CopyMode.LAZY_SR,
+            block_size=2,
+            **kw,
+        )
+
+    @pytest.fixture(scope="class")
+    def data(self):
+        key = jax.random.PRNGKey(0)
+        return key, jax.random.normal(key, (self.T,))
+
+    @pytest.fixture(scope="class")
+    def reference(self, data):
+        key, ys = data
+        pf = ParticleFilter(lgssm_def(), FilterConfig(**self._base()))
+        res = pf.jitted()(key, None, ys)
+        trajs = np.asarray(
+            store_lib.materialize_batch(
+                pf.store_cfg, res.store, jnp.arange(self.N)
+            )
+        )
+        return res, trajs
+
+    def test_overflow_without_lifecycle_sets_oom_and_corrupts(
+        self, data, reference
+    ):
+        """The bug on main: a full pool silently dropped appends to the
+        dump row and returned garbage trajectories.  The flag is at
+        least *surfaced* now — and the output is demonstrably corrupt."""
+        key, ys = data
+        ref_res, ref_trajs = reference
+        pf = ParticleFilter(
+            lgssm_def(), FilterConfig(**self._base(pool_blocks=self.SMALL))
+        )
+        res = pf.jitted()(key, None, ys)
+        assert bool(res.oom)  # surfaced end to end
+        assert not bool(ref_res.oom)
+        bad = np.asarray(
+            store_lib.materialize_batch(
+                pf.store_cfg, res.store, jnp.arange(self.N)
+            )
+        )
+        assert not np.array_equal(ref_trajs, bad)  # corrupt output
+
+    def test_overflow_with_growth_matches_oversized_reference_bit_exact(
+        self, data, reference
+    ):
+        key, ys = data
+        ref_res, ref_trajs = reference
+        pf = ParticleFilter(
+            lgssm_def(),
+            FilterConfig(
+                **self._base(pool_blocks=self.SMALL, grow=True, grow_chunk=4)
+            ),
+        )
+        res = pf.jitted()(key, None, ys)
+        assert not bool(res.oom) and int(res.grew) >= 1
+        # same key -> same trajectories and log_evidence, to the bit
+        assert float(res.log_evidence) == float(ref_res.log_evidence)
+        np.testing.assert_array_equal(
+            np.asarray(res.ess_trace), np.asarray(ref_res.ess_trace)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(res.used_blocks_trace),
+            np.asarray(ref_res.used_blocks_trace),
+        )
+        got = np.asarray(
+            store_lib.materialize_batch(
+                pf.store_cfg, res.store, jnp.arange(self.N)
+            )
+        )
+        np.testing.assert_array_equal(ref_trajs, got)
+
+    def test_growth_sharded_1mesh_matches_reference(self, data, reference):
+        from jax.sharding import Mesh
+        from repro.distributed import sharded_store as sharded_lib
+
+        key, ys = data
+        ref_res, ref_trajs = reference
+        mesh = Mesh(np.array(jax.devices()[:1]), ("shards",))
+        pf = ParticleFilter(
+            lgssm_def(),
+            FilterConfig(
+                **self._base(
+                    pool_blocks=self.SMALL, mesh=mesh, grow=True, grow_chunk=4
+                )
+            ),
+        )
+        res = pf.jitted()(key, None, ys)
+        assert not bool(res.oom) and int(res.grew) >= 1
+        assert float(res.log_evidence) == float(ref_res.log_evidence)
+        got = np.asarray(sharded_lib.trajectories(pf.sharded_cfg, mesh, res.store))
+        np.testing.assert_array_equal(ref_trajs, got)
+
+    def test_growth_caps_at_dense_bound(self, data):
+        """grow_factor can't run away: capacity never exceeds the dense
+        bound, at which allocation provably cannot fail."""
+        key, ys = data
+        pf = ParticleFilter(
+            lgssm_def(),
+            FilterConfig(
+                **self._base(
+                    pool_blocks=8, grow=True, grow_chunk=4, grow_factor=100.0
+                )
+            ),
+        )
+        res = pf.jitted()(key, None, ys)
+        assert not bool(res.oom)
+        assert res.store.pool.num_blocks <= pf.store_cfg.pool_blocks_cap
+
+
+class TestStrictOom:
+    def _exhausted(self, strict: bool):
+        cfg = StoreConfig(
+            mode=CopyMode.LAZY_SR,
+            n=4,
+            block_size=1,
+            max_blocks=8,
+            num_blocks=4,
+            strict_oom=strict,
+        )
+        s = store_lib.create(cfg)
+        for _ in range(3):
+            s = store_lib.append(cfg, s, jnp.arange(4.0))
+        return cfg, s
+
+    def test_eager_reads_raise(self):
+        cfg, s = self._exhausted(strict=True)
+        assert bool(store_lib.oom_flag(cfg, s))
+        with pytest.raises(RuntimeError, match="exhausted pool"):
+            store_lib.materialize(cfg, s, 0)
+        with pytest.raises(RuntimeError, match="exhausted pool"):
+            store_lib.materialize_batch(cfg, s, jnp.arange(2))
+
+    def test_checkify_under_jit(self):
+        from jax.experimental import checkify
+
+        cfg, s = self._exhausted(strict=True)
+        err, _ = checkify.checkify(
+            jax.jit(lambda st: store_lib.trajectory(cfg, st, 0))
+        )(s)
+        assert err.get() is not None and "exhausted pool" in err.get()
+
+    def test_default_stays_silent_but_surfaced(self):
+        cfg, s = self._exhausted(strict=False)
+        store_lib.materialize(cfg, s, 0)  # no raise (back-compat)
+        assert bool(store_lib.oom_flag(cfg, s))  # ...but visible

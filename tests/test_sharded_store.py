@@ -170,6 +170,27 @@ MULTI_SHARD_SCRIPT = textwrap.dedent(
     used_after = np.asarray(ss.used_blocks_per_shard(cfg, st))
     assert (used_after <= used_before).all(), (used_before, used_after)
 
+    # --- 1c. lifecycle under import skew (DESIGN.md §3.1): shrink every
+    # shard's pool to its live set, then resample every slot onto one
+    # shard's particle — the clone must import full trajectories on three
+    # shards with ZERO headroom.  The decode-loop precheck sizes that
+    # demand from the replicated ancestor vector and grows in lockstep
+    # BEFORE the clone, so no oom fires and histories stay exact.
+    from repro.serving.smc_decode import _TokenTrace
+    tr = _TokenTrace(8, 16, CopyMode.LAZY_SR, 2, mesh, "shards")
+    for t in range(8):
+        tr.append(jnp.full((8,), t, jnp.int32))
+    ref = np.asarray(tr.tokens(8))
+    live_max = int(np.max(np.asarray(ss.used_blocks_per_shard(tr.shcfg, tr.store))))
+    tr.store = ss.compact(tr.shcfg, mesh, tr.store, new_num_blocks=live_max)
+    assert int(np.min(np.asarray(tr.store.pool.free_top))) == 0
+    anc = jnp.full((8,), 7, jnp.int32)
+    grew = tr.ensure_clone_headroom(anc, 2.0)
+    tr.clone(anc)
+    assert grew == 1 and not tr.oom(), (grew, tr.oom())
+    np.testing.assert_array_equal(
+        np.asarray(tr.tokens(8)), np.broadcast_to(ref[7], (8, 8)))
+
     # --- 2. mode equivalence + single-device logZ agreement on the filter
     key = jax.random.PRNGKey(0)
     T, N = 32, 256
