@@ -1,0 +1,142 @@
+"""Particle Gibbs benchmark: iterations/sec + peak blocks per copy mode,
+logZ sanity vs the plain filter, and the executor chunk-cache gate.
+
+Three rows per copy mode (EAGER / LAZY / LAZY_SR) on the reference
+LGSSM, all the paper's resample-every-generation pattern:
+
+* wall-clock per CSMC sweep iteration and ``peak_blocks`` — the lazy
+  modes must land under the eager dense bound, same separation as the
+  filter benches;
+* **logZ sanity**: all modes estimate the same evidence as a plain
+  ``ParticleFilter`` on the same data (the sweep is the filter's scan
+  with the reference lineage pinned — a wildly different logZ means the
+  port broke the estimator);
+* **the chunk-cache gate** (DESIGN.md §4): a repeated
+  ``ParticleGibbs.run`` must trigger **zero** executor recompiles — the
+  regression guard for the old ``jax.jit(self._csmc)``-per-call bug.
+  Compile counts land in the bench JSON (``derived`` and ``config``),
+  so the artifact trajectory tracks compiles-per-run across PRs.
+
+A ``grow`` row runs the same workload from a deliberately tiny pool
+through the lifecycle loop and gates logZ equality with the fixed-pool
+run (growth must be observationally invisible, like ``bench_pool``).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.config import ALL_MODES
+from repro.smc.filters import FilterConfig, ParticleFilter
+from repro.smc.pgibbs import ParticleGibbs
+
+from benchmarks.common import emit, lgssm_def
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _time_run(pg, ys, iters: int, reps: int):
+    out = pg.run(KEY, None, ys, n_iters=iters)  # warmup (compiles)
+    jax.block_until_ready(out.log_evidences)
+    times = []
+    for i in range(reps):
+        t0 = time.time()
+        out = pg.run(jax.random.PRNGKey(i), None, ys, n_iters=iters)
+        jax.block_until_ready(out.log_evidences)
+        times.append(time.time() - t0)
+    return float(np.median(times)), out
+
+
+def run(n: int = 128, t: int = 48, iters: int = 3, reps: int = 3):
+    rows = []
+    ys = jax.random.normal(KEY, (t,))
+    base = dict(n_particles=n, n_steps=t, block_size=4)
+
+    # The sanity anchor: a plain filter's logZ on the same data.
+    pf = ParticleFilter(lgssm_def(), FilterConfig(**base))
+    pf_logz = float(pf.jitted()(KEY, None, ys).log_evidence)
+
+    fixed_logz = {}
+    for mode in ALL_MODES:
+        pg = ParticleGibbs(lgssm_def(), FilterConfig(**base, mode=mode))
+        secs, out = _time_run(pg, ys, iters, reps)
+        warm_compiles = pg.executor.stats.compiles
+        pg.run(KEY, None, ys, n_iters=iters)
+        compiles = pg.executor.stats.compiles
+        # The chunk-cache gate: repeated runs must not re-trace the sweep.
+        assert compiles == warm_compiles, (
+            "repeated ParticleGibbs.run recompiled the sweep",
+            compiles,
+            warm_compiles,
+        )
+        logz = float(out.log_evidences[-1])
+        fixed_logz[mode] = logz
+        # logZ sanity: the CSMC sweep estimates the same evidence as the
+        # plain filter (both are SMC on the same model/data).
+        assert abs(logz - pf_logz) < max(10.0, 0.25 * abs(pf_logz)), (
+            mode,
+            logz,
+            pf_logz,
+        )
+        assert not bool(out.oom)
+        peak = int(np.asarray(out.peak_blocks).max())
+        rows.append(
+            emit(
+                "pgibbs",
+                f"pgibbs_{mode.name.lower()}_N{n}_T{t}",
+                secs / iters,
+                f"iters_per_s={iters / max(secs, 1e-9):.2f};"
+                f"peak_blocks={peak};logz={logz:.2f};pf_logz={pf_logz:.2f};"
+                f"compiles={compiles};grew={int(out.grew)}",
+                n=n,
+                t=t,
+                iters=iters,
+                mode=mode.name,
+                executor=pg.executor.stats.as_dict(),
+            )
+        )
+
+    # -- grow: tiny seed pool + lifecycle loop, must match fixed logZ -------
+    seed_blocks = max(2 * n // 4, 16)  # way under the sparse bound
+    pg = ParticleGibbs(
+        lgssm_def(),
+        FilterConfig(**base, pool_blocks=seed_blocks, grow=True, grow_chunk=8),
+    )
+    secs, out = _time_run(pg, ys, iters, reps)
+    assert not bool(out.oom) and int(out.grew) >= 1, (
+        "growth run must complete via generation-boundary growth",
+        int(out.grew),
+        bool(out.oom),
+    )
+    from repro.core.config import CopyMode
+
+    assert float(out.log_evidences[-1]) == fixed_logz[CopyMode.LAZY_SR], (
+        "growth must be observationally invisible",
+        float(out.log_evidences[-1]),
+        fixed_logz[CopyMode.LAZY_SR],
+    )
+    rows.append(
+        emit(
+            "pgibbs",
+            f"pgibbs_grow_N{n}_T{t}",
+            secs / iters,
+            f"iters_per_s={iters / max(secs, 1e-9):.2f};"
+            f"grew={int(out.grew)};seed_blocks={seed_blocks};"
+            f"peak_blocks={int(np.asarray(out.peak_blocks).max())};"
+            f"compiles={pg.executor.stats.compiles}",
+            n=n,
+            t=t,
+            iters=iters,
+            seed_blocks=seed_blocks,
+            executor=pg.executor.stats.as_dict(),
+        )
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -1,4 +1,4 @@
-"""Sharded-population scaling benchmark (DESIGN.md §5).
+"""Sharded-population scaling benchmark (DESIGN.md §6).
 
 Runs the bootstrap filter with the population split over a faked
 multi-device host mesh (``--xla_force_host_platform_device_count``) and

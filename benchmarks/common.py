@@ -38,7 +38,14 @@ def lgssm_def():
         )
         return x, logw, x[:, None]
 
-    return SSMDef(init=init, step=step, record_shape=(1,))
+    def set_reference(state, ref_t):
+        # Conditional SMC: push the pinned reference record back into
+        # particle 0's state (used by bench_pgibbs and the CSMC tests).
+        return state.at[0].set(ref_t[0])
+
+    return SSMDef(
+        init=init, step=step, record_shape=(1,), set_reference=set_reference
+    )
 
 
 def build_runner(name: str, mode: CopyMode, n: int, t: int, simulate: bool):

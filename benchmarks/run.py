@@ -5,12 +5,17 @@
 #   fig7  — time/memory scaling in t
 #   tree  — Jacob et al. reachable-set bound
 #   serve — beyond-paper: COW-paged KV under SMC decoding
-#   sharded — beyond-paper: multi-device population (DESIGN.md §5)
+#   sharded — beyond-paper: multi-device population (DESIGN.md §6)
 #   write — the kernelized COW write path vs the legacy jnp path
 #           (DESIGN.md §3; includes the roofline byte/pass gate)
 #   pool  — pool lifecycle: grow-from-tiny vs oversized-fixed and
 #           compaction/shrink-to-fit (DESIGN.md §3.1; gates logZ
 #           equality, bit-exact compaction, and the 1.25x fit bound)
+#   pgibbs — particle Gibbs through the shared population executor
+#           (DESIGN.md §4): iterations/sec + peak blocks per copy mode,
+#           logZ sanity vs the plain filter, and the chunk-cache gate
+#           (repeated runs must trigger zero recompiles; compile counts
+#           land in the JSON artifacts)
 #
 # ``--quick`` shrinks N/T for CI-speed runs; default sizes run in
 # minutes on a CPU host.  The at-scale numbers live in the dry-run
@@ -31,7 +36,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument(
         "--only", default="",
-        help="comma list of {fig5,fig6,fig7,tree,serve,block,sharded,write,pool}",
+        help="comma list of {fig5,fig6,fig7,tree,serve,block,sharded,write,pool,pgibbs}",
     )
     ap.add_argument(
         "--json", default="",
@@ -60,6 +65,7 @@ def _run_suites(args, only, n: int, t: int) -> None:
     from benchmarks import (
         bench_block_size,
         bench_inference,
+        bench_pgibbs,
         bench_pool_lifecycle,
         bench_scaling,
         bench_serving,
@@ -85,6 +91,13 @@ def _run_suites(args, only, n: int, t: int) -> None:
     if only is None or "pool" in only:
         bench_pool_lifecycle.run(
             n=n // 2 if args.quick else n, t=t, reps=2 if args.quick else 3
+        )
+    if only is None or "pgibbs" in only:
+        bench_pgibbs.run(
+            n=n // 2 if args.quick else n,
+            t=t,
+            iters=2 if args.quick else 3,
+            reps=2 if args.quick else 3,
         )
     if only is None or "sharded" in only:
         # Subprocess: bench_sharded fakes a multi-device host via

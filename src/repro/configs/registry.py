@@ -67,7 +67,7 @@ def smoke_config(arch: str) -> ModelConfig:
 
 def shape_cells(arch: str) -> List[str]:
     """The dry-run cells for an arch: long_500k only for sub-quadratic
-    families (DESIGN.md §5); all archs here are decoder-style so decode
+    families (DESIGN.md §6); all archs here are decoder-style so decode
     shapes always apply."""
     cfg = get_config(arch)
     cells = ["train_4k", "prefill_32k", "decode_32k"]

@@ -58,7 +58,7 @@ The pool composes with ``shard_map``: each device shard owns an
 independent pool (per-shard free stacks, no cross-device allocation),
 the same way the paper gives each thread its own context stack.  That
 composition is built in :mod:`repro.distributed.sharded_store` and
-documented in DESIGN.md §5; only trajectories whose resampling ancestor
+documented in DESIGN.md §6; only trajectories whose resampling ancestor
 lives on another shard ever move between pools.
 """
 
@@ -281,7 +281,7 @@ def alloc_compact(
     succeeds whenever ``sum(commit)`` blocks are free — the shape the
     sharded store's trajectory imports need, where the commit mask is
     scattered over a ``[n_particles, max_blocks]`` grid.  Each shard
-    pops from its own free stack (per-shard pools, DESIGN.md §5).
+    pops from its own free stack (per-shard pools, DESIGN.md §6).
     """
     total = jnp.sum(commit)
     prefix = jnp.arange(n, dtype=jnp.int32) < total
@@ -376,7 +376,7 @@ def blocks_in_use(pool: BlockPool) -> jax.Array:
 
 def blocks_free(pool: BlockPool) -> jax.Array:
     """Allocation headroom.  Per-shard headroom matters for the sharded
-    store (DESIGN.md §5): cross-shard imports land as fresh allocations on
+    store (DESIGN.md §6): cross-shard imports land as fresh allocations on
     the *importing* shard, so a skewed resampling step consumes headroom
     there even while global occupancy is flat."""
     return jnp.sum(pool.refcount == 0)

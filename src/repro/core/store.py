@@ -38,7 +38,7 @@ config is a hashable static argument.
 DESIGN.md §2 tabulates the full paper→array-world correspondence this
 module realizes; §3 specifies the kernelized write path (free-stack
 allocation, fused COW write, single-pass clone bookkeeping — the
-``use_kernels`` switch); §5 describes how the store scales across devices
+``use_kernels`` switch); §6 describes how the store scales across devices
 (:mod:`repro.distributed.sharded_store`), for which this module supplies
 the per-shard halves of the resampling exchange: :func:`clone_partial`
 (lazy, within-shard), :func:`materialize_batch` (export) and
@@ -332,7 +332,7 @@ def clone_partial(
     subsequent :func:`import_trajectories`.  The old generation's
     references are released for every slot, valid or not.  With ``valid``
     all-true this is exactly :func:`clone`; it exists for the sharded
-    store (DESIGN.md §5), where slots whose ancestor lives on another
+    store (DESIGN.md §6), where slots whose ancestor lives on another
     shard are filled by the cross-shard exchange instead of a refcount
     bump.
     """

@@ -1,6 +1,6 @@
 # Distribution layer: logical-axis sharding rules, mesh helpers, the
 # HLO analysis used by the roofline report, and the sharded multi-device
-# ParticleStore (per-shard block pools under shard_map — DESIGN.md §5).
+# ParticleStore (per-shard block pools under shard_map — DESIGN.md §6).
 
 from repro.distributed.sharded_store import ShardedStoreConfig
 from repro.distributed.sharding import (

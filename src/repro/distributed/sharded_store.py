@@ -1,7 +1,7 @@
 """Sharded multi-device ParticleStore: per-shard block pools under shard_map.
 
 This module builds the composition that :mod:`repro.core.pool` promises
-(DESIGN.md §5): each device shard owns an **independent** block pool and
+(DESIGN.md §6): each device shard owns an **independent** block pool and
 an ``n_local = N / num_shards`` slice of the population — per-shard free
 lists, per-shard refcounts, no cross-device allocation — the array-world
 analogue of the paper giving each thread its own context stack so
@@ -85,6 +85,7 @@ __all__ = [
     "clone",
     "grow",
     "compact",
+    "lifecycle_cap",
     "local_num_blocks",
     "read_last",
     "trajectories",
@@ -234,6 +235,15 @@ def sharded_clone(
 # pool.oom / peak_blocks / free_top [S].  `unstack`/`restack` bridge the [1]-leaf
 # view shard_map hands a rank-preserving spec and the scalar leaves the
 # local store ops expect.
+
+
+def lifecycle_cap(cfg: ShardedStoreConfig) -> int:
+    """Growth ceiling for lockstep per-shard growth (DESIGN.md §3.1/§4):
+    the per-shard dense bound, at which allocation provably cannot fail.
+    EAGER stores carry a dummy pool — 0 disables growth entirely.  The
+    one rule every lifecycle driver of a sharded store (filters, CSMC
+    sweeps, the serving token trace) sizes its ``PoolView.cap`` by."""
+    return 0 if cfg.base.mode is CopyMode.EAGER else cfg.local.pool_blocks_cap
 
 
 def local_num_blocks(store: ParticleStore, num_shards: int) -> int:

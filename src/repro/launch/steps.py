@@ -64,7 +64,7 @@ def _bspec(mesh: Mesh, batch: int, ndim: int) -> P:
 
 
 def cache_shardings(mesh: Mesh, cfg: ModelConfig, cache: DecodeCache) -> DecodeCache:
-    """Shardings for every DecodeCache field (see DESIGN.md §6)."""
+    """Shardings for every DecodeCache field (see DESIGN.md §7)."""
     dp = shd.data_axes(mesh)
     dp_size = 1
     for a in dp:

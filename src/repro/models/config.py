@@ -86,7 +86,7 @@ class ModelConfig:
 
     @property
     def sub_quadratic(self) -> bool:
-        """Eligible for the long_500k shape (see DESIGN.md §5)."""
+        """Eligible for the long_500k shape (see DESIGN.md §6)."""
         return self.family in ("ssm", "hybrid", "local_global")
 
     def scaled(self, **overrides) -> "ModelConfig":

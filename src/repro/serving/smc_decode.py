@@ -18,29 +18,36 @@ Token *histories* get the same treatment as the KV data: they live in a
 :class:`repro.core.store.ParticleStore` (int32 items), so a resampling
 step clones them by refcount bump instead of the O(N·T) gather a dense
 token matrix would pay.  Passing ``mesh=`` shards that store across
-devices (per-shard block pools, boundary-only exchange — DESIGN.md §5);
+devices (per-shard block pools, boundary-only exchange — DESIGN.md §6);
 the KV cache itself stays on the default device, so this wires the
 population's trajectory state, not the model, across the mesh.
+
+The token loop is a one-generation-per-chunk
+:class:`repro.smc.executor.PopulationExecutor` run (DESIGN.md §4): the
+decode loop syncs with the host every token anyway, so the executor's
+token-boundary hook drives pre-emptive growth of **both** pools — KV
+pages and the token-history store — through the same
+``PoolView``/``ensure`` policy the filters use, and the per-token
+traces are stitched by the same chunk machinery.
 """
 
 from __future__ import annotations
 
 import math
-from typing import Dict, NamedTuple, Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core import pool as pool_lib
 from repro.core import store as store_lib
 from repro.core.config import CopyMode
 from repro.core.store import StoreConfig
 from repro.distributed import sharded_store as sharded_lib
 from repro.models.model import LanguageModel
-from repro.serving import kv_cache as kvc
 from repro.serving.engine import ServeEngine
+from repro.smc import executor as executor_lib
 from repro.smc import resampling
 
 
@@ -93,18 +100,84 @@ class _TokenTrace:
     def oom(self) -> bool:
         return bool(store_lib.oom_flag(self.cfg, self.store))
 
-    def ensure_clone_headroom(self, ancestors: jax.Array, factor: float) -> int:
+    @property
+    def append_need(self) -> int:
+        """Worst-case blocks one append pops (per shard): one block per
+        (local) particle — the executor boundary hook's watermark."""
+        return self.shcfg.n_local if self.mesh is not None else self.cfg.n
+
+    def pool_view(self) -> executor_lib.PoolView:
+        """The executor's growth port over this trace (DESIGN.md §4).
+
+        A host-mutable view: the store lives on ``self``, so the
+        accessors ignore the executor carry and ``grow_to`` rebinds
+        ``self.store`` — per-shard-lockstep for a sharded trace
+        (DESIGN.md §3.1/§6), capped at the dense bound (``cap=0`` under
+        EAGER disables growth: there is no pool).
+        """
+        if self.cfg.mode is CopyMode.EAGER:
+            cap = 0
+        elif self.mesh is not None:
+            cap = sharded_lib.lifecycle_cap(self.shcfg)
+        else:
+            cap = self.cfg.pool_blocks_cap
+
+        def num_blocks(_):
+            if self.mesh is not None:
+                return sharded_lib.local_num_blocks(self.store, self.shcfg.num_shards)
+            return self.store.pool.num_blocks
+
+        def grow_to(carry, new_nb):
+            if self.mesh is not None:
+                self.store = sharded_lib.grow(self.shcfg, self.mesh, self.store, new_nb)
+            else:
+                self.store = store_lib.grow(self.cfg, self.store, new_nb)
+            return carry
+
+        return executor_lib.PoolView(
+            free=lambda _: store_lib.free_blocks(self.cfg, self.store),
+            num_blocks=num_blocks,
+            cap=cap,
+            grow_to=grow_to,
+            oom=lambda _: store_lib.oom_flag(self.cfg, self.store),
+        )
+
+    def ensure_clone_headroom(
+        self,
+        ancestors: jax.Array,
+        factor: float,
+        ex: Optional[executor_lib.PopulationExecutor] = None,
+        extra: int = 0,
+    ) -> int:
         """Grow so the cross-shard imports of the coming clone cannot OOM.
 
-        A single-device clone is refcount-only (never allocates), but a
-        sharded resample imports boundary-crossing trajectories as fresh
-        blocks on the importing shard — and a skewed ancestor vector can
-        demand more than the one-block-per-particle append watermark.
-        The demand is exactly computable on host from the replicated
-        ancestor vector and the current lengths, *before* the clone runs
-        (clone releases the old generation first, so free can only be
-        higher at import time than at this check).  Returns the number
-        of growth events (0 or 1).
+        A thin composition: :meth:`clone_import_demand` sizes the demand,
+        the executor's ``ensure`` applies the one growth policy
+        (DESIGN.md §4).  ``extra`` lets a caller fold the coming append's
+        watermark into the same growth event (the decode loop passes its
+        per-token append need); ``ex`` routes the event into a caller's
+        stats.  Returns the number of growth events (0 or 1).
+        """
+        demand = self.clone_import_demand(ancestors)
+        if demand <= 0:
+            return 0
+        ex = ex if ex is not None else executor_lib.PopulationExecutor()
+        start = ex.stats.grow_events
+        ex.ensure(self.pool_view(), None, demand + extra, factor)
+        return ex.stats.grow_events - start
+
+    def clone_import_demand(self, ancestors: jax.Array) -> int:
+        """Worst-shard block demand of the coming clone's imports.
+
+        A single-device clone is refcount-only (never allocates — the
+        demand is 0), but a sharded resample imports boundary-crossing
+        trajectories as fresh blocks on the importing shard — and a
+        skewed ancestor vector can demand more than the
+        one-block-per-particle append watermark.  The demand is exactly
+        computable on host from the replicated ancestor vector and the
+        current lengths, *before* the clone runs (clone releases the old
+        generation first, so free can only be higher at import time than
+        at this check).
         """
         if self.mesh is None or self.cfg.mode is CopyMode.EAGER:
             return 0
@@ -114,49 +187,12 @@ class _TokenTrace:
         slot_shard = np.arange(self.cfg.n) // nl
         cross = (anc // nl) != slot_shard
         blocks = -(-np.maximum(lengths[anc], 0) // bs)
-        demand = int(
+        return int(
             max(
                 (blocks[cross & (slot_shard == s)].sum() for s in range(S)),
                 default=0,
             )
         )
-        nb = sharded_lib.local_num_blocks(self.store, S)
-        cap = self.shcfg.local.pool_blocks_cap
-        free = int(store_lib.free_blocks(self.cfg, self.store))
-        if free >= demand or nb >= cap:
-            return 0
-        new_nb = pool_lib.next_capacity(nb, demand - free, cap, factor)
-        self.store = sharded_lib.grow(self.shcfg, self.mesh, self.store, new_nb)
-        return 1
-
-    def ensure_headroom(self, factor: float) -> int:
-        """Grow so the next append (≤ one block per particle) cannot OOM.
-
-        The decode loop already syncs with the host every token, so this
-        piggybacks a free-stack depth read on that boundary; growth is
-        per-shard-lockstep for a sharded trace (DESIGN.md §3.1/§5) and
-        capped at the dense bound.  Returns the number of growth events
-        (0 or 1).
-        """
-        if self.cfg.mode is CopyMode.EAGER:
-            return 0
-        if self.mesh is not None:
-            need = self.shcfg.n_local
-            nb = sharded_lib.local_num_blocks(self.store, self.shcfg.num_shards)
-            cap = self.shcfg.local.pool_blocks_cap
-        else:
-            need = self.cfg.n
-            nb = self.store.pool.num_blocks
-            cap = self.cfg.pool_blocks_cap
-        free = int(store_lib.free_blocks(self.cfg, self.store))
-        if free >= need or nb >= cap:
-            return 0
-        new_nb = pool_lib.next_capacity(nb, need - free, cap, factor)
-        if self.mesh is not None:
-            self.store = sharded_lib.grow(self.shcfg, self.mesh, self.store, new_nb)
-        else:
-            self.store = store_lib.grow(self.cfg, self.store, new_nb)
-        return 1
 
     def tokens(self, steps: int) -> jax.Array:
         """Materialize all histories: ``[N, steps]`` int32."""
@@ -230,44 +266,51 @@ class SMCDecoder:
         # Pallas write-path kernels for the token-history store
         # (DESIGN.md §3); the KV pool keeps its own paged kernels.
         self.use_store_kernels = use_store_kernels
-        # Pool lifecycle (DESIGN.md §3.1): the decode loop syncs with the
-        # host every token anyway, so both pools (KV pages and token
-        # history) grow *pre-emptively* when headroom dips under one
-        # block per particle — OOM never fires, nothing corrupts, and
-        # the sticky flags are surfaced in the result either way.
+        # Pool lifecycle (DESIGN.md §3.1/§4): the decode loop syncs with
+        # the host every token anyway, so the executor's token-boundary
+        # hook grows both pools (KV pages and token history)
+        # *pre-emptively* when headroom dips under one block per
+        # particle — OOM never fires, nothing corrupts, and the sticky
+        # flags are surfaced in the result either way.
         self.grow_stores = grow_stores
         self.grow_factor = grow_factor
+        # The shared population executor (DESIGN.md §4): the token loop,
+        # both pools' growth policy, and telemetry.
+        self._exec = executor_lib.PopulationExecutor()
 
-    def _ensure_kv_headroom(self, need: int) -> int:
-        """Grow the KV page pool so the next step's ``need`` page
-        allocations cannot fail; returns the number of growth events."""
+    @property
+    def executor(self) -> executor_lib.PopulationExecutor:
+        """This decoder's executor (token loop + growth stats)."""
+        return self._exec
+
+    def _kv_view(self) -> executor_lib.PoolView:
+        """The executor's growth port over the engine's KV page pool (a
+        host-mutable view — the pool lives on the engine)."""
         eng = self.engine
-        cap = self.engine.cache_cfg.pool_blocks_cap
-        nb = eng.num_blocks
-        free = eng.free_blocks
-        if free >= need or nb >= cap:
-            return 0
-        eng.grow_cache(
-            pool_lib.next_capacity(nb, need - free, cap, self.grow_factor)
+        return executor_lib.PoolView(
+            free=lambda _: eng.free_blocks,
+            num_blocks=lambda _: eng.num_blocks,
+            cap=eng.cache_cfg.pool_blocks_cap,
+            grow_to=lambda carry, nb: (eng.grow_cache(nb), carry)[1],
+            oom=lambda _: eng.oom,
         )
-        return 1
 
     def run(self, key: jax.Array, prompt: jax.Array, steps: int) -> SMCDecodeResult:
         n = self.n
         eng = self.engine
-        grew = 0
+        ex = self._exec
+        grew0 = ex.stats.grow_events
+        kv_view = self._kv_view()
         if self.grow_stores:
             # The prompt prefills ceil(plen/bs) pages into slot 0.
             bs = eng.cache_cfg.block_size
-            grew += self._ensure_kv_headroom(-(-prompt.shape[0] // bs))
+            ex.ensure(kv_view, None, -(-prompt.shape[0] // bs), self.grow_factor)
         # prefill the prompt ONCE into slot 0, then fork the population:
         # O(1) per particle — the lazy deep copy.
         logits = eng.prefill(prompt[None, :], jnp.array([0], jnp.int32))
         eng.fork(jnp.zeros((n,), jnp.int32))
         logits = jnp.broadcast_to(logits[0], (n, logits.shape[-1]))
 
-        logw = jnp.full((n,), -math.log(n))
-        logz = jnp.zeros(())
         trace = _TokenTrace(
             n,
             steps,
@@ -277,8 +320,20 @@ class SMCDecoder:
             self.data_axes,
             use_kernels=self.use_store_kernels,
         )
-        esss, useds, ress = [], [], []
-        for t in range(steps):
+        trace_view = trace.pool_view()
+
+        def boundary(carry, ts):
+            # Token-boundary hook: decode COWs/allocates at most one KV
+            # page per particle and the trace append at most one block
+            # per (local) particle; neither fork nor a single-device
+            # clone allocates, so growing here provably covers the token.
+            if self.grow_stores:
+                ex.ensure(kv_view, None, n, self.grow_factor)
+                ex.ensure(trace_view, None, trace.append_need, self.grow_factor)
+            return carry
+
+        def token_chunk(carry, ts):
+            key, logits, logw, logz = carry
             key, k_samp, k_res = jax.random.split(key, 3)
             logp_prop = jax.nn.log_softmax(logits / self.t_prop, axis=-1)
             logp_tgt = jax.nn.log_softmax(logits / self.t_target, axis=-1)
@@ -296,32 +351,56 @@ class SMCDecoder:
                 ancestors = resampling.resample_systematic(k_res, logw)
                 if self.grow_stores:
                     # Sharded traces import boundary-crossers as fresh
-                    # blocks; size that demand BEFORE the clone runs.
-                    grew += trace.ensure_clone_headroom(ancestors, self.grow_factor)
+                    # blocks; size that demand — plus the token's append
+                    # — BEFORE the clone runs.
+                    trace.ensure_clone_headroom(
+                        ancestors, self.grow_factor, ex=ex, extra=trace.append_need
+                    )
                 eng.fork(ancestors)  # zero-copy clone of all KV lineages
                 trace.clone(ancestors)  # refcount bump, not an O(N·T) gather
                 token = token[ancestors]
                 logw = jnp.full((n,), -math.log(n))
-            if self.grow_stores:
-                # Decode COWs/allocates at most one page per particle and
-                # the trace append at most one block per particle; the
-                # host boundary is already paid (used_blocks below).
-                grew += self._ensure_kv_headroom(n)
-                grew += trace.ensure_headroom(self.grow_factor)
             logits = eng.decode(token[:, None])
             trace.append(token.astype(jnp.int32))
-            esss.append(ess)
-            useds.append(eng.used_blocks)
-            ress.append(do_resample)
+            out = (
+                ess[None],
+                jnp.asarray([eng.used_blocks], jnp.int32),
+                jnp.asarray([do_resample]),
+            )
+            return (key, logits, logw, logz), out
+
+        carry = (key, logits, jnp.full((n,), -math.log(n)), jnp.zeros(()))
+        carry, outs, _ = ex.run(
+            carry,
+            n_steps=steps,
+            chunk_fn=token_chunk,
+            policy=executor_lib.GrowthPolicy(
+                grow=self.grow_stores, chunk=1, factor=self.grow_factor,
+                # The engine is host-mutable: no checkpoint to roll back
+                # to, so growth is purely pre-emptive.
+                retry=False,
+            ),
+            boundary=boundary,
+            traced=False,  # one host-synced chunk per token, always
+        )
+        _, _, logw, logz = carry
+        ess_trace, used_trace, resampled = executor_lib.concat_chunk_outs(
+            outs,
+            (
+                jnp.zeros((0,), jnp.float32),
+                jnp.zeros((0,), jnp.int32),
+                jnp.zeros((0,), jnp.bool_),
+            ),
+        )
         return SMCDecodeResult(
             tokens=trace.tokens(steps),
             log_weights=logw,
             log_evidence=logz,
-            ess_trace=jnp.stack(esss),
-            used_blocks_trace=jnp.asarray(useds),
-            resampled=jnp.asarray(ress),
+            ess_trace=ess_trace,
+            used_blocks_trace=used_trace,
+            resampled=resampled,
             oom=jnp.asarray(trace.oom() or eng.oom),
-            grew=jnp.asarray(grew, jnp.int32),
+            grew=jnp.asarray(ex.stats.grow_events - grew0, jnp.int32),
         )
 
     def dense_equivalent_blocks(self, steps: int, prompt_len: int) -> int:

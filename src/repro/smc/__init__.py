@@ -1,6 +1,9 @@
 # Population-based inference substrate: resampling schemes, particle
-# filters (bootstrap / auxiliary / alive), and particle Gibbs — the
-# methods whose memory pattern motivates the paper's platform.
+# filters (bootstrap / auxiliary / alive / conditional), particle
+# Gibbs — the methods whose memory pattern motivates the paper's
+# platform — and the population executor (DESIGN.md §4), the shared
+# host loop (chunk jits, pool growth, rollback-retry) they all drive
+# the store through.
 
 from repro.smc.resampling import (
     ess,
@@ -9,6 +12,7 @@ from repro.smc.resampling import (
     resample_stratified,
     resample_systematic,
 )
+from repro.smc.executor import GrowthPolicy, PoolView, PopulationExecutor
 from repro.smc.filters import FilterConfig, ParticleFilter, SSMDef
 
 __all__ = [
@@ -18,6 +22,9 @@ __all__ = [
     "resample_stratified",
     "resample_systematic",
     "FilterConfig",
+    "GrowthPolicy",
     "ParticleFilter",
+    "PoolView",
+    "PopulationExecutor",
     "SSMDef",
 ]

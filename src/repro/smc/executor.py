@@ -1,0 +1,286 @@
+"""The population executor (DESIGN.md §4).
+
+Every population-based method on this platform — particle filters,
+conditional SMC sweeps inside particle Gibbs, SMC decoding in the
+serving stack — drives the same allocate/copy/mutate/free substrate
+through the same host-side generation loop: run a jitted chunk of
+generations, read the surfaced headroom/OOM signal at the chunk
+boundary, grow the pool pre-emptively (or roll back and retry), stitch
+the per-chunk traces back together.  This module owns that loop once,
+so a new population method is a scan step plus a
+:class:`PoolView`, not a fourth hand-rolled copy of the orchestration.
+
+The pieces, and who supplies what:
+
+* **chunk jits** (:meth:`PopulationExecutor.jit_chunk`) — per-instance
+  cache of the compiled generation chunk, keyed by the consumer's cache
+  key; jax's shape-keying handles growth events (a grown pool is a new
+  leaf shape, so exactly the growth events recompile and nothing else).
+  Each trace is counted in :class:`ExecutorStats`, so "repeated runs
+  recompile nothing" is a measurable, gateable property.
+* **the lifecycle loop** (:meth:`PopulationExecutor.run`) — the
+  chunked host loop of DESIGN.md §3.1: pre-emptive watermark growth
+  (entering a chunk of G generations with ``free >= G * need_per_step``
+  provably prevents single-device OOM), the rollback-retry backstop (a
+  chunk that still sticks ``oom`` is discarded and re-run from the
+  clean pre-chunk checkpoint after growing — bit-exact with a run that
+  had the capacity from the start), and the cap at the dense bound.
+  With growth off the same call degenerates to one traced chunk over
+  every generation — jittable end to end, bit-exact with the
+  monolithic ``lax.scan`` it replaces.
+* **growth policy** (:meth:`PopulationExecutor.ensure` +
+  :func:`repro.core.pool.next_capacity`) — the *only* place the
+  watermark → ``next_capacity`` → cap arithmetic lives.  Consumers
+  describe their pool through a :class:`PoolView` (how to read
+  headroom/capacity/OOM and how to grow — single-device store, stacked
+  lockstep sharded store, or a host-mutable serving pool) and never
+  re-implement the policy.
+* **chunk-output stitching** (:func:`concat_chunk_outs`) — per-chunk
+  ``(ess, resampled, used)``-style traces concatenate back into
+  full-run traces; an empty run yields the caller's empty spec, same
+  as a monolithic scan over zero generations.
+
+The carry is opaque to the executor: filters thread a
+``(key, state, store, logw, logz)`` tuple of arrays, the serving stack
+threads host state and keeps its pools in :class:`PoolView` closures.
+The executor only ever touches it through ``chunk_fn`` and the
+``PoolView`` accessors.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pool as pool_lib
+
+__all__ = [
+    "ExecutorStats",
+    "GrowthPolicy",
+    "PoolView",
+    "PopulationExecutor",
+    "concat_chunk_outs",
+    "filter_empty_outs",
+]
+
+
+@dataclasses.dataclass
+class ExecutorStats:
+    """Mutable per-executor telemetry (surfaced in bench JSON, gated in
+    tests: a repeated run with unchanged shapes must not re-trace).
+
+    Attributes:
+      compiles: chunk-jit trace events (one per compiled specialization
+        — growth events recompile shape-keyed, repeats hit the cache).
+      chunks:   chunk invocations across all runs (accepted + retried).
+      grow_events: pool growth events (watermark, retry, and
+        :meth:`PopulationExecutor.ensure` calls alike).
+      retries:  rollback-retry events (chunk discarded and re-run).
+    """
+
+    compiles: int = 0
+    chunks: int = 0
+    grow_events: int = 0
+    retries: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class GrowthPolicy:
+    """How a consumer wants the lifecycle loop driven.
+
+    ``grow=False`` disables all growth; unless the consumer forces the
+    host loop (``traced=False`` on :meth:`PopulationExecutor.run`), the
+    run then collapses to a single traced chunk.  ``chunk`` is the
+    generations-per-jitted-chunk between host checks, ``factor`` the
+    capacity multiplier per growth event, and ``retry`` enables the
+    rollback-retry backstop (on by default; host-mutable consumers that
+    cannot checkpoint, like the serving engine, grow pre-emptively and
+    turn it off).
+    """
+
+    grow: bool
+    chunk: int = 8
+    factor: float = 2.0
+    retry: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolView:
+    """How the executor reads and grows a consumer's pool(s).
+
+    Every accessor takes the loop carry (and may ignore it: host-mutable
+    pools close over their owning object and return the carry from
+    ``grow_to`` unchanged).  ``cap`` is the growth ceiling — the dense
+    bound at which allocation provably cannot fail; ``cap=0`` disables
+    growth entirely (the EAGER-store convention).
+    """
+
+    free: Callable[[Any], Any]  # -> int-able allocation headroom (blocks)
+    num_blocks: Callable[[Any], int]  # -> current (per-shard) capacity
+    cap: int  # growth ceiling; 0 = never grow
+    grow_to: Callable[[Any, int], Any]  # -> carry with the grown pool
+    oom: Optional[Callable[[Any], Any]] = None  # -> bool-able sticky flag
+
+
+def filter_empty_outs() -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """The empty ``(ess, resampled, used)`` trace triple a zero-length
+    filter run produces (matches the monolithic scan for ``n_steps == 0``)."""
+    return (
+        jnp.zeros((0,), jnp.float32),
+        jnp.zeros((0,), jnp.bool_),
+        jnp.zeros((0,), jnp.int32),
+    )
+
+
+def concat_chunk_outs(
+    outs: Sequence[Tuple[jax.Array, ...]], empty: Tuple[jax.Array, ...]
+) -> Tuple[jax.Array, ...]:
+    """Stitch per-chunk trace tuples back into full-run traces; an empty
+    run yields the caller's ``empty`` spec."""
+    if outs:
+        return tuple(
+            jnp.concatenate([o[i] for o in outs]) for i in range(len(empty))
+        )
+    return empty
+
+
+class PopulationExecutor:
+    """One per consumer instance (filter / particle Gibbs / decoder):
+    owns that instance's chunk-jit cache, telemetry, and lifecycle loop."""
+
+    def __init__(self) -> None:
+        self._cache: dict = {}
+        self.stats = ExecutorStats()
+
+    # -- chunk jits ----------------------------------------------------------
+
+    def jit_chunk(self, key, build: Callable[[], Callable]) -> Callable:
+        """Per-instance cached jit of ``build()``, instrumented so every
+        trace (= compiled specialization) bumps ``stats.compiles``.  The
+        build callable runs at most once per key; jax's own cache then
+        keys on argument shapes, so only growth events recompile."""
+        fn = self._cache.get(key)
+        if fn is None:
+            inner = build()
+
+            def counting(*args):
+                # Runs at trace time only: a cache-hit call never lands here.
+                self.stats.compiles += 1
+                return inner(*args)
+
+            fn = self._cache[key] = jax.jit(counting)
+        return fn
+
+    # -- growth policy -------------------------------------------------------
+
+    def ensure(self, pool: PoolView, carry: Any, need: int, factor: float) -> Any:
+        """Pre-emptive watermark growth: grow ``pool`` so the next
+        ``need`` block allocations provably cannot fail, capped at
+        ``pool.cap`` (beyond which allocation cannot fail anyway, or —
+        for ``cap=0`` pools — growth is disabled).  Returns the carry,
+        grown when growth fired."""
+        if need <= 0:
+            return carry
+        nb = pool.num_blocks(carry)
+        if nb >= pool.cap:
+            return carry
+        free = int(pool.free(carry))
+        if free >= need:
+            return carry
+        carry = pool.grow_to(
+            carry, pool_lib.next_capacity(nb, need - free, pool.cap, factor)
+        )
+        self.stats.grow_events += 1
+        return carry
+
+    # -- the lifecycle loop --------------------------------------------------
+
+    def run(
+        self,
+        carry: Any,
+        *,
+        n_steps: int,
+        chunk_fn: Callable[[Any, jax.Array], Tuple[Any, Any]],
+        policy: GrowthPolicy,
+        need_per_step: int = 0,
+        pool: Optional[PoolView] = None,
+        boundary: Optional[Callable[[Any, jax.Array], Any]] = None,
+        traced: Optional[bool] = None,
+    ) -> Tuple[Any, List[Any], int]:
+        """Drive ``chunk_fn`` over ``n_steps`` generations.
+
+        ``chunk_fn(carry, ts) -> (carry, out)`` runs the generations in
+        ``ts``; ``out`` is a tuple of per-generation trace arrays
+        (stitch the returned list with :func:`concat_chunk_outs`).
+
+        Two loop styles, selected by ``traced`` (default: follow
+        ``policy.grow``):
+
+        * **traced** — one chunk over every generation, no host sync:
+          the whole call stays jittable and is bit-exact with a
+          monolithic ``lax.scan``.  Requires ``chunk_fn`` to be
+          traceable.
+        * **host loop** — DESIGN.md §3.1's chunked lifecycle: before
+          each chunk the optional ``boundary`` hook runs (serving's
+          token-boundary growth of several pools), then the watermark
+          check grows ``pool`` so the chunk's ``len(ts) *
+          need_per_step`` worst-case allocations cannot fail; after the
+          chunk, a stuck ``oom`` flag (sharded import skew) triggers
+          the rollback-retry — the chunk's outputs are discarded, the
+          *pre-chunk checkpoint* (whose flag is clean) grows, and the
+          chunk re-runs with the same keys.  This is why the chunk
+          carry is never jit-donated: the checkpoint must outlive the
+          chunk call.  An ``oom`` that persists at the cap (e.g.
+          export-slot overflow, which capacity cannot fix) falls
+          through and stays surfaced.
+
+        Returns ``(carry, outs, grew)`` where ``grew`` counts every
+        growth event during this call (watermark, retry, and ``ensure``
+        calls made by ``boundary``/``chunk_fn`` on this executor).
+        """
+        if traced is None:
+            traced = not policy.grow
+        if traced:
+            carry, out = chunk_fn(carry, jnp.arange(n_steps))
+            return carry, [out], 0
+        start_grew = self.stats.grow_events
+        chunk = max(1, policy.chunk)
+        outs: List[Any] = []
+        t = 0
+        while t < n_steps:
+            ts = jnp.arange(t, min(t + chunk, n_steps))
+            g = int(ts.shape[0])
+            if boundary is not None:
+                carry = boundary(carry, ts)
+            if policy.grow and pool is not None:
+                carry = self.ensure(pool, carry, g * need_per_step, policy.factor)
+            ckpt = carry
+            new_carry, out = chunk_fn(carry, ts)
+            self.stats.chunks += 1
+            if (
+                policy.grow
+                and policy.retry
+                and pool is not None
+                and pool.oom is not None
+                and bool(pool.oom(new_carry))
+            ):
+                nb = pool.num_blocks(ckpt)
+                if nb < pool.cap:
+                    carry = pool.grow_to(
+                        ckpt,
+                        pool_lib.next_capacity(
+                            nb, g * need_per_step, pool.cap, policy.factor
+                        ),
+                    )
+                    self.stats.grow_events += 1
+                    self.stats.retries += 1
+                    continue  # retry the same chunk from the clean checkpoint
+            carry, t = new_carry, t + g
+            outs.append(out)
+        return carry, outs, self.stats.grow_events - start_grew

@@ -8,16 +8,20 @@ identical across them — which is precisely the platform's promise:
 "copy-on-write for the imperative programmer".
 
 Supports bootstrap and auxiliary (lookahead) filters, adaptive
-resampling, an alive-filter rejection loop (bounded retries), and a
+resampling, an alive-filter rejection loop (bounded retries), a
 simulation task (no observations → no resampling → no copies; paper
-Section 4's overhead-isolation task).  The full loop is one ``lax.scan``
-and is jittable end to end.
+Section 4's overhead-isolation task), and conditional SMC
+(:meth:`ParticleFilter.csmc_sweep` — particle 0 pinned to a reference
+trajectory, the sweep inside particle Gibbs).  The per-generation scan
+step is the only method-specific code: the host loop that drives it —
+chunk jits, pool growth, rollback-retry, trace stitching — is the
+shared :class:`repro.smc.executor.PopulationExecutor` (DESIGN.md §4).
 
 Setting ``FilterConfig.mesh`` scales N across devices: the scan runs
 under ``shard_map`` with an independent per-shard block pool, resampling
 all-gathers only the weight vector, and only trajectories whose ancestor
 lives on another shard are materialized and exchanged
-(:mod:`repro.distributed.sharded_store`, DESIGN.md §5).
+(:mod:`repro.distributed.sharded_store`, DESIGN.md §6).
 """
 
 from __future__ import annotations
@@ -32,11 +36,11 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import pool as pool_lib
 from repro.core import store as store_lib
 from repro.core.config import CopyMode
 from repro.core.store import ParticleStore, StoreConfig
 from repro.distributed import sharded_store as sharded_lib
+from repro.smc import executor as executor_lib
 from repro.smc import resampling
 
 __all__ = ["SSMDef", "FilterConfig", "FilterResult", "ParticleFilter"]
@@ -90,7 +94,7 @@ class FilterConfig:
     # kernels (cow_write / refcount_update / cow_gather, DESIGN.md §3);
     # interpret-mode on CPU, bit-exact with the jnp path.
     use_kernels: bool = False
-    # Multi-device scaling (DESIGN.md §5): when ``mesh`` is set, the N
+    # Multi-device scaling (DESIGN.md §6): when ``mesh`` is set, the N
     # particles are split over the ``data_axes`` mesh axis — each shard
     # owns an independent block pool, resampling all-gathers only the
     # [N] weight vector, and only boundary-crossing trajectories are
@@ -99,8 +103,8 @@ class FilterConfig:
     mesh: Optional[Mesh] = None
     data_axes: str = "shards"  # mesh axis carrying the population
     max_exports: int = 0  # per-shard exchange slots; 0 = n_local (safe)
-    # Pool lifecycle (DESIGN.md §3.1): with ``grow=True`` the filter runs
-    # as a sequence of jitted generation chunks with a host-side headroom
+    # Pool lifecycle (DESIGN.md §3.1/§4): with ``grow=True`` the executor
+    # runs the scan as jitted generation chunks with a host-side headroom
     # / OOM check between them — a filling pool grows (shape-keyed
     # recompile of the chunk) instead of sticking its ``oom`` flag and
     # corrupting trajectories.  Growth is capped at the dense bound
@@ -124,6 +128,12 @@ class FilterConfig:
             use_kernels=self.use_kernels,
         )
 
+    def growth_policy(self) -> executor_lib.GrowthPolicy:
+        """The executor policy this config describes (DESIGN.md §4)."""
+        return executor_lib.GrowthPolicy(
+            grow=self.grow, chunk=self.grow_chunk, factor=self.grow_factor
+        )
+
 
 class FilterResult(NamedTuple):
     store: ParticleStore
@@ -145,30 +155,20 @@ def _default_clone(state: Any, ancestors: jax.Array) -> Any:
     return jax.tree.map(lambda x: x[ancestors], state)
 
 
-def _concat_chunk_outs(outs):
-    """Stitch per-chunk (ess, resampled, used) traces back into full-run
-    traces; an empty run yields the same empty traces the monolithic
-    scan produces for ``n_steps == 0``."""
-    if outs:
-        return tuple(jnp.concatenate([o[i] for o in outs]) for i in range(3))
-    return (
-        jnp.zeros((0,), jnp.float32),
-        jnp.zeros((0,), jnp.bool_),
-        jnp.zeros((0,), jnp.int32),
-    )
-
-
 class ParticleFilter:
-    """Bootstrap / auxiliary / alive particle filter over the COW store."""
+    """Bootstrap / auxiliary / alive / conditional particle filter over
+    the COW store, orchestrated by a shared :class:`PopulationExecutor`."""
 
     def __init__(self, ssm: SSMDef, config: FilterConfig):
         self.ssm = ssm
         self.config = config
         self.store_cfg = config.store_config(ssm.record_shape)
         self._resample = resampling.RESAMPLERS[config.resampler]
-        # Lifecycle chunk jits, cached per instance so repeated runs hit
-        # the compile cache; only growth events (new pool shapes) recompile.
-        self._chunk_cache: dict = {}
+        # The shared population executor (DESIGN.md §4): per-instance
+        # chunk-jit cache (repeated runs hit the compile cache; only
+        # growth events — new pool shapes — recompile), the lifecycle
+        # loop, and telemetry.
+        self._exec = executor_lib.PopulationExecutor()
         self.sharded_cfg: Optional[sharded_lib.ShardedStoreConfig] = None
         if config.mesh is not None:
             if ssm.lookahead is not None or (
@@ -187,6 +187,11 @@ class ParticleFilter:
 
     # -- public API ---------------------------------------------------------
 
+    @property
+    def executor(self) -> executor_lib.PopulationExecutor:
+        """This filter's executor (chunk-jit cache + lifecycle stats)."""
+        return self._exec
+
     def run(self, key: jax.Array, params: Any, observations: jax.Array) -> FilterResult:
         """Inference task: filter against observations ``[T, ...]``."""
         return self._run(key, params, observations, simulate=False)
@@ -198,6 +203,36 @@ class ParticleFilter:
         isolating the overhead of lazy-pointer bookkeeping.
         """
         return self._run(key, params, dummy_obs, simulate=True)
+
+    def csmc_sweep(
+        self,
+        key: jax.Array,
+        params: Any,
+        observations: jax.Array,
+        reference: jax.Array,
+        use_ref: jax.Array,
+    ) -> FilterResult:
+        """One conditional-SMC sweep (the inner loop of particle Gibbs).
+
+        Particle 0 keeps the reference lineage: its resampling ancestor
+        is forced to 0 and its propagated record is overwritten by
+        ``reference[t]`` (``SSMDef.set_reference`` pushes the record
+        back into the state).  ``reference``/``use_ref`` are data, not
+        trace constants, so one compiled sweep serves every iteration —
+        and because the sweep runs through the same executor paths as
+        :meth:`run`, it inherits ``FilterConfig.grow`` and ``mesh``
+        support unchanged (a 1-shard mesh sweep is bit-exact with the
+        single-device one).
+        """
+        if self.ssm.set_reference is None:
+            raise ValueError("conditional SMC requires SSMDef.set_reference")
+        return self._run(
+            key,
+            params,
+            observations,
+            simulate=False,
+            csmc=(reference, jnp.asarray(use_ref)),
+        )
 
     def jitted(self, simulate: bool = False):
         fn = self.simulate if simulate else self.run
@@ -211,10 +246,15 @@ class ParticleFilter:
     # -- internals ----------------------------------------------------------
 
     def _run(
-        self, key: jax.Array, params: Any, observations: jax.Array, simulate: bool
+        self,
+        key: jax.Array,
+        params: Any,
+        observations: jax.Array,
+        simulate: bool,
+        csmc: Optional[Tuple[jax.Array, jax.Array]] = None,
     ) -> FilterResult:
         if self.config.mesh is not None:
-            return self._run_sharded(key, params, observations, simulate)
+            return self._run_sharded(key, params, observations, simulate, csmc)
         cfg, ssm, scfg = self.config, self.ssm, self.store_cfg
         n = cfg.n_particles
 
@@ -222,16 +262,42 @@ class ParticleFilter:
         state0 = ssm.init(init_key, n, params)
         store0 = store_lib.create(scfg)
         logw0 = jnp.full((n,), -math.log(n))
-        logz0 = jnp.zeros(())
+        init_carry = (key, state0, store0, logw0, jnp.zeros(()))
 
-        init_carry = (key, state0, store0, logw0, logz0)
-        if cfg.grow:
-            return self._run_lifecycle(init_carry, params, observations, simulate)
-        scan_step = self._make_scan_step(params, observations, simulate)
-        carry, (ess_trace, resampled, used_trace) = jax.lax.scan(
-            scan_step, init_carry, jnp.arange(cfg.n_steps)
+        chunk = self._exec.jit_chunk(
+            ("local", bool(simulate), csmc is not None),
+            lambda: self._build_chunk(simulate, csmc is not None),
+        )
+        extras = csmc if csmc is not None else ()
+        chunk_fn = lambda c, ts: chunk(c, ts, params, observations, *extras)
+
+        # Carry layout: (key, state, store, logw, logz) — the store at
+        # index 2 is what the lifecycle loop reads and grows.
+        pool = executor_lib.PoolView(
+            free=lambda c: store_lib.free_blocks(scfg, c[2]),
+            num_blocks=lambda c: c[2].pool.num_blocks,
+            cap=scfg.pool_blocks_cap,
+            grow_to=lambda c, nb: (
+                c[0],
+                c[1],
+                store_lib.grow(scfg, c[2], nb),
+                c[3],
+                c[4],
+            ),
+            oom=lambda c: store_lib.oom_flag(scfg, c[2]),
+        )
+        carry, outs, grew = self._exec.run(
+            init_carry,
+            n_steps=cfg.n_steps,
+            chunk_fn=chunk_fn,
+            policy=cfg.growth_policy(),
+            need_per_step=n,
+            pool=pool,
         )
         _, state, store, logw, logz = carry
+        ess_trace, resampled, used_trace = executor_lib.concat_chunk_outs(
+            outs, executor_lib.filter_empty_outs()
+        )
         return FilterResult(
             store=store,
             state=state,
@@ -241,14 +307,30 @@ class ParticleFilter:
             resampled=resampled,
             used_blocks_trace=used_trace,
             oom=store_lib.oom_flag(scfg, store),
-            grew=jnp.zeros((), jnp.int32),
+            grew=jnp.asarray(grew, jnp.int32),
         )
 
-    def _make_scan_step(self, params, observations, simulate):
-        """Build the single-device per-generation scan step (shared by the
-        monolithic scan and the lifecycle chunks).  ``params`` and
-        ``observations`` may be tracers: the lifecycle's cached chunk jit
-        passes them as arguments so one compile serves every run."""
+    def _build_chunk(self, simulate: bool, csmc: bool):
+        """The single-device generation chunk: ``(carry, ts, params,
+        observations[, reference, use_ref])``.  Everything dynamic is an
+        argument, so one compile serves every run (and every rep of a
+        benchmark) — only growth events recompile, shape-keyed on the
+        pool leaves."""
+
+        def chunk(carry, ts, params, observations, *extras):
+            scan_step = self._make_scan_step(
+                params, observations, simulate, extras if csmc else None
+            )
+            return jax.lax.scan(scan_step, carry, ts)
+
+        return chunk
+
+    def _make_scan_step(self, params, observations, simulate, csmc=None):
+        """Build the single-device per-generation scan step.  ``params``
+        and ``observations`` may be tracers: the executor's cached chunk
+        jit passes them as arguments so one compile serves every run.
+        ``csmc`` is an optional ``(reference, use_ref)`` pair that pins
+        particle 0 to the reference lineage (conditional SMC)."""
         cfg, ssm, scfg = self.config, self.ssm, self.store_cfg
         n = cfg.n_particles
         clone_state = ssm.clone_state or _default_clone
@@ -270,6 +352,12 @@ class ParticleFilter:
                         logw + ssm.lookahead(state, t, obs_t, params)
                     )
                 ancestors = self._resample(key, lw)
+                if csmc is not None:
+                    # Conditional SMC: particle 0 keeps the reference lineage.
+                    _, use_ref = csmc
+                    ancestors = jnp.where(
+                        use_ref, ancestors.at[0].set(0), ancestors
+                    )
                 state = clone_state(state, ancestors)
                 store = store_lib.clone(scfg, store, ancestors)
                 # APF correction: carried weight becomes w/mu of ancestor.
@@ -339,6 +427,17 @@ class ParticleFilter:
             state, dlogw, record = alive_loop(
                 k_alive, state, t, logw, dlogw, record, prev_state
             )
+            if csmc is not None:
+                # Pin particle 0 to the reference record.
+                reference, use_ref = csmc
+                ref_t = reference[t]
+                record = jnp.where(use_ref, record.at[0].set(ref_t), record)
+                state = jax.lax.cond(
+                    use_ref,
+                    lambda s: ssm.set_reference(s, ref_t),
+                    lambda s: s,
+                    state,
+                )
             lw = logw + dlogw
             logz = logz + jax.scipy.special.logsumexp(lw)
             logw = resampling.normalize(lw)
@@ -352,105 +451,16 @@ class ParticleFilter:
 
         return scan_step
 
-    def _chunk_fn(self, simulate: bool):
-        """Per-instance cache of the jitted lifecycle chunk.  The chunk
-        takes ``(carry, ts, params, observations)``, so the *same*
-        compiled function serves every run (and every rep of a
-        benchmark) — only growth events recompile, shape-keyed on the
-        pool leaves."""
-        key = ("local", bool(simulate))
-        fn = self._chunk_cache.get(key)
-        if fn is None:
-
-            def chunk(carry, ts, params, observations):
-                scan_step = self._make_scan_step(params, observations, simulate)
-                return jax.lax.scan(scan_step, carry, ts)
-
-            fn = self._chunk_cache[key] = jax.jit(chunk)
-        return fn
-
-    def _run_lifecycle(
-        self, init_carry, params, observations, simulate: bool
-    ) -> FilterResult:
-        """Generation-boundary pool lifecycle (DESIGN.md §3.1).
-
-        The scan over generations is cut into jitted chunks; between
-        chunks the host reads the surfaced headroom / OOM signal and
-        grows the pool outside jit (shape-keyed recompile of the chunk).
-        Two layers keep it correct *and* cheap:
-
-        * **pre-emptive watermark growth** — a chunk of G generations
-          can pop at most ``G * N`` blocks (one append per particle per
-          generation; clones only free), and an append with a committed
-          request at row ``i`` needs ``free_top > i``, so entering a
-          chunk with ``free >= G * N`` provably cannot OOM.  On the
-          single-device path this makes the retry below unreachable.
-        * **rollback-retry backstop** — if a chunk still sticks the
-          ``oom`` flag (possible on the sharded path, where import skew
-          can demand more than the watermark), the chunk's outputs are
-          discarded, the *pre-chunk checkpoint* (whose flag is clean)
-          grows, and the chunk re-runs with the same keys — bit-exact
-          with a run that had the capacity from the start.  This is why
-          the chunk carry is not jit-donated: the checkpoint must
-          outlive the chunk call.
-
-        Growth is capped at ``StoreConfig.pool_blocks_cap`` (the dense
-        bound + one transient block per particle), where allocation
-        provably cannot fail; an ``oom`` that persists at the cap (e.g.
-        export-slot overflow, which no amount of pool capacity fixes) is
-        surfaced in ``FilterResult.oom`` instead of looping forever.
-        """
-        cfg, scfg = self.config, self.store_cfg
-        n = cfg.n_particles
-        cap = scfg.pool_blocks_cap
-        chunk = max(1, cfg.grow_chunk)
-        chunk_fn = self._chunk_fn(simulate)
-
-        def grown(carry, new_nb):
-            key, state, store, logw, logz = carry
-            return (key, state, store_lib.grow(scfg, store, new_nb), logw, logz)
-
-        carry, outs, grew, t = init_carry, [], 0, 0
-        while t < cfg.n_steps:
-            ts = jnp.arange(t, min(t + chunk, cfg.n_steps))
-            need = int(ts.shape[0]) * n
-            store = carry[2]
-            free = int(store_lib.free_blocks(scfg, store))
-            nb = store.pool.num_blocks
-            if free < need and nb < cap:
-                carry = grown(
-                    carry,
-                    pool_lib.next_capacity(nb, need - free, cap, cfg.grow_factor),
-                )
-                grew += 1
-            new_carry, out = chunk_fn(carry, ts, params, observations)
-            nb = carry[2].pool.num_blocks
-            if bool(store_lib.oom_flag(scfg, new_carry[2])) and nb < cap:
-                carry = grown(
-                    carry, pool_lib.next_capacity(nb, need, cap, cfg.grow_factor)
-                )
-                grew += 1
-                continue  # retry the same chunk from the clean checkpoint
-            carry, t = new_carry, t + int(ts.shape[0])
-            outs.append(out)
-        _, state, store, logw, logz = carry
-        ess_trace, resampled, used_trace = _concat_chunk_outs(outs)
-        return FilterResult(
-            store=store,
-            state=state,
-            log_weights=logw,
-            log_evidence=logz,
-            ess_trace=ess_trace,
-            resampled=resampled,
-            used_blocks_trace=used_trace,
-            oom=store_lib.oom_flag(scfg, store),
-            grew=jnp.asarray(grew, jnp.int32),
-        )
-
     def _run_sharded(
-        self, key: jax.Array, params: Any, observations: jax.Array, simulate: bool
+        self,
+        key: jax.Array,
+        params: Any,
+        observations: jax.Array,
+        simulate: bool,
+        csmc: Optional[Tuple[jax.Array, jax.Array]] = None,
     ) -> FilterResult:
-        """The bootstrap filter scan under ``shard_map`` (DESIGN.md §5).
+        """The filter scan under ``shard_map`` (DESIGN.md §6), on the
+        same executor loop as the single-device path.
 
         Mirrors :meth:`_run` operation for operation: with a 1-device
         mesh every collective is the identity and the same keys drive the
@@ -458,6 +468,16 @@ class ParticleFilter:
         path.  Multi-shard runs draw per-shard propagation noise (keys
         folded with the shard index) and therefore agree statistically —
         same log-evidence estimand, independent randomness.
+
+        Under ``FilterConfig.grow`` the per-shard pools grow **in
+        lockstep**: every shard's pool keeps an identical capacity, so
+        the stacked-store layout (`store_specs`/`unstack`/`restack`)
+        stays consistent across growth events.  The executor reads the
+        stacked per-shard ``free_top``/``oom`` leaves, takes the worst
+        shard, and grows all pools together — cross-shard import skew
+        (DESIGN.md §6's capacity note) is exactly why the rollback-retry
+        backstop exists: a skewed resampling step can concentrate more
+        than the watermark's worth of imports on one shard.
 
         The returned ``FilterResult.store`` is the stacked global view
         (see :mod:`repro.distributed.sharded_store`): block tables hold
@@ -470,55 +490,95 @@ class ParticleFilter:
         mesh, axis = cfg.mesh, cfg.data_axes
         n, n_shards, nl = cfg.n_particles, shcfg.num_shards, shcfg.n_local
         local = shcfg.local
-        if cfg.grow:
-            return self._run_sharded_lifecycle(key, params, observations, simulate)
-
-        def body(key, params, observations):
-            s = lax.axis_index(axis)
-            scan_step, shard_key = self._make_sharded_step(
-                params, observations, simulate
-            )
-
-            key, init_key = jax.random.split(key)
-            state0 = ssm.init(shard_key(init_key, s), nl, params)
-            store0 = store_lib.create(local)
-            logw0 = jnp.full((nl,), -math.log(n))
-            logz0 = jnp.zeros(())
-
-            carry, (ess_trace, resampled, used_trace) = jax.lax.scan(
-                scan_step,
-                (key, state0, store0, logw0, logz0),
-                jnp.arange(cfg.n_steps),
-            )
-            _, state, store, logw, logz = carry
-            return (
-                sharded_lib.restack(store),
-                state,
-                logw,
-                logz,
-                ess_trace,
-                resampled,
-                used_trace,
-            )
-
+        sp = sharded_lib.store_specs(axis)
         ax = P(axis)
-        fn = shard_map(
-            body,
-            mesh=mesh,
-            in_specs=(P(), P(), P()),
-            out_specs=(
-                sharded_lib.store_specs(axis),
-                ax,
-                ax,
-                P(),
-                P(),
-                P(),
-                P(),
-            ),
-            check_rep=False,
+
+        def build_init():
+            def init_body(key, params):
+                s = lax.axis_index(axis)
+                key, init_key = jax.random.split(key)
+                if n_shards > 1:  # 1-shard keeps the single-device stream
+                    init_key = jax.random.fold_in(init_key, s)
+                state0 = ssm.init(init_key, nl, params)
+                return key, state0, sharded_lib.restack(store_lib.create(local))
+
+            return shard_map(
+                init_body,
+                mesh=mesh,
+                in_specs=(P(), P()),
+                out_specs=(P(), ax, sp),
+                check_rep=False,
+            )
+
+        init_fn = self._exec.jit_chunk("sharded_init", build_init)
+        key, state, store = init_fn(key, params)
+        logw = jnp.full((n,), -math.log(n))
+        carry = (key, state, store, logw, jnp.zeros(()))
+
+        n_extras = 2 if csmc is not None else 0
+
+        def build_chunk():
+            def chunk_body(key, state, store, logw, logz, ts, params, observations, *extras):
+                scan_step, _ = self._make_sharded_step(
+                    params, observations, simulate, extras if csmc is not None else None
+                )
+                carry = (key, state, sharded_lib.unstack(store), logw, logz)
+                carry, (ess, did, used) = jax.lax.scan(scan_step, carry, ts)
+                key_, state_, store_, logw_, logz_ = carry
+                return (
+                    key_,
+                    state_,
+                    sharded_lib.restack(store_),
+                    logw_,
+                    logz_,
+                    ess,
+                    did,
+                    used,
+                )
+
+            return shard_map(
+                chunk_body,
+                mesh=mesh,
+                in_specs=(P(), ax, sp, ax, P(), P(), P(), P()) + (P(),) * n_extras,
+                out_specs=(P(), ax, sp, ax, P(), P(), P(), P()),
+                check_rep=False,
+            )
+
+        chunk = self._exec.jit_chunk(
+            ("sharded", bool(simulate), csmc is not None), build_chunk
         )
-        store, state, logw, logz, ess_trace, resampled, used_trace = fn(
-            key, params, observations
+        extras = csmc if csmc is not None else ()
+
+        def chunk_fn(c, ts):
+            key, state, store, logw, logz, ess, did, used = chunk(
+                *c, ts, params, observations, *extras
+            )
+            return (key, state, store, logw, logz), (ess, did, used)
+
+        pool = executor_lib.PoolView(
+            free=lambda c: store_lib.free_blocks(local, c[2]),  # worst shard
+            num_blocks=lambda c: sharded_lib.local_num_blocks(c[2], n_shards),
+            cap=sharded_lib.lifecycle_cap(shcfg),
+            grow_to=lambda c, nb: (
+                c[0],
+                c[1],
+                sharded_lib.grow(shcfg, mesh, c[2], nb),
+                c[3],
+                c[4],
+            ),
+            oom=lambda c: jnp.any(c[2].pool.oom),
+        )
+        carry, outs, grew = self._exec.run(
+            carry,
+            n_steps=cfg.n_steps,
+            chunk_fn=chunk_fn,
+            policy=cfg.growth_policy(),
+            need_per_step=nl,
+            pool=pool,
+        )
+        _, state, store, logw, logz = carry
+        ess_trace, resampled, used_trace = executor_lib.concat_chunk_outs(
+            outs, executor_lib.filter_empty_outs()
         )
         return FilterResult(
             store=store,
@@ -529,15 +589,18 @@ class ParticleFilter:
             resampled=resampled,
             used_blocks_trace=used_trace,
             oom=jnp.any(store.pool.oom),
-            grew=jnp.zeros((), jnp.int32),
+            grew=jnp.asarray(grew, jnp.int32),
         )
 
-    def _make_sharded_step(self, params, observations, simulate):
+    def _make_sharded_step(self, params, observations, simulate, csmc=None):
         """Build the per-generation scan step that runs *inside*
-        ``shard_map`` (shared by the monolithic scan and the lifecycle
-        chunks).  Carry: ``(key, state, local store, logw, logz)``; the
-        shard index is re-derived from ``lax.axis_index`` on every call,
-        so the step closes over nothing shard-specific."""
+        ``shard_map`` (the sharded twin of :meth:`_make_scan_step`).
+        Carry: ``(key, state, local store, logw, logz)``; the shard
+        index is re-derived from ``lax.axis_index`` on every call, so
+        the step closes over nothing shard-specific.  ``csmc`` pins the
+        reference lineage: the ancestor pin is global (every shard
+        computes the same ancestor vector), the record/state pin applies
+        on shard 0 only — where global particle 0 lives."""
         cfg, ssm = self.config, self.ssm
         shcfg = self.sharded_cfg
         mesh, axis = cfg.mesh, cfg.data_axes
@@ -567,6 +630,13 @@ class ParticleFilter:
                 glw = sharded_lib.gather_global(logw, axis)
                 ancestors = self._resample(key, glw)  # [N]; same on
                 # every shard (shared key, replicated weights).
+                if csmc is not None:
+                    # Conditional SMC: global particle 0 keeps the
+                    # reference lineage (same pin on every shard).
+                    _, use_ref = csmc
+                    ancestors = jnp.where(
+                        use_ref, ancestors.at[0].set(0), ancestors
+                    )
                 full_state = jax.tree.map(
                     lambda x: sharded_lib.gather_global(x, axis), state
                 )
@@ -605,6 +675,19 @@ class ParticleFilter:
                 k_res, t, state, store, logw, s, lo
             )
             state, dlogw, record = propagate(k_prop, state, t, logw, s)
+            if csmc is not None:
+                # Pin local row 0 of shard 0 — global particle 0 — to
+                # the reference record.
+                reference, use_ref = csmc
+                ref_t = reference[t]
+                pin = use_ref & (s == 0)
+                record = jnp.where(pin, record.at[0].set(ref_t), record)
+                state = jax.lax.cond(
+                    pin,
+                    lambda st: ssm.set_reference(st, ref_t),
+                    lambda st: st,
+                    state,
+                )
             lw = logw + dlogw
             glw = sharded_lib.gather_global(lw, axis)
             logz = logz + jax.scipy.special.logsumexp(glw)
@@ -619,121 +702,3 @@ class ParticleFilter:
             return (key, state, store, logw, logz), out
 
         return scan_step, shard_key
-
-    def _run_sharded_lifecycle(
-        self, key: jax.Array, params: Any, observations: jax.Array, simulate: bool
-    ) -> FilterResult:
-        """The lifecycle driver of :meth:`_run_lifecycle`, shard-mapped.
-
-        Same chunked structure, with the per-shard pools growing **in
-        lockstep**: every shard's pool keeps an identical capacity, so
-        the stacked-store layout (`store_specs`/`unstack`/`restack`)
-        stays consistent across growth events.  The host reads the
-        stacked per-shard ``free_top``/``oom`` leaves, takes the worst
-        shard, and grows all pools together — cross-shard import skew
-        (DESIGN.md §5's capacity note) is exactly why the rollback-retry
-        backstop exists: a skewed resampling step can concentrate more
-        than the watermark's worth of imports on one shard.
-        """
-        cfg, ssm = self.config, self.ssm
-        shcfg = self.sharded_cfg
-        mesh, axis = cfg.mesh, cfg.data_axes
-        n, n_shards, nl = cfg.n_particles, shcfg.num_shards, shcfg.n_local
-        local = shcfg.local
-        sp = sharded_lib.store_specs(axis)
-        ax = P(axis)
-
-        init_fn = self._chunk_cache.get("sharded_init")
-        if init_fn is None:
-
-            def init_body(key, params):
-                s = lax.axis_index(axis)
-                key, init_key = jax.random.split(key)
-                if n_shards > 1:  # 1-shard keeps the single-device stream
-                    init_key = jax.random.fold_in(init_key, s)
-                state0 = ssm.init(init_key, nl, params)
-                return key, state0, sharded_lib.restack(store_lib.create(local))
-
-            init_fn = self._chunk_cache["sharded_init"] = jax.jit(
-                shard_map(
-                    init_body,
-                    mesh=mesh,
-                    in_specs=(P(), P()),
-                    out_specs=(P(), ax, sp),
-                    check_rep=False,
-                )
-            )
-        key, state, store = init_fn(key, params)
-
-        chunk_fn = self._chunk_cache.get(("sharded", bool(simulate)))
-        if chunk_fn is None:
-
-            def chunk_body(key, state, store, logw, logz, ts, params, observations):
-                scan_step, _ = self._make_sharded_step(
-                    params, observations, simulate
-                )
-                carry = (key, state, sharded_lib.unstack(store), logw, logz)
-                carry, (ess, did, used) = jax.lax.scan(scan_step, carry, ts)
-                key, state, store, logw, logz = carry
-                return (
-                    key,
-                    state,
-                    sharded_lib.restack(store),
-                    logw,
-                    logz,
-                    ess,
-                    did,
-                    used,
-                )
-
-            chunk_fn = self._chunk_cache[("sharded", bool(simulate))] = jax.jit(
-                shard_map(
-                    chunk_body,
-                    mesh=mesh,
-                    in_specs=(P(), ax, sp, ax, P(), P(), P(), P()),
-                    out_specs=(P(), ax, sp, ax, P(), P(), P(), P()),
-                    check_rep=False,
-                )
-            )
-
-        # EAGER stores carry a 1-block dummy pool — nothing to grow.
-        cap = 0 if local.mode is CopyMode.EAGER else local.pool_blocks_cap
-        chunk = max(1, cfg.grow_chunk)
-        logw = jnp.full((n,), -math.log(n))
-        logz = jnp.zeros(())
-        outs, grew, t = [], 0, 0
-
-        while t < cfg.n_steps:
-            ts = jnp.arange(t, min(t + chunk, cfg.n_steps))
-            need = int(ts.shape[0]) * nl
-            nb = sharded_lib.local_num_blocks(store, n_shards)
-            free = int(store_lib.free_blocks(local, store))  # worst shard
-            if free < need and nb < cap:
-                new_nb = pool_lib.next_capacity(nb, need - free, cap, cfg.grow_factor)
-                store = sharded_lib.grow(shcfg, mesh, store, new_nb)
-                grew += 1
-            ckpt = (key, state, store, logw, logz)
-            key, state, new_store, logw, logz, ess, did, used = chunk_fn(
-                *ckpt, ts, params, observations
-            )
-            nb = sharded_lib.local_num_blocks(ckpt[2], n_shards)
-            if bool(jnp.any(new_store.pool.oom)) and nb < cap:
-                new_nb = pool_lib.next_capacity(nb, need, cap, cfg.grow_factor)
-                key, state, _, logw, logz = ckpt
-                store = sharded_lib.grow(shcfg, mesh, ckpt[2], new_nb)
-                grew += 1
-                continue  # retry the chunk from the clean checkpoint
-            store, t = new_store, t + int(ts.shape[0])
-            outs.append((ess, did, used))
-        ess_trace, resampled, used_trace = _concat_chunk_outs(outs)
-        return FilterResult(
-            store=store,
-            state=state,
-            log_weights=logw,
-            log_evidence=logz,
-            ess_trace=ess_trace,
-            resampled=resampled,
-            used_blocks_trace=used_trace,
-            oom=jnp.any(store.pool.oom),
-            grew=jnp.asarray(grew, jnp.int32),
-        )

@@ -10,19 +10,35 @@ The conditional SMC sweep pins particle 0 to the reference: its ancestor
 is forced to 0 at every resampling step and its propagated record is
 overwritten by the reference record (models supply
 ``SSMDef.set_reference`` to push the record back into the state).
+
+The sweep itself is :meth:`repro.smc.filters.ParticleFilter.csmc_sweep`,
+driven by the shared :class:`repro.smc.executor.PopulationExecutor`
+(DESIGN.md §4).  That buys particle Gibbs everything the plain filter's
+host loop has, with no orchestration code of its own:
+
+* the compiled sweep is cached **per instance** (the reference
+  trajectory and the ``use_ref`` switch are data, not trace constants),
+  so repeated :meth:`run` calls — and every iteration within a run —
+  reuse one compile instead of re-jitting the sweep per call;
+* ``FilterConfig.grow`` runs each sweep as jitted generation chunks
+  with watermark growth + rollback-retry, bit-exact with an
+  oversized-fixed-pool run (a full pool surfaces/grows instead of
+  silently corrupting the retained trajectory);
+* ``FilterConfig.mesh`` shards the sweep's population across devices
+  (1-shard mesh bit-exact with single-device, like the plain filter).
 """
 
 from __future__ import annotations
 
-import math
-from typing import Any, NamedTuple, Tuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import store as store_lib
-from repro.smc import resampling
-from repro.smc.filters import FilterConfig, FilterResult, SSMDef, _default_clone
+from repro.distributed import sharded_store as sharded_lib
+from repro.smc import executor as executor_lib
+from repro.smc.filters import FilterConfig, ParticleFilter, SSMDef
 
 __all__ = ["ParticleGibbs", "PGResult"]
 
@@ -32,6 +48,12 @@ class PGResult(NamedTuple):
     log_evidences: jax.Array  # [n_iters]
     peak_blocks: jax.Array  # max over iterations (memory metric)
     used_blocks_trace: jax.Array  # [n_iters, T]
+    # Lifecycle surface (DESIGN.md §3.1): ``oom`` = any sweep's store
+    # ever stuck its allocation-failure flag (the retained trajectory is
+    # then NOT trustworthy); ``grew`` counts pool growth events across
+    # all sweeps (always 0 with ``FilterConfig.grow`` off).
+    oom: jax.Array  # scalar bool
+    grew: jax.Array  # scalar int32
 
 
 class ParticleGibbs:
@@ -40,111 +62,53 @@ class ParticleGibbs:
             raise ValueError("particle Gibbs requires SSMDef.set_reference")
         self.ssm = ssm
         self.config = config
-        self.store_cfg = config.store_config(ssm.record_shape)
-        self._resample = resampling.RESAMPLERS[config.resampler]
+        # The CSMC sweep is the filter's executor-driven scan with the
+        # reference lineage pinned; all orchestration (cached chunk
+        # jits, growth, mesh) is inherited from ParticleFilter.
+        self._pf = ParticleFilter(ssm, config)
+        self.store_cfg = self._pf.store_cfg
+        self.sharded_cfg = self._pf.sharded_cfg
+
+    @property
+    def executor(self) -> executor_lib.PopulationExecutor:
+        """The sweep's executor (chunk-jit cache + lifecycle stats)."""
+        return self._pf.executor
 
     def run(
         self, key: jax.Array, params: Any, observations: jax.Array, n_iters: int = 3
     ) -> PGResult:
-        sweep = jax.jit(self._csmc)
-        t_steps = self.config.n_steps
-        ref = jnp.zeros((t_steps, *self.ssm.record_shape), jnp.dtype(self.config.dtype))
+        cfg = self.config
+        t_steps = cfg.n_steps
+        ref = jnp.zeros((t_steps, *self.ssm.record_shape), jnp.dtype(cfg.dtype))
         logzs, traces = [], []
         peak = jnp.zeros((), jnp.int32)
+        oom = jnp.zeros((), jnp.bool_)
+        grew = 0
         for it in range(n_iters):
             key, k_run, k_pick = jax.random.split(key, 3)
-            use_ref = jnp.asarray(it > 0)
-            result = sweep(k_run, params, observations, ref, use_ref)
+            result = self._pf.csmc_sweep(
+                k_run, params, observations, ref, jnp.asarray(it > 0)
+            )
             idx = jax.random.categorical(k_pick, result.log_weights)
             # The eager deep copy between iterations (paper, Section 4 VBD).
-            ref = store_lib.materialize(self.store_cfg, result.store, idx)[:t_steps]
+            ref = self._materialize(result.store, idx)[:t_steps]
             logzs.append(result.log_evidence)
             traces.append(result.used_blocks_trace)
             peak = jnp.maximum(peak, result.store.peak_blocks)
+            oom = jnp.logical_or(oom, result.oom)
+            grew += int(result.grew)
         return PGResult(
             reference=ref,
             log_evidences=jnp.stack(logzs),
             peak_blocks=peak,
             used_blocks_trace=jnp.stack(traces),
+            oom=oom,
+            grew=jnp.asarray(grew, jnp.int32),
         )
 
-    # -- conditional SMC sweep (jitted once, reference passed as data) ------
-
-    def _csmc(
-        self,
-        key: jax.Array,
-        params: Any,
-        observations: jax.Array,
-        reference: jax.Array,
-        use_ref: jax.Array,
-    ) -> FilterResult:
-        cfg, ssm, scfg = self.config, self.ssm, self.store_cfg
-        n = cfg.n_particles
-        clone_state = ssm.clone_state or _default_clone
-
-        key, init_key = jax.random.split(key)
-        state0 = ssm.init(init_key, n, params)
-        store0 = store_lib.create(scfg)
-        logw0 = jnp.full((n,), -math.log(n))
-
-        def scan_step(carry, t):
-            key, state, store, logw, logz = carry
-            key, k_res, k_prop = jax.random.split(key, 3)
-
-            def resample(operand):
-                state, store, logw = operand
-                ancestors = self._resample(k_res, logw)
-                # Conditional SMC: particle 0 keeps the reference lineage.
-                ancestors = jnp.where(
-                    use_ref, ancestors.at[0].set(0), ancestors
-                )
-                return (
-                    clone_state(state, ancestors),
-                    store_lib.clone(scfg, store, ancestors),
-                    jnp.full((n,), -math.log(n)),
-                )
-
-            state, store, logw = jax.lax.cond(
-                t > 0, resample, lambda o: o, (state, store, logw)
-            )
-            obs_t = jax.tree.map(lambda o: o[t], observations)
-            state, dlogw, record = ssm.step(k_prop, state, t, obs_t, params)
-            # Pin particle 0 to the reference record.
-            ref_t = reference[t]
-            record = jnp.where(
-                use_ref, record.at[0].set(ref_t), record
-            )
-            state = jax.lax.cond(
-                use_ref,
-                lambda s: ssm.set_reference(s, ref_t),
-                lambda s: s,
-                state,
-            )
-            lw = logw + dlogw
-            logz = logz + jax.scipy.special.logsumexp(lw)
-            logw = resampling.normalize(lw)
-            store = store_lib.append(scfg, store, record)
-            out = (
-                resampling.ess(logw),
-                t > 0,
-                store_lib.used_blocks(scfg, store),
-            )
-            return (key, state, store, logw, logz), out
-
-        carry, (ess_trace, resampled, used_trace) = jax.lax.scan(
-            scan_step,
-            (key, state0, store0, logw0, jnp.zeros(())),
-            jnp.arange(cfg.n_steps),
-        )
-        _, state, store, logw, logz = carry
-        return FilterResult(
-            store=store,
-            state=state,
-            log_weights=logw,
-            log_evidence=logz,
-            ess_trace=ess_trace,
-            resampled=resampled,
-            used_blocks_trace=used_trace,
-            oom=store_lib.oom_flag(scfg, store),
-            grew=jnp.zeros((), jnp.int32),
-        )
+    def _materialize(self, store: store_lib.ParticleStore, idx: jax.Array) -> jax.Array:
+        if self.sharded_cfg is not None:
+            return sharded_lib.trajectories(
+                self.sharded_cfg, self.config.mesh, store
+            )[idx]
+        return store_lib.materialize(self.store_cfg, store, idx)

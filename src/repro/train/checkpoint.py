@@ -1,7 +1,7 @@
 """Sharded checkpointing with async save and elastic restore.
 
 Design (single-process host; the multi-host generalization shards the
-leaf files by process and is a straight extension — see DESIGN.md §6):
+leaf files by process and is a straight extension — see DESIGN.md §7):
 
   * a checkpoint is a directory ``step_<n>/`` of one ``.npy`` per pytree
     leaf (keyed by its tree path) + ``meta.json`` (step, leaf index,

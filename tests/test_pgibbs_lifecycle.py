@@ -1,0 +1,202 @@
+"""CSMC / particle-Gibbs lifecycle tests (DESIGN.md §4).
+
+Particle Gibbs rides the shared :class:`PopulationExecutor` through
+``ParticleFilter.csmc_sweep``, so it must inherit every lifecycle
+guarantee the plain filter has (mirroring ``test_pool_lifecycle.py`` /
+``test_sharded_store.py``):
+
+  * **grow-from-tiny bit-exactness**: a particle-Gibbs run whose sweeps
+    start on a deliberately tiny pool and rely on generation-boundary
+    growth matches an oversized-fixed-pool reference bit-exactly —
+    retained trajectory, per-iteration ``log_evidences``, and
+    ``peak_blocks`` (growth is observationally invisible; block ids
+    never leak into values);
+  * **surfaced OOM**: without growth, the same tiny pool sticks the
+    ``oom`` flag end to end (``PGResult.oom``) instead of only
+    corrupting quietly;
+  * **1-shard mesh bit-exactness**: a CSMC sweep under a 1-device mesh
+    is bit-exact with the single-device sweep (every collective is the
+    identity; same keys drive the same samplers);
+  * **zero recompiles on repeated runs**: the compiled sweep is cached
+    per instance (reference/use_ref are data, not trace constants) —
+    the executor's compile counter must not move on a second
+    ``ParticleGibbs.run``, the regression test for the old
+    ``jax.jit(self._csmc)``-per-call bug.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import lgssm_def
+
+from repro.core.config import CopyMode
+from repro.smc.filters import FilterConfig
+from repro.smc.pgibbs import ParticleGibbs
+
+
+class TestPGibbsLifecycle:
+    """The filter acceptance scenario, replayed through CSMC sweeps."""
+
+    N, T, ITERS = 32, 32, 3
+    SMALL = 40  # well under the sparse need of one sweep
+
+    def _base(self, **kw):
+        return dict(
+            n_particles=self.N,
+            n_steps=self.T,
+            mode=CopyMode.LAZY_SR,
+            block_size=2,
+            **kw,
+        )
+
+    @pytest.fixture(scope="class")
+    def data(self):
+        key = jax.random.PRNGKey(0)
+        return key, jax.random.normal(key, (self.T,))
+
+    @pytest.fixture(scope="class")
+    def reference(self, data):
+        key, ys = data
+        pg = ParticleGibbs(lgssm_def(), FilterConfig(**self._base()))
+        out = pg.run(key, None, ys, n_iters=self.ITERS)
+        assert not bool(out.oom) and int(out.grew) == 0
+        return out
+
+    def test_overflow_without_growth_surfaces_oom(self, data):
+        key, ys = data
+        pg = ParticleGibbs(
+            lgssm_def(), FilterConfig(**self._base(pool_blocks=self.SMALL))
+        )
+        out = pg.run(key, None, ys, n_iters=self.ITERS)
+        assert bool(out.oom)  # surfaced end to end, not a quiet number
+
+    def test_grow_from_tiny_matches_oversized_reference_bit_exact(
+        self, data, reference
+    ):
+        key, ys = data
+        pg = ParticleGibbs(
+            lgssm_def(),
+            FilterConfig(
+                **self._base(pool_blocks=self.SMALL, grow=True, grow_chunk=4)
+            ),
+        )
+        out = pg.run(key, None, ys, n_iters=self.ITERS)
+        assert not bool(out.oom) and int(out.grew) >= 1
+        # same keys -> same sweeps, to the bit: growth is invisible
+        np.testing.assert_array_equal(
+            np.asarray(out.reference), np.asarray(reference.reference)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out.log_evidences), np.asarray(reference.log_evidences)
+        )
+        assert int(out.peak_blocks) == int(reference.peak_blocks)
+        np.testing.assert_array_equal(
+            np.asarray(out.used_blocks_trace),
+            np.asarray(reference.used_blocks_trace),
+        )
+
+    def test_csmc_sharded_1mesh_matches_single_device(self, data, reference):
+        from jax.sharding import Mesh
+
+        key, ys = data
+        mesh = Mesh(np.array(jax.devices()[:1]), ("shards",))
+        pg = ParticleGibbs(
+            lgssm_def(), FilterConfig(**self._base(mesh=mesh))
+        )
+        out = pg.run(key, None, ys, n_iters=self.ITERS)
+        assert not bool(out.oom)
+        np.testing.assert_array_equal(
+            np.asarray(out.reference), np.asarray(reference.reference)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out.log_evidences), np.asarray(reference.log_evidences)
+        )
+        assert int(np.asarray(out.peak_blocks)[0]) == int(reference.peak_blocks)
+
+    def test_csmc_sharded_1mesh_grow_matches_single_device(self, data, reference):
+        """Lockstep per-shard growth inside the CSMC sweep stays
+        invisible too (the filter guarantee, inherited)."""
+        from jax.sharding import Mesh
+
+        key, ys = data
+        mesh = Mesh(np.array(jax.devices()[:1]), ("shards",))
+        pg = ParticleGibbs(
+            lgssm_def(),
+            FilterConfig(
+                **self._base(
+                    pool_blocks=self.SMALL, mesh=mesh, grow=True, grow_chunk=4
+                )
+            ),
+        )
+        out = pg.run(key, None, ys, n_iters=self.ITERS)
+        assert not bool(out.oom) and int(out.grew) >= 1
+        np.testing.assert_array_equal(
+            np.asarray(out.reference), np.asarray(reference.reference)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out.log_evidences), np.asarray(reference.log_evidences)
+        )
+
+
+class TestSweepCompileCache:
+    """Satellite regression: ``ParticleGibbs.run`` used to build a fresh
+    ``jax.jit(self._csmc)`` per call — every run re-traced and
+    re-compiled the sweep.  The executor caches the compiled chunk per
+    instance, with the reference passed as data, so repeated runs (and
+    iterations within a run) must trace exactly once."""
+
+    def test_repeated_run_triggers_zero_recompiles(self):
+        key = jax.random.PRNGKey(3)
+        ys = jax.random.normal(key, (12,))
+        pg = ParticleGibbs(
+            lgssm_def(), FilterConfig(n_particles=16, n_steps=12)
+        )
+        pg.run(key, None, ys, n_iters=2)  # warm: traces the sweep once
+        warm = pg.executor.stats.compiles
+        assert warm >= 1
+        pg.run(jax.random.PRNGKey(4), None, ys, n_iters=3)
+        assert pg.executor.stats.compiles == warm, (
+            "a repeated ParticleGibbs.run must hit the executor's "
+            "chunk cache — zero recompiles"
+        )
+
+    def test_iterations_share_one_compile(self):
+        """Within one run, use_ref=False (iteration 0) and use_ref=True
+        (later iterations) are the *same* compiled sweep — the switch is
+        data, not a trace constant."""
+        key = jax.random.PRNGKey(5)
+        ys = jax.random.normal(key, (10,))
+        pg = ParticleGibbs(
+            lgssm_def(), FilterConfig(n_particles=8, n_steps=10)
+        )
+        pg.run(key, None, ys, n_iters=4)
+        assert pg.executor.stats.compiles == 1
+
+    def test_filter_repeated_run_zero_recompiles(self):
+        """The same guarantee for the plain filter's executor, including
+        the growth path: rep runs replay the same capacity schedule, so
+        only the warmup's growth shapes ever compile."""
+        from repro.smc.filters import ParticleFilter
+
+        key = jax.random.PRNGKey(6)
+        ys = jax.random.normal(key, (24,))
+        pf = ParticleFilter(
+            lgssm_def(),
+            FilterConfig(
+                n_particles=16,
+                n_steps=24,
+                block_size=2,
+                pool_blocks=24,
+                grow=True,
+                grow_chunk=6,
+            ),
+        )
+        res = pf.run(key, None, ys)
+        assert int(res.grew) >= 1 and not bool(res.oom)
+        warm = pf.executor.stats.compiles
+        pf.run(jax.random.PRNGKey(7), None, ys)
+        assert pf.executor.stats.compiles == warm

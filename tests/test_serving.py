@@ -183,9 +183,9 @@ class TestSMCDecode:
 
     def test_sharded_trace_growth_matches_unsharded(self):
         """1-shard sharded token store: the lockstep growth branch of
-        `_TokenTrace.ensure_headroom` (stacked leaves, per-shard nb/cap
-        arithmetic) must fire and stay invisible — tokens bit-identical
-        to the unsharded run."""
+        `_TokenTrace.pool_view` (stacked leaves, per-shard nb/cap
+        arithmetic, applied by the executor's boundary ensure) must fire
+        and stay invisible — tokens bit-identical to the unsharded run."""
         from jax.sharding import Mesh
 
         cfg, lm, params = build()

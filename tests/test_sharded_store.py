@@ -1,4 +1,4 @@
-"""Sharded multi-device ParticleStore tests (DESIGN.md §5).
+"""Sharded multi-device ParticleStore tests (DESIGN.md §6).
 
 Two layers of validation, mirroring the repo's device-faking idiom
 (multi-device runs happen in a subprocess with
