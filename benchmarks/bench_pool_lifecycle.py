@@ -28,7 +28,6 @@ artifacts track the analytic cost too.
 
 from __future__ import annotations
 
-import math
 import time
 
 import jax

@@ -8,12 +8,10 @@ except PCFG (latest-state-only).  We report the per-step memory trace
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core.config import CopyMode
-from repro.smc.programs import PROBLEMS
 
-from benchmarks.common import KEY, build_runner, emit, time_run
+from benchmarks.common import build_runner, emit, time_run
 
 
 def run(n: int = 128, t: int = 64, problems=("rbpf", "mot")):

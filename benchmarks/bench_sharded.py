@@ -35,7 +35,6 @@ import math
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 

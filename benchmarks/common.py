@@ -8,10 +8,9 @@ import time
 from typing import Callable, Dict, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.config import ALL_MODES, CopyMode
+from repro.core.config import CopyMode
 from repro.smc.filters import FilterConfig, ParticleFilter
 from repro.smc.pgibbs import ParticleGibbs
 from repro.smc.programs import PROBLEMS

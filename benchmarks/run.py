@@ -16,6 +16,10 @@
 #           logZ sanity vs the plain filter, and the chunk-cache gate
 #           (repeated runs must trigger zero recompiles; compile counts
 #           land in the JSON artifacts)
+#   sched — continuous-batching SMC serving scheduler (DESIGN.md §8):
+#           tokens/sec + peak shared-pool blocks vs request arrival
+#           rate; gates single-request parity (bit-exact tokens) and
+#           peak < sum of per-request dense-equivalent caches
 #
 # ``--quick`` shrinks N/T for CI-speed runs; default sizes run in
 # minutes on a CPU host.  The at-scale numbers live in the dry-run
@@ -36,7 +40,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument(
         "--only", default="",
-        help="comma list of {fig5,fig6,fig7,tree,serve,block,sharded,write,pool,pgibbs}",
+        help="comma list of {fig5,fig6,fig7,tree,serve,block,sharded,write,"
+        "pool,pgibbs,sched}",
     )
     ap.add_argument(
         "--json", default="",
@@ -68,6 +73,7 @@ def _run_suites(args, only, n: int, t: int) -> None:
         bench_pgibbs,
         bench_pool_lifecycle,
         bench_scaling,
+        bench_scheduler,
         bench_serving,
         bench_simulation,
         bench_tree_bound,
@@ -98,6 +104,12 @@ def _run_suites(args, only, n: int, t: int) -> None:
             t=t,
             iters=2 if args.quick else 3,
             reps=2 if args.quick else 3,
+        )
+    if only is None or "sched" in only:
+        bench_scheduler.run(
+            n_reqs=3 if args.quick else 4,
+            n_particles=6 if args.quick else 8,
+            steps=12 if args.quick else 24,
         )
     if only is None or "sharded" in only:
         # Subprocess: bench_sharded fakes a multi-device host via

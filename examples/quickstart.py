@@ -6,14 +6,16 @@
    a config switch — identical outputs, very different memory.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+
+``REPRO_QS_N`` / ``REPRO_QS_T`` shrink the particle filter (CI smoke
+runs N=64, T=16 so the documented entry point can't rot unnoticed).
 """
 
 import math
+import os
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core.config import ALL_MODES, CopyMode
 from repro.core.graph import Runtime
@@ -70,8 +72,9 @@ def lgssm() -> SSMDef:
 
 
 key = jax.random.PRNGKey(0)
-ys = jax.random.normal(key, (64,))  # any observations will do here
-N, T = 256, 64
+N = int(os.environ.get("REPRO_QS_N", "256"))
+T = int(os.environ.get("REPRO_QS_T", "64"))
+ys = jax.random.normal(key, (T,))  # any observations will do here
 
 for mode in ALL_MODES:
     cfg = FilterConfig(n_particles=N, n_steps=T, mode=mode, block_size=1)

@@ -1,0 +1,188 @@
+"""Diff a fresh benchmark run against the committed perf baselines.
+
+CI runs every benchmark suite but used to throw the numbers away — a
+perf regression in the hot paths PRs 2-4 optimized would merge
+silently.  This script is the memory: ``benchmarks/baselines/`` holds
+one committed ``BENCH_<suite>.json`` per smoke suite, and CI fails when
+a fresh ``--quick --json`` run regresses past per-metric tolerances.
+
+Usage::
+
+    python -m benchmarks.run --quick --only write,fig6,pool,pgibbs,sched \
+        --json bench-fresh
+    python scripts/bench_compare.py --fresh bench-fresh          # gate
+    python scripts/bench_compare.py --fresh bench-fresh --update # rebase
+
+Two metric families, two gates:
+
+* **Derived metrics** (``peak_blocks=…;grew=…`` inside each row's
+  ``derived`` string) are machine-independent — block counts, compile
+  counts, savings ratios.  Any |change| beyond the tolerance (default
+  25%, per-metric overrides below) fails.
+* **Times** (``us_per_call``) are machine-dependent, so absolute
+  cross-machine gating would be pure noise.  Instead the fresh/baseline
+  ratios are normalized by their median — the host-speed factor — and a
+  row fails only if it got >25% slower *than the fleet of benchmarks
+  did*.  This catches "one hot path regressed"; a uniform slowdown of
+  everything shows up as the printed host factor, not a failure (the
+  artifact trajectory is the evidence for those).
+
+Intentional shifts: rerun with ``--update`` and commit the new
+baselines — the delta table goes in the PR description.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import re
+import shutil
+import statistics
+import sys
+
+# Per-metric tolerance overrides (fraction of baseline; matched by
+# metric name).  Everything else uses --tol / --time-tol.
+METRIC_TOL = {
+    "logz": 0.05,  # deterministic, but jax-version float drift happens
+    "pf_logz": 0.05,
+    "tokens_per_sec": None,  # time-family: covered by us_per_call
+    "iters_per_s": None,
+    "fixed_us": None,
+    "legacy_us": None,
+}
+_NUM = re.compile(r"^-?\d+(\.\d+)?([eE][+-]?\d+)?x?$")
+
+
+def load_dir(path: pathlib.Path) -> dict:
+    suites = {}
+    for f in sorted(path.glob("BENCH_*.json")):
+        data = json.loads(f.read_text())
+        suites[data["suite"]] = {row["name"]: row for row in data["rows"]}
+    return suites
+
+
+def derived_metrics(row: dict) -> dict:
+    out = {}
+    for part in str(row.get("derived", "")).split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        if _NUM.match(v.strip()):
+            out[k.strip()] = float(v.strip().rstrip("x"))
+    return out
+
+
+def compare(base: dict, fresh: dict, tol: float, time_tol: float) -> int:
+    failures = []
+    table = []
+    ratios = []
+    pairs = []  # (suite, name, brow, frow)
+    for suite, rows in base.items():
+        if suite not in fresh:
+            failures.append(f"suite {suite!r}: missing from fresh run")
+            continue
+        for name, brow in rows.items():
+            frow = fresh[suite].get(name)
+            if frow is None:
+                failures.append(f"{suite}/{name}: row missing from fresh run")
+                continue
+            pairs.append((suite, name, brow, frow))
+            b, f = brow["us_per_call"], frow["us_per_call"]
+            if b > 0:
+                ratios.append(f / b)
+    host = statistics.median(ratios) if ratios else 1.0
+
+    for suite, name, brow, frow in pairs:
+        b, f = brow["us_per_call"], frow["us_per_call"]
+        norm = (f / b) / host if b > 0 else 1.0
+        flag = ""
+        if norm > 1.0 + time_tol:
+            flag = "TIME REGRESSION"
+            failures.append(
+                f"{suite}/{name}: {norm:.2f}x slower than baseline "
+                f"(host-normalized; tol {1 + time_tol:.2f}x)"
+            )
+        table.append((suite, name, "us_per_call", b, f, norm, flag))
+        bmet, fmet = derived_metrics(brow), derived_metrics(frow)
+        for k, bv in bmet.items():
+            mtol = METRIC_TOL.get(k, tol)
+            if mtol is None:
+                continue
+            fv = fmet.get(k)
+            if fv is None:
+                failures.append(f"{suite}/{name}: metric {k!r} disappeared")
+                continue
+            rel = abs(fv - bv) / max(abs(bv), 1e-9)
+            flag = ""
+            if rel > mtol:
+                flag = "METRIC REGRESSION"
+                failures.append(
+                    f"{suite}/{name}: {k} {bv:g} -> {fv:g} "
+                    f"({rel:+.0%}; tol {mtol:.0%})"
+                )
+            ratio = fv / bv if abs(bv) > 1e-9 else float(fv == bv)
+            table.append((suite, name, k, bv, fv, ratio, flag))
+
+    for suite in fresh:
+        if suite not in base:
+            print(f"note: new suite {suite!r} has no baseline yet")
+
+    w = max((len(f"{s}/{n}") for s, n, *_ in table), default=10)
+    print(f"host speed factor (median us ratio): {host:.2f}x")
+    print(f"{'row':<{w}}  {'metric':<16} {'base':>12} {'fresh':>12} {'ratio':>7}")
+    for suite, name, metric, b, f, ratio, flag in table:
+        print(
+            f"{suite + '/' + name:<{w}}  {metric:<16} {b:>12.4g} {f:>12.4g} "
+            f"{ratio:>6.2f}x  {flag}"
+        )
+    if failures:
+        print(f"\n{len(failures)} regression(s) past tolerance:")
+        for msg in failures:
+            print(f"  FAIL {msg}")
+        print("\nintentional shift? rerun with --update and commit baselines")
+        return 1
+    print("\nall rows within tolerance")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", default="bench-fresh", help="fresh --json dir")
+    repo = pathlib.Path(__file__).resolve().parents[1]
+    ap.add_argument("--baseline", default=str(repo / "benchmarks" / "baselines"))
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="copy the fresh run over the committed baselines",
+    )
+    ap.add_argument("--tol", type=float, default=0.25, help="derived-metric tol")
+    ap.add_argument(
+        "--time-tol",
+        type=float,
+        default=0.25,
+        help="host-normalized us_per_call tol",
+    )
+    args = ap.parse_args()
+    fresh_dir = pathlib.Path(args.fresh)
+    base_dir = pathlib.Path(args.baseline)
+
+    if args.update:
+        base_dir.mkdir(parents=True, exist_ok=True)
+        files = sorted(fresh_dir.glob("BENCH_*.json"))
+        if not files:
+            print(f"no BENCH_*.json under {fresh_dir}", file=sys.stderr)
+            return 2
+        for f in files:
+            shutil.copy2(f, base_dir / f.name)
+            print(f"baseline <- {f.name}")
+        return 0
+
+    if not base_dir.exists():
+        print(f"no baselines under {base_dir} (run --update first)", file=sys.stderr)
+        return 2
+    return compare(load_dir(base_dir), load_dir(fresh_dir), args.tol, args.time_tol)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 from repro.models.config import ModelConfig
 

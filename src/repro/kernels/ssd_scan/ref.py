@@ -2,7 +2,6 @@
 
 from __future__ import annotations
 
-import jax
 
 from repro.models.ssm import ssd_chunked
 

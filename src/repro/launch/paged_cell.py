@@ -20,7 +20,6 @@ Usage (after the standard sweep):
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
-import functools
 import json
 import sys
 import time

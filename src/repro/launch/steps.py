@@ -18,7 +18,7 @@ forward.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, List, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -12,8 +12,7 @@ CPU-hosted dry-run lowering.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

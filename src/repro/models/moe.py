@@ -14,7 +14,6 @@ all-to-alls).
 
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

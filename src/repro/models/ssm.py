@@ -14,7 +14,6 @@ zamba2 architectures.
 
 from __future__ import annotations
 
-import math
 from typing import NamedTuple, Tuple
 
 import jax

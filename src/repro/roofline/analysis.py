@@ -20,9 +20,8 @@ MODEL_FLOPS / (HLO_FLOPs × chips), which exposes remat/redundancy waste.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
-from repro.distributed.hlo import collective_bytes_loop_aware
 from repro.models.config import ModelConfig
 
 

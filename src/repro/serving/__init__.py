@@ -4,5 +4,20 @@
 from repro.serving.kv_cache import KVCacheConfig, PagedKVCache
 from repro.serving.engine import ServeEngine
 from repro.serving.smc_decode import SMCDecoder
+from repro.serving.scheduler import (
+    AdmissionRefused,
+    DecodeRequest,
+    Scheduler,
+    SlotTable,
+)
 
-__all__ = ["KVCacheConfig", "PagedKVCache", "ServeEngine", "SMCDecoder"]
+__all__ = [
+    "AdmissionRefused",
+    "DecodeRequest",
+    "KVCacheConfig",
+    "PagedKVCache",
+    "Scheduler",
+    "ServeEngine",
+    "SlotTable",
+    "SMCDecoder",
+]

@@ -15,7 +15,7 @@ prompt across a population for O(1) — see smc_decode.py.
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -81,6 +81,33 @@ class ServeEngine:
 
     def free(self, mask: jax.Array) -> None:
         self.cache = kvc.free(self.cache, mask)
+
+    # -- slot-range ops (the scheduler's packed slot table, DESIGN.md §8) ----
+    def fork_slots(self, lo: int, ancestors_local: jax.Array) -> None:
+        """Fork within the slot range ``[lo, lo + len(ancestors_local))``.
+
+        The global ancestor vector is the identity outside the range, so
+        other requests' sequences are untouched (an identity row adds
+        then removes one reference — never frees, never reorders the
+        free stack).  With a single request spanning the whole table
+        this is exactly ``fork(ancestors_local)``.
+        """
+        n = ancestors_local.shape[0]
+        anc = jnp.arange(self.cache_cfg.max_seqs, dtype=jnp.int32)
+        anc = anc.at[lo : lo + n].set(lo + ancestors_local.astype(jnp.int32))
+        self.cache = kvc.fork(self.cache, anc)
+
+    def free_slots(self, lo: int, n: int) -> None:
+        """Release the sequences in slot range ``[lo, lo + n)`` (refcount
+        GC reclaims every page not shared outside the range)."""
+        mask = jnp.zeros((self.cache_cfg.max_seqs,), jnp.bool_)
+        self.cache = kvc.free(self.cache, mask.at[lo : lo + n].set(True))
+
+    def compact_cache(self, new_num_blocks: int | None = None) -> None:
+        """Densify live pages (optionally shrink-to-fit) between decode
+        steps; observationally invisible — attention reads through the
+        rewritten tables (DESIGN.md §3.1)."""
+        self.cache = kvc.compact(self.cache, new_num_blocks)
 
     def grow_cache(self, new_num_blocks: int) -> None:
         """Expand the KV page pool between decode steps (DESIGN.md §3.1).

@@ -118,7 +118,13 @@ def ensure_writable(
     need_copy = (~fresh) & shared & mask
     need_block = fresh | need_copy
 
-    pool, new_bid = pool_lib.alloc(cache.pool, n, commit=need_block)
+    # Rank-compacted allocation: under continuous batching the active
+    # slots are a sparse subset of ``max_seqs`` (DESIGN.md §8), and the
+    # plain ``alloc`` pairs request i with free-stack candidate i — a
+    # request in a high slot could spuriously OOM while blocks are free.
+    # ``alloc_compact`` succeeds whenever ``sum(need_block)`` blocks are
+    # free, and is bit-identical to ``alloc`` for dense-prefix masks.
+    pool, new_bid = pool_lib.alloc_compact(cache.pool, n, commit=need_block)
     # Rows that don't COW read the dump row instead of materializing a
     # live block's copy (same masked-gather fix as store._write_impl).
     src = jnp.where(need_copy, cur, pool.num_blocks)

@@ -1,0 +1,587 @@
+"""Continuous-batching SMC serving scheduler over one shared COW pool.
+
+The paper's platform exists so *populations* of similar objects share
+memory through lazy copy (Murray 2020, §1).  One population is the
+decoder's job (``smc_decode.py``); serving heavy traffic means **many
+concurrent requests** — each its own SMC population with its own
+prompt, particle count, and step budget — competing for one
+:class:`~repro.serving.kv_cache.PagedKVCache` block pool and one jitted
+decode step.  This module owns that multiplexing (DESIGN.md §8):
+
+* **Packed slot table.**  ``max_seqs`` stops being "the population
+  size" and becomes a capacity: the scheduler packs each request into a
+  contiguous slot range of the one decode batch, forks/frees per range
+  (:meth:`ServeEngine.fork_slots` / :meth:`ServeEngine.free_slots`),
+  and every token step is one jitted decode over the union of active
+  slots — per-row computations are independent, so a request's logits
+  (hence its tokens) are bit-exact with a standalone run.
+* **Admission is free-block accounting.**  A request joins only when
+  the pool can provably absorb its prefill plus one worst-case token
+  (``ceil(plen/bs)`` pages + one clone/COW/append page per particle —
+  the same arithmetic as the decoder's watermark, applied through the
+  executor's single ``ensure`` policy point).  Refusal on a full pool
+  is *surfaced* (:class:`AdmissionRefused`), never a silent drop.
+* **Join/leave at token boundaries.**  Admission, departure, growth,
+  and preemption all run in the executor's ``boundary`` hook between
+  jitted token steps — the same lifecycle seam every other population
+  method uses (DESIGN.md §4).
+* **Pressure: grow/compact first, preempt second.**  Headroom dips are
+  first answered by the §3.1 pool policy (geometric ``grow`` up to the
+  dense cap; ``compact`` shrink-to-fit returns memory when requests
+  leave).  Only when capacity is exhausted does the scheduler preempt —
+  newest request first: its particle pages are freed, its token history
+  is *retained* in the (growable) token-trace store plus a host-side
+  replay log, and resumption re-prefills the prompt and replays the
+  recorded tokens/forks through the same jitted decode step.  Replay
+  re-derives every KV page from the same per-row computation that wrote
+  it originally, so a preempted-then-resumed request finishes
+  **bit-exactly** like an uninterrupted one.
+
+``benchmarks/bench_scheduler.py`` measures tokens/sec and peak pool
+blocks against request arrival rate and gates single-request parity and
+the peak-under-sum-of-dense bound.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.config import CopyMode
+from repro.serving.engine import ServeEngine
+from repro.serving.smc_decode import (
+    SMCDecodeResult,
+    _TokenTrace,
+    smc_token_update,
+)
+from repro.smc import executor as executor_lib
+
+__all__ = [
+    "AdmissionRefused",
+    "DecodeRequest",
+    "Scheduler",
+    "SchedulerStats",
+    "SlotTable",
+]
+
+
+class AdmissionRefused(RuntimeError):
+    """The pool (or slot table) cannot absorb a request and no progress
+    is possible — surfaced loudly instead of dropping the request."""
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeRequest:
+    """One SMC-decode request: an independent population competing for
+    the shared pool.  ``arrive_at`` (in token-boundary ticks) lets
+    benchmarks model arrival rates; 0 means "queued from the start"."""
+
+    rid: str
+    prompt: jax.Array  # [plen] int32
+    n_particles: int
+    steps: int
+    key: jax.Array
+    target_temp: float = 0.7
+    proposal_temp: float = 1.0
+    ess_threshold: float = 0.5
+    token_copy_mode: CopyMode = CopyMode.LAZY_SR
+    token_block_size: Optional[int] = None  # None -> engine block size
+    mesh: Optional[Mesh] = None
+    data_axes: str = "shards"
+    use_store_kernels: bool = False
+    arrive_at: int = 0
+
+
+class SlotTable:
+    """Packed first-fit allocator over the engine's ``max_seqs`` decode
+    slots.  Requests occupy contiguous ranges (their rows of the one
+    jitted decode batch); ranges are freed wholesale on departure or
+    preemption."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._ranges: List[tuple] = []  # sorted [(lo, n), ...]
+
+    def alloc(self, n: int) -> Optional[int]:
+        """First contiguous gap of ``n`` slots, or None."""
+        lo = 0
+        for rlo, rn in self._ranges:
+            if rlo - lo >= n:
+                break
+            lo = max(lo, rlo + rn)
+        if lo + n > self.capacity:
+            return None
+        self._ranges.append((lo, n))
+        self._ranges.sort()
+        return lo
+
+    def free(self, lo: int, n: int) -> None:
+        self._ranges.remove((lo, n))
+
+    @property
+    def used(self) -> int:
+        return sum(n for _, n in self._ranges)
+
+    @property
+    def free_slots(self) -> int:
+        return self.capacity - self.used
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    """Host-side telemetry (rides into the bench JSON)."""
+
+    admitted: int = 0
+    completed: int = 0
+    preemptions: int = 0
+    resumes: int = 0
+    replayed_tokens: int = 0
+    compactions: int = 0
+    ticks: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class _ReqState:
+    """Scheduler-internal request state.  Lives from submit to
+    completion; survives preemption (``lo`` is None while off the
+    batch — the KV pages are gone but the token history and the replay
+    log are retained)."""
+
+    def __init__(self, req: DecodeRequest, block_size: int):
+        self.req = req
+        self.block_size = req.token_block_size if req.token_block_size else block_size
+        self.lo: Optional[int] = None
+        self.trace: Optional[_TokenTrace] = None
+        self.trace_view: Optional[executor_lib.PoolView] = None
+        self.key = req.key
+        self.logw = jnp.full((req.n_particles,), -math.log(req.n_particles))
+        self.logz = jnp.zeros(())
+        self.logits: Optional[jax.Array] = None
+        self.t_done = 0
+        self.ess: List[jax.Array] = []
+        self.used: List[int] = []
+        self.resampled: List[bool] = []
+        # Replay log for bit-exact resume: the token vector fed to the
+        # decode step at each past step (post-resample), and the
+        # ancestor vector of each resampling event.  The trace store
+        # holds *lineage* histories (later clones rewrite attribution),
+        # so it cannot reconstruct what slot i was fed at step t — this
+        # host-side log can, and replaying it (with the forks) rebuilds
+        # both the KV values and the COW sharing structure.
+        self.fed: List[np.ndarray] = []
+        self.forks: Dict[int, np.ndarray] = {}
+        self.grew0 = 0
+        self.oom0 = False
+        self.preemptions = 0
+
+    @property
+    def n(self) -> int:
+        return self.req.n_particles
+
+    @property
+    def done(self) -> bool:
+        return self.t_done >= self.req.steps
+
+    def prefill_blocks(self, bs: int) -> int:
+        return -(-int(self.req.prompt.shape[0]) // bs)
+
+
+class Scheduler:
+    """Multiplex many SMC-decode requests over one engine (one shared
+    COW page pool, one jitted decode step).  See the module docstring
+    and DESIGN.md §8 for the contract.
+
+    ``strict_admission=False`` restores the single-request decoder's
+    historical semantics: a request that cannot fit is admitted anyway
+    and the resulting sticky ``oom`` flag is surfaced in its result
+    (used by :meth:`SMCDecoder.run`, whose pool may be deliberately
+    undersized with growth off).  With the default ``True``, admission
+    blocks until departures free capacity, and raises
+    :class:`AdmissionRefused` when no active request remains to wait
+    for.
+    """
+
+    def __init__(
+        self,
+        engine: ServeEngine,
+        *,
+        grow: bool = True,
+        grow_factor: float = 2.0,
+        strict_admission: bool = True,
+        shrink_on_complete: bool = False,
+        executor: Optional[executor_lib.PopulationExecutor] = None,
+        on_boundary: Optional[Callable[["Scheduler"], None]] = None,
+    ):
+        self.engine = engine
+        self.grow = grow
+        self.grow_factor = grow_factor
+        self.strict_admission = strict_admission
+        self.shrink_on_complete = shrink_on_complete
+        # Observation/intervention hook at the leading edge of every
+        # token boundary (tests force preemption; benches sample pool
+        # occupancy) — runs before admission/growth/preemption.
+        self.on_boundary = on_boundary
+        self.slots = SlotTable(engine.cache_cfg.max_seqs)
+        self.stats = SchedulerStats()
+        if executor is None:
+            executor = executor_lib.PopulationExecutor()
+        self._exec = executor
+        self._queue: List[_ReqState] = []  # FIFO; resumes go to the front
+        self._active: List[_ReqState] = []  # admission order
+        self._results: Dict[str, SMCDecodeResult] = {}
+        self.tick = 0
+
+    # -- public API ----------------------------------------------------------
+
+    def submit(self, req: DecodeRequest) -> None:
+        live = {s.req.rid for s in self._queue + self._active}
+        if req.rid in live or req.rid in self._results:
+            raise ValueError(f"duplicate request id {req.rid!r}")
+        self._queue.append(_ReqState(req, self.engine.cache_cfg.block_size))
+
+    def run(self) -> Dict[str, SMCDecodeResult]:
+        """Drive every submitted request to completion; returns
+        ``{rid: SMCDecodeResult}``.  The loop is the executor's chunked
+        host loop with one token per chunk: the ``boundary`` hook does
+        admission / growth / preemption, the chunk is one jitted decode
+        over the active batch, departures finalize on the trailing edge
+        (DESIGN.md §4/§8)."""
+        carry = None
+        while self._queue or self._active:
+            carry, _, _ = self._exec.run(
+                carry,
+                n_steps=1,
+                chunk_fn=self._token_step,
+                policy=executor_lib.GrowthPolicy(
+                    # Growth is driven from the boundary hook (several
+                    # pools); the engine is host-mutable, so there is no
+                    # checkpoint to retry from.
+                    grow=self.grow,
+                    chunk=1,
+                    factor=self.grow_factor,
+                    retry=False,
+                ),
+                boundary=self._boundary,
+                traced=False,
+            )
+        return self._results
+
+    @property
+    def executor(self) -> executor_lib.PopulationExecutor:
+        return self._exec
+
+    def preempt(self, rid: str) -> None:
+        """Force-preempt an active request (callable from the
+        ``on_boundary`` hook — the pressure backstop drives the same
+        path).  Pages are freed; token history and SMC state are
+        retained; the request resumes from the queue front."""
+        for s in self._active:
+            if s.req.rid == rid:
+                self._preempt(s)
+                return
+        raise KeyError(f"request {rid!r} is not active")
+
+    def compact(self, new_num_blocks: Optional[int] = None) -> None:
+        """Densify the shared page pool (optionally shrink-to-fit) at a
+        token boundary — observationally invisible (DESIGN.md §3.1)."""
+        self.engine.compact_cache(new_num_blocks)
+        self.stats.compactions += 1
+
+    # -- pool views ----------------------------------------------------------
+
+    def _kv_view(self) -> executor_lib.PoolView:
+        """The executor's growth port over the engine's shared KV page
+        pool (host-mutable: the accessors ignore the carry)."""
+        eng = self.engine
+        return executor_lib.PoolView(
+            free=lambda _: eng.free_blocks,
+            num_blocks=lambda _: eng.num_blocks,
+            cap=eng.cache_cfg.pool_blocks_cap,
+            grow_to=lambda carry, nb: (eng.grow_cache(nb), carry)[1],
+            oom=lambda _: eng.oom,
+        )
+
+    # -- admission -----------------------------------------------------------
+
+    def _join_demand(self, s: _ReqState) -> int:
+        """Worst-case pages a joining request needs before the next
+        boundary check: its prefill plus one clone/COW/append page per
+        particle for the first token (the decoder's watermark — a fork
+        allocates nothing, a token step at most one page per particle).
+
+        A *resume* additionally accounts for the pages its replay
+        re-allocates — ``n`` per block its recorded tokens span, an
+        upper bound that ignores COW sharing.  Under-admitting a resume
+        would thrash: it re-joins, replays, and is immediately preempted
+        again, repaying the replay every round.
+        """
+        bs = self.engine.cache_cfg.block_size
+        demand = s.prefill_blocks(bs) + s.n
+        if s.t_done > 0:
+            plen = int(s.req.prompt.shape[0])
+            demand += s.n * (-(-(plen + s.t_done) // bs) - plen // bs)
+        return demand
+
+    def _admit_ready(self) -> None:
+        """FIFO admission at a token boundary.  Head-of-line blocking is
+        deliberate: skipping ahead would starve big requests, and
+        deterministic order keeps scheduled runs reproducible."""
+        while self._queue:
+            s = self._queue[0]
+            if s.req.arrive_at > self.tick:
+                if self._active:
+                    break  # not here yet; keep decoding who is
+                self.tick = s.req.arrive_at  # idle: fast-forward
+            lo = self.slots.alloc(s.n)
+            if lo is None:
+                if not self._active:
+                    raise AdmissionRefused(
+                        f"request {s.req.rid!r} needs {s.n} slots; "
+                        f"{self.slots.free_slots} of {self.slots.capacity} "
+                        "are free and no active request remains to finish"
+                    )
+                break
+            if s.trace is None:
+                # Fresh admission: growth and pool-oom transitions from
+                # here on are attributed to this request (the decoder's
+                # historical contract counts its own prefill growth; the
+                # pool's oom flag is sticky, so without the snapshot one
+                # request's exhaustion would taint every later result on
+                # the same engine).
+                s.grew0 = self._exec.stats.grow_events
+                s.oom0 = bool(self.engine.oom)
+            # Admission margin: joining must leave one worst-case token
+            # of headroom for the incumbents, or the join itself forces
+            # the preemption backstop at the very next boundary.
+            demand = self._join_demand(s) + sum(a.n for a in self._active)
+            if self.grow:
+                self._exec.ensure(self._kv_view(), None, demand, self.grow_factor)
+            if self.strict_admission and self.engine.free_blocks < demand:
+                resuming = s.trace is not None
+                if resuming and not self._active:
+                    # Last-resort resume: the pool is as free as it will
+                    # ever get and the demand bound ignores COW sharing,
+                    # so give the replay its best shot — a genuine
+                    # shortfall surfaces through the sticky ``oom``.
+                    pass
+                else:
+                    self.slots.free(lo, s.n)
+                    if not self._active:
+                        raise AdmissionRefused(
+                            f"request {s.req.rid!r} needs {demand} pages "
+                            f"(prefill + worst-case clone/append demand); "
+                            f"pool has {self.engine.free_blocks} free of "
+                            f"{self.engine.num_blocks} "
+                            f"(cap {self.engine.cache_cfg.pool_blocks_cap}) "
+                            "and no active request remains to free any"
+                        )
+                    break
+            self._queue.pop(0)
+            self._place(s, lo)
+            self._active.append(s)
+            if s.done:  # zero-step request: joins and leaves in one tick
+                self._finalize(s)
+
+    def _place(self, s: _ReqState, lo: int) -> None:
+        """Prefill + fork into the slot range; replay if resuming."""
+        eng = self.engine
+        s.lo = lo
+        resuming = s.t_done > 0 or s.trace is not None
+        if not resuming:
+            s.trace = _TokenTrace(
+                s.n,
+                s.req.steps,
+                s.req.token_copy_mode,
+                s.block_size,
+                s.req.mesh,
+                s.req.data_axes,
+                use_kernels=s.req.use_store_kernels,
+            )
+            s.trace_view = s.trace.pool_view()
+            self.stats.admitted += 1
+        else:
+            self.stats.resumes += 1
+        # Prefill the prompt ONCE into the range's first slot, then fork
+        # the population across the range: O(1) per particle.
+        logits = eng.prefill(s.req.prompt[None, :], jnp.array([lo], jnp.int32))
+        eng.fork_slots(lo, jnp.zeros((s.n,), jnp.int32))
+        s.logits = jnp.broadcast_to(logits[0], (s.n, logits.shape[-1]))
+        if resuming:
+            self._replay(s)
+
+    # -- preemption / resume -------------------------------------------------
+
+    def _preempt(self, s: _ReqState) -> None:
+        """Release the request's pages; keep its token history (trace
+        store + replay log) and SMC state.  Resumes from the *front* of
+        the queue, before any fresh admission."""
+        self.engine.free_slots(s.lo, s.n)
+        self.slots.free(s.lo, s.n)
+        self._active.remove(s)
+        s.lo = None
+        s.logits = None  # re-derived bit-exactly by the resume replay
+        s.preemptions += 1
+        self.stats.preemptions += 1
+        self._queue.insert(0, s)
+
+    def _replay(self, s: _ReqState) -> None:
+        """Rebuild the request's KV pages bit-exactly from the replay
+        log: re-apply each recorded fork and feed each recorded token
+        through the same jitted decode step (masked to this request's
+        slots).  Every KV page is re-derived by the same per-row
+        computation that wrote it originally — including the COW sharing
+        structure — so the resumed run is indistinguishable from an
+        uninterrupted one."""
+        eng = self.engine
+        S = eng.cache_cfg.max_seqs
+        mask = jnp.zeros((S,), jnp.bool_).at[s.lo : s.lo + s.n].set(True)
+        for t in range(s.t_done):
+            if self.grow:
+                self._exec.ensure(self._kv_view(), None, s.n, self.grow_factor)
+            anc = s.forks.get(t)
+            if anc is not None:
+                eng.fork_slots(s.lo, jnp.asarray(anc))
+            fed = jnp.asarray(s.fed[t])
+            tok = jnp.zeros((S,), jnp.int32).at[s.lo : s.lo + s.n].set(fed)
+            logits = eng.decode(tok[:, None], mask)
+            s.logits = logits[s.lo : s.lo + s.n]
+            self.stats.replayed_tokens += 1
+
+    # -- the boundary hook ---------------------------------------------------
+
+    def _boundary(self, carry, ts):
+        """Leading edge of a token boundary: admit (and resume), grow
+        pre-emptively, preempt as the backstop.  Departures happen on
+        the trailing edge (end of :meth:`_token_step`)."""
+        if self.on_boundary is not None:
+            self.on_boundary(self)
+        self._admit_ready()
+        need = sum(s.n for s in self._active)
+        if need == 0:
+            return carry
+        if self.grow:
+            # Watermark: a token step allocates at most one page per
+            # active particle (COW or fresh append; forks allocate
+            # nothing) — grow/compact policy first (§3.1)...
+            self._exec.ensure(self._kv_view(), None, need, self.grow_factor)
+        # ...preemption second: capacity is exhausted (cap reached or
+        # growth off) and headroom still short of the worst case.
+        # Newest-first keeps the oldest requests finishing (no thrash:
+        # a resume goes to the queue front, ahead of fresh admissions).
+        while self.engine.free_blocks < need and len(self._active) > 1:
+            victim = self._active[-1]
+            self._preempt(victim)
+            need = sum(s.n for s in self._active)
+        for s in self._active:
+            if self.grow:
+                self._exec.ensure(
+                    s.trace_view, None, s.trace.append_need, self.grow_factor
+                )
+        return carry
+
+    # -- one global token step ----------------------------------------------
+
+    def _token_step(self, carry, ts):
+        """One token for every active request: per-request SMC updates
+        (sample → reweight → resample/fork), then ONE jitted decode over
+        the union of the active slot ranges, then per-request appends
+        and departures."""
+        if not self._active:
+            self.tick += 1
+            return carry, ()
+        eng = self.engine
+        S = eng.cache_cfg.max_seqs
+        tokens = jnp.zeros((S,), jnp.int32)
+        mask = jnp.zeros((S,), jnp.bool_)
+        pending: List[tuple] = []
+        for s in self._active:
+            s.key, token, s.logw, s.logz, ess, do_res, anc = smc_token_update(
+                s.key,
+                s.logits,
+                s.logw,
+                s.logz,
+                n=s.n,
+                target_temp=s.req.target_temp,
+                proposal_temp=s.req.proposal_temp,
+                ess_threshold=s.req.ess_threshold,
+            )
+            if do_res:
+                if self.grow:
+                    # Sharded traces import boundary-crossers as fresh
+                    # blocks; size that demand — plus the token's append
+                    # — BEFORE the clone runs.
+                    s.trace.ensure_clone_headroom(
+                        anc,
+                        self.grow_factor,
+                        ex=self._exec,
+                        extra=s.trace.append_need,
+                    )
+                eng.fork_slots(s.lo, anc)  # zero-copy clone of KV lineages
+                s.trace.clone(anc)  # refcount bump, not an O(N·T) gather
+                token = token[anc]
+                s.logw = jnp.full((s.n,), -math.log(s.n))
+                s.forks[s.t_done] = np.asarray(anc)
+            s.ess.append(ess)
+            s.resampled.append(do_res)
+            pending.append((s, token))
+            tokens = tokens.at[s.lo : s.lo + s.n].set(token.astype(jnp.int32))
+            mask = mask.at[s.lo : s.lo + s.n].set(True)
+        logits = eng.decode(tokens[:, None], mask)
+        used = eng.used_blocks  # one device sync, shared by all requests
+        for s, token in pending:
+            s.logits = logits[s.lo : s.lo + s.n]
+            s.trace.append(token.astype(jnp.int32))
+            s.fed.append(np.asarray(token, dtype=np.int32))
+            s.used.append(used)
+            s.t_done += 1
+        self.tick += 1
+        self.stats.ticks += 1
+        # Trailing edge: departures leave the batch at the boundary.
+        for s in [a for a in self._active if a.done]:
+            self._finalize(s)
+        return carry, ()
+
+    # -- completion ----------------------------------------------------------
+
+    def _finalize(self, s: _ReqState) -> None:
+        steps = s.req.steps
+        self._results[s.req.rid] = SMCDecodeResult(
+            tokens=s.trace.tokens(steps),
+            log_weights=s.logw,
+            log_evidence=s.logz,
+            ess_trace=jnp.stack(s.ess) if s.ess else jnp.zeros((0,), jnp.float32),
+            used_blocks_trace=jnp.asarray(s.used, jnp.int32),
+            resampled=jnp.asarray(s.resampled, jnp.bool_),
+            # The pool flag is sticky: report only transitions that
+            # happened while this request was resident (a pre-tainted
+            # engine cannot retroactively poison a clean run; the
+            # limitation — an already-set flag masks a second failure —
+            # is inherent to one sticky bit per pool).
+            oom=jnp.asarray(s.trace.oom() or (self.engine.oom and not s.oom0)),
+            grew=jnp.asarray(self._exec.stats.grow_events - s.grew0, jnp.int32),
+            preemptions=s.preemptions,
+        )
+        self.engine.free_slots(s.lo, s.n)
+        self.slots.free(s.lo, s.n)
+        if s in self._active:
+            self._active.remove(s)
+        s.lo = None
+        self.stats.completed += 1
+        if self.shrink_on_complete and self._active:
+            # Return memory when the batch thins out: shrink to 1.25x
+            # the live set, floored at two worst-case tokens for the
+            # remaining batch (so the shrink doesn't immediately force
+            # a regrow).  Observationally invisible (§3.1).
+            live = int(self.engine.used_blocks)
+            floor = 2 * sum(a.n for a in self._active)
+            target = max(-(-live * 5 // 4), live + floor, 16)
+            if target < self.engine.num_blocks:
+                self.compact(target)

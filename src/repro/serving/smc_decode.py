@@ -33,7 +33,6 @@ traces are stitched by the same chunk machinery.
 
 from __future__ import annotations
 
-import math
 from typing import NamedTuple, Optional
 
 import jax
@@ -219,6 +218,47 @@ class SMCDecodeResult(NamedTuple):
     # sufficient pool).
     oom: jax.Array  # scalar bool
     grew: jax.Array  # scalar int32
+    # Scheduler surface (DESIGN.md §8): how often this request was
+    # preempted (pages released, token history retained, replayed on
+    # resume).  Always 0 for a private single-request run.
+    preemptions: int = 0
+
+
+def smc_token_update(
+    key: jax.Array,
+    logits: jax.Array,  # [N, V] for this population
+    logw: jax.Array,  # [N] normalized
+    logz: jax.Array,  # scalar accumulator
+    *,
+    n: int,
+    target_temp: float,
+    proposal_temp: float,
+    ess_threshold: float,
+):
+    """One population's per-token SMC math (sample → reweight → resample
+    decision) — shared verbatim by the private :meth:`SMCDecoder.run`
+    loop and the continuous-batching scheduler (DESIGN.md §8), so a
+    scheduled request is token-bit-exact with a standalone run.
+
+    Returns ``(key, token, logw, logz, ess, do_resample, ancestors)``;
+    ``ancestors`` is ``None`` unless ``do_resample``.  The caller owns
+    the side effects (KV fork, trace clone, token reindex).
+    """
+    key, k_samp, k_res = jax.random.split(key, 3)
+    logp_prop = jax.nn.log_softmax(logits / proposal_temp, axis=-1)
+    logp_tgt = jax.nn.log_softmax(logits / target_temp, axis=-1)
+    token = jax.random.categorical(k_samp, logp_prop)  # [N]
+    inc = (
+        jnp.take_along_axis(logp_tgt, token[:, None], 1)[:, 0]
+        - jnp.take_along_axis(logp_prop, token[:, None], 1)[:, 0]
+    )
+    lw = logw + inc
+    logz = logz + jax.scipy.special.logsumexp(lw)
+    logw = resampling.normalize(lw)
+    ess = resampling.ess(logw)
+    do_resample = bool(ess < ess_threshold * n)
+    ancestors = resampling.resample_systematic(k_res, logw) if do_resample else None
+    return key, token, logw, logz, ess, do_resample, ancestors
 
 
 class SMCDecoder:
@@ -283,125 +323,51 @@ class SMCDecoder:
         """This decoder's executor (token loop + growth stats)."""
         return self._exec
 
-    def _kv_view(self) -> executor_lib.PoolView:
-        """The executor's growth port over the engine's KV page pool (a
-        host-mutable view — the pool lives on the engine)."""
-        eng = self.engine
-        return executor_lib.PoolView(
-            free=lambda _: eng.free_blocks,
-            num_blocks=lambda _: eng.num_blocks,
-            cap=eng.cache_cfg.pool_blocks_cap,
-            grow_to=lambda carry, nb: (eng.grow_cache(nb), carry)[1],
-            oom=lambda _: eng.oom,
+    def request(self, key: jax.Array, prompt: jax.Array, steps: int, rid="r0"):
+        """This decoder's SMC configuration as a schedulable request
+        (DESIGN.md §8) — the unit the continuous-batching scheduler
+        multiplexes over one shared pool."""
+        from repro.serving.scheduler import DecodeRequest
+
+        return DecodeRequest(
+            rid=rid,
+            prompt=prompt,
+            n_particles=self.n,
+            steps=steps,
+            key=key,
+            target_temp=self.t_target,
+            proposal_temp=self.t_prop,
+            ess_threshold=self.ess_threshold,
+            token_copy_mode=self.token_copy_mode,
+            token_block_size=self.token_block_size,
+            mesh=self.mesh,
+            data_axes=self.data_axes,
+            use_store_kernels=self.use_store_kernels,
         )
 
     def run(self, key: jax.Array, prompt: jax.Array, steps: int) -> SMCDecodeResult:
-        n = self.n
-        eng = self.engine
-        ex = self._exec
-        grew0 = ex.stats.grow_events
-        kv_view = self._kv_view()
-        if self.grow_stores:
-            # The prompt prefills ceil(plen/bs) pages into slot 0.
-            bs = eng.cache_cfg.block_size
-            ex.ensure(kv_view, None, -(-prompt.shape[0] // bs), self.grow_factor)
-        # prefill the prompt ONCE into slot 0, then fork the population:
-        # O(1) per particle — the lazy deep copy.
-        logits = eng.prefill(prompt[None, :], jnp.array([0], jnp.int32))
-        eng.fork(jnp.zeros((n,), jnp.int32))
-        logits = jnp.broadcast_to(logits[0], (n, logits.shape[-1]))
+        """Decode one population — as a single scheduled request.
 
-        trace = _TokenTrace(
-            n,
-            steps,
-            self.token_copy_mode,
-            self.token_block_size,
-            self.mesh,
-            self.data_axes,
-            use_kernels=self.use_store_kernels,
-        )
-        trace_view = trace.pool_view()
+        The private per-token loop this method used to carry moved into
+        the continuous-batching scheduler (DESIGN.md §8); a standalone
+        decode is now literally a one-request schedule over this
+        decoder's engine and executor, so the single- and multi-request
+        paths cannot drift apart.  ``strict_admission=False`` preserves
+        the historical contract: an undersized fixed pool
+        (``grow_stores=False``) runs to completion and surfaces the
+        sticky ``oom`` flag instead of refusing admission.
+        """
+        from repro.serving.scheduler import Scheduler
 
-        def boundary(carry, ts):
-            # Token-boundary hook: decode COWs/allocates at most one KV
-            # page per particle and the trace append at most one block
-            # per (local) particle; neither fork nor a single-device
-            # clone allocates, so growing here provably covers the token.
-            if self.grow_stores:
-                ex.ensure(kv_view, None, n, self.grow_factor)
-                ex.ensure(trace_view, None, trace.append_need, self.grow_factor)
-            return carry
-
-        def token_chunk(carry, ts):
-            key, logits, logw, logz = carry
-            key, k_samp, k_res = jax.random.split(key, 3)
-            logp_prop = jax.nn.log_softmax(logits / self.t_prop, axis=-1)
-            logp_tgt = jax.nn.log_softmax(logits / self.t_target, axis=-1)
-            token = jax.random.categorical(k_samp, logp_prop)  # [N]
-            inc = (
-                jnp.take_along_axis(logp_tgt, token[:, None], 1)[:, 0]
-                - jnp.take_along_axis(logp_prop, token[:, None], 1)[:, 0]
-            )
-            lw = logw + inc
-            logz = logz + jax.scipy.special.logsumexp(lw)
-            logw = resampling.normalize(lw)
-            ess = resampling.ess(logw)
-            do_resample = bool(ess < self.ess_threshold * n)
-            if do_resample:
-                ancestors = resampling.resample_systematic(k_res, logw)
-                if self.grow_stores:
-                    # Sharded traces import boundary-crossers as fresh
-                    # blocks; size that demand — plus the token's append
-                    # — BEFORE the clone runs.
-                    trace.ensure_clone_headroom(
-                        ancestors, self.grow_factor, ex=ex, extra=trace.append_need
-                    )
-                eng.fork(ancestors)  # zero-copy clone of all KV lineages
-                trace.clone(ancestors)  # refcount bump, not an O(N·T) gather
-                token = token[ancestors]
-                logw = jnp.full((n,), -math.log(n))
-            logits = eng.decode(token[:, None])
-            trace.append(token.astype(jnp.int32))
-            out = (
-                ess[None],
-                jnp.asarray([eng.used_blocks], jnp.int32),
-                jnp.asarray([do_resample]),
-            )
-            return (key, logits, logw, logz), out
-
-        carry = (key, logits, jnp.full((n,), -math.log(n)), jnp.zeros(()))
-        carry, outs, _ = ex.run(
-            carry,
-            n_steps=steps,
-            chunk_fn=token_chunk,
-            policy=executor_lib.GrowthPolicy(
-                grow=self.grow_stores, chunk=1, factor=self.grow_factor,
-                # The engine is host-mutable: no checkpoint to roll back
-                # to, so growth is purely pre-emptive.
-                retry=False,
-            ),
-            boundary=boundary,
-            traced=False,  # one host-synced chunk per token, always
+        sched = Scheduler(
+            self.engine,
+            grow=self.grow_stores,
+            grow_factor=self.grow_factor,
+            strict_admission=False,
+            executor=self._exec,
         )
-        _, _, logw, logz = carry
-        ess_trace, used_trace, resampled = executor_lib.concat_chunk_outs(
-            outs,
-            (
-                jnp.zeros((0,), jnp.float32),
-                jnp.zeros((0,), jnp.int32),
-                jnp.zeros((0,), jnp.bool_),
-            ),
-        )
-        return SMCDecodeResult(
-            tokens=trace.tokens(steps),
-            log_weights=logw,
-            log_evidence=logz,
-            ess_trace=ess_trace,
-            used_blocks_trace=used_trace,
-            resampled=resampled,
-            oom=jnp.asarray(trace.oom() or eng.oom),
-            grew=jnp.asarray(ex.stats.grow_events - grew0, jnp.int32),
-        )
+        sched.submit(self.request(key, prompt, steps))
+        return sched.run()["r0"]
 
     def dense_equivalent_blocks(self, steps: int, prompt_len: int) -> int:
         """Blocks a per-sequence dense cache would hold at the end."""

@@ -15,7 +15,7 @@ record = [K objects x (exists, x, y, vx, vy)]  (K*5,)
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,6 @@ record = state (7,) = [Sh, Eh, Ih, Rh, Sm, Em, Im]
 
 from __future__ import annotations
 
-import math
 from typing import NamedTuple, Tuple
 
 import jax

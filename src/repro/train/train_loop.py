@@ -22,11 +22,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from pathlib import Path
-from typing import Any, Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.models.config import ModelConfig

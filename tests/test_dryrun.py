@@ -21,9 +21,13 @@ import pytest
 
 from repro.configs import ARCHS, SHAPES, get_config, shape_cells
 from repro.distributed.hlo import Module, collective_bytes, loop_aware_costs
-from repro.distributed.sharding import ShardingRules, default_rules, spec_for
-from jax.sharding import Mesh, PartitionSpec as P
+from repro.distributed.sharding import default_rules, spec_for
+from jax.sharding import PartitionSpec as P
 import numpy as np
+
+# CI runs this module in the separate `tests-slow` job: the compiled-HLO
+# subprocess cases budget up to 300s each on 2-core hosted runners.
+pytestmark = pytest.mark.slow
 
 
 class FakeMesh:

@@ -22,7 +22,6 @@ import pytest
 
 from repro.configs import ARCHS, get_config, shape_cells, smoke_config
 from repro.models import ssm as ssm_lib
-from repro.models.config import ModelConfig
 from repro.models.model import LanguageModel
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
 

@@ -27,7 +27,6 @@ guarantee the plain filter has (mirroring ``test_pool_lifecycle.py`` /
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -21,7 +21,6 @@ Four layers of validation:
 
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

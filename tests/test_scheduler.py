@@ -1,0 +1,330 @@
+"""Continuous-batching scheduler tests (DESIGN.md §8).
+
+The contract under test:
+
+  * two concurrent requests over one shared pool produce tokens
+    **bit-identical** to two sequential single-request decoder runs
+    (per-row independence of the one jitted decode step);
+  * preempt-then-resume is bit-exact with an uninterrupted run (pages
+    are freed, the token history + replay log re-derive every KV page);
+  * admission refused on a full pool *surfaces* (no silent drop):
+    loudly via :class:`AdmissionRefused` when no progress is possible,
+    by waiting when departures will free capacity;
+  * pool pressure grows first (§3.1 policy) and preempts second, and
+    both paths keep results bit-exact;
+  * shared-pool peak stays below the sum of the requests'
+    dense-equivalent caches (the paper's population-sharing claim,
+    multiplied across requests).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models.model import LanguageModel
+from repro.serving.engine import ServeEngine
+from repro.serving.kv_cache import KVCacheConfig
+from repro.serving.scheduler import (
+    AdmissionRefused,
+    DecodeRequest,
+    Scheduler,
+    SlotTable,
+)
+from repro.serving.smc_decode import SMCDecoder
+
+KEY = jax.random.PRNGKey(0)
+BS = 4  # page/block size used throughout
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = smoke_config("musicgen_large")
+    lm = LanguageModel(cfg)
+    params, _ = lm.init(KEY)
+    return cfg, lm, params
+
+
+def make_engine(model, max_seqs, num_blocks=0, max_blocks_per_seq=24):
+    cfg, lm, params = model
+    ccfg = KVCacheConfig(
+        n_layers=cfg.n_layers,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.hd,
+        block_size=BS,
+        max_seqs=max_seqs,
+        max_blocks_per_seq=max_blocks_per_seq,
+        num_blocks=num_blocks,
+        dtype=cfg.dtype,
+    )
+    return ServeEngine(lm, params, ccfg)
+
+
+def make_request(model, rid, seed, n, steps, plen):
+    cfg, _, _ = model
+    return DecodeRequest(
+        rid=rid,
+        prompt=jax.random.randint(
+            jax.random.PRNGKey(seed),
+            (plen,),
+            0,
+            cfg.vocab_size,
+        ),
+        n_particles=n,
+        steps=steps,
+        key=jax.random.PRNGKey(100 + seed),
+        target_temp=0.5,
+        token_block_size=BS,
+    )
+
+
+def reference_run(model, req: DecodeRequest):
+    """The request decoded standalone by a private SMCDecoder."""
+    _, lm, params = model
+    dec = SMCDecoder(
+        lm,
+        params,
+        n_particles=req.n_particles,
+        max_len=96,
+        target_temp=req.target_temp,
+        proposal_temp=req.proposal_temp,
+        block_size=BS,
+    )
+    return dec.run(req.key, req.prompt, req.steps)
+
+
+class TestSlotTable:
+    def test_pack_free_refill(self):
+        t = SlotTable(10)
+        a, b, c = t.alloc(4), t.alloc(3), t.alloc(3)
+        assert (a, b, c) == (0, 4, 7) and t.free_slots == 0
+        assert t.alloc(1) is None
+        t.free(4, 3)  # free the middle range
+        assert t.alloc(4) is None  # no contiguous 4
+        assert t.alloc(2) == 4  # first-fit into the gap
+        t.free(0, 4)
+        assert t.alloc(4) == 0
+
+
+class TestConcurrency:
+    def test_two_concurrent_bit_exact_with_sequential(self, model):
+        """The acceptance gate: a two-request scheduler run is
+        token-bit-exact with two sequential single-request runs, and
+        the shared pool's peak stays under the sum of the requests'
+        dense-equivalent caches."""
+        ra = make_request(model, "a", 1, n=8, steps=10, plen=6)
+        rb = make_request(model, "b", 2, n=6, steps=13, plen=9)
+        ref = {r.rid: reference_run(model, r) for r in (ra, rb)}
+
+        eng = make_engine(model, max_seqs=ra.n_particles + rb.n_particles)
+        sched = Scheduler(eng)
+        sched.submit(ra)
+        sched.submit(rb)
+        res = sched.run()
+        for r in (ra, rb):
+            np.testing.assert_array_equal(
+                np.asarray(res[r.rid].tokens), np.asarray(ref[r.rid].tokens)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(res[r.rid].log_weights),
+                np.asarray(ref[r.rid].log_weights),
+            )
+            assert float(res[r.rid].log_evidence) == float(ref[r.rid].log_evidence)
+            np.testing.assert_array_equal(
+                np.asarray(res[r.rid].resampled),
+                np.asarray(ref[r.rid].resampled),
+            )
+            assert not bool(res[r.rid].oom)
+        # shared-pool peak < sum of dense-equivalent per-request caches
+        peak = max(
+            int(np.max(np.asarray(res[r.rid].used_blocks_trace)))
+            for r in (ra, rb)
+        )
+        dense = sum(
+            r.n_particles * -(-(len(r.prompt) + r.steps) // BS)
+            for r in (ra, rb)
+        )
+        assert peak < dense, (peak, dense)
+        assert sched.stats.completed == 2 and sched.stats.preemptions == 0
+
+    def test_queue_overflow_waits_no_silent_drop(self, model):
+        """Three requests over a slot table that fits one at a time:
+        admission waits for departures, and every request completes
+        bit-exactly (no silent drop, FIFO order)."""
+        reqs = [
+            make_request(model, f"r{i}", 10 + i, n=4, steps=6, plen=4)
+            for i in range(3)
+        ]
+        ref = {r.rid: reference_run(model, r) for r in reqs}
+        eng = make_engine(model, max_seqs=4)
+        sched = Scheduler(eng)
+        for r in reqs:
+            sched.submit(r)
+        res = sched.run()
+        assert set(res) == {"r0", "r1", "r2"}
+        for r in reqs:
+            np.testing.assert_array_equal(
+                np.asarray(res[r.rid].tokens), np.asarray(ref[r.rid].tokens)
+            )
+        assert sched.stats.admitted == 3 and sched.stats.completed == 3
+
+    def test_staggered_arrival_bit_exact(self, model):
+        """A request arriving mid-flight (continuous batching: it joins
+        the running batch at a token boundary) decodes the same tokens
+        as a standalone run."""
+        ra = make_request(model, "a", 5, n=6, steps=12, plen=4)
+        rb_base = make_request(model, "b", 6, n=4, steps=8, plen=6)
+        import dataclasses
+
+        rb = dataclasses.replace(rb_base, arrive_at=5)
+        ref = {r.rid: reference_run(model, r) for r in (ra, rb)}
+        eng = make_engine(model, max_seqs=10)
+        sched = Scheduler(eng)
+        sched.submit(ra)
+        sched.submit(rb)
+        res = sched.run()
+        for r in (ra, rb):
+            np.testing.assert_array_equal(
+                np.asarray(res[r.rid].tokens), np.asarray(ref[r.rid].tokens)
+            )
+
+
+class TestAdmission:
+    def test_refused_on_full_pool_surfaces(self, model):
+        """A request whose worst-case demand exceeds a fixed full pool
+        raises AdmissionRefused — no silent drop, no garbage result."""
+        req = make_request(model, "big", 3, n=8, steps=8, plen=8)
+        # demand = ceil(8/4) + 8 = 10 pages > 6-block fixed pool
+        eng = make_engine(model, max_seqs=8, num_blocks=6)
+        sched = Scheduler(eng, grow=False)
+        sched.submit(req)
+        with pytest.raises(AdmissionRefused, match="big"):
+            sched.run()
+        assert sched.stats.completed == 0
+
+    def test_sticky_pool_oom_does_not_taint_later_requests(self, model):
+        """The shared pool's oom flag is sticky; a request admitted
+        AFTER the flag was set (and decoding within freed capacity)
+        must not inherit the earlier request's failure."""
+        bad = make_request(model, "bad", 8, n=8, steps=10, plen=4)
+        eng = make_engine(model, max_seqs=8, num_blocks=12)
+        sched = Scheduler(eng, grow=False, strict_admission=False)
+        sched.submit(bad)
+        res = sched.run()
+        assert bool(res["bad"].oom)  # genuinely exhausted
+        small = make_request(model, "small", 9, n=2, steps=4, plen=4)
+        ref = reference_run(model, small)
+        sched2 = Scheduler(eng, grow=False, strict_admission=False)
+        sched2.submit(small)
+        res2 = sched2.run()
+        assert not bool(res2["small"].oom)  # clean run, clean flag
+        np.testing.assert_array_equal(
+            np.asarray(res2["small"].tokens), np.asarray(ref.tokens)
+        )
+
+    def test_duplicate_rid_rejected_even_after_completion(self, model):
+        req = make_request(model, "a", 1, n=4, steps=2, plen=4)
+        eng = make_engine(model, max_seqs=4)
+        sched = Scheduler(eng)
+        sched.submit(req)
+        sched.run()
+        with pytest.raises(ValueError, match="duplicate"):
+            sched.submit(make_request(model, "a", 2, n=4, steps=2, plen=4))
+
+    def test_refused_on_full_slot_table_surfaces(self, model):
+        req = make_request(model, "wide", 4, n=8, steps=4, plen=4)
+        eng = make_engine(model, max_seqs=4)  # 8 particles, 4 slots
+        sched = Scheduler(eng)
+        sched.submit(req)
+        with pytest.raises(AdmissionRefused, match="slots"):
+            sched.run()
+
+
+class TestPreemption:
+    def test_forced_preempt_resume_bit_exact(self, model):
+        """Force a preemption mid-flight: pages freed, token history
+        retained, resume replays — final results bit-exact with an
+        uninterrupted run."""
+        req = make_request(model, "a", 7, n=8, steps=12, plen=6)
+        ref = reference_run(model, req)
+
+        fired = []
+
+        def force_once(sched):
+            active = list(sched._active)
+            if active and active[0].t_done == 5 and not fired:
+                fired.append(True)
+                sched.preempt("a")
+
+        eng = make_engine(model, max_seqs=8)
+        sched = Scheduler(eng, on_boundary=force_once)
+        sched.submit(req)
+        res = sched.run()["a"]
+        assert res.preemptions == 1 and sched.stats.replayed_tokens == 5
+        np.testing.assert_array_equal(np.asarray(res.tokens), np.asarray(ref.tokens))
+        np.testing.assert_array_equal(
+            np.asarray(res.log_weights), np.asarray(ref.log_weights)
+        )
+        assert float(res.log_evidence) == float(ref.log_evidence)
+        np.testing.assert_array_equal(
+            np.asarray(res.ess_trace), np.asarray(ref.ess_trace)
+        )
+        assert not bool(res.oom)
+
+    def test_pressure_preemption_recovers_bit_exact(self, model):
+        """A fixed pool too small for two full populations: the
+        scheduler preempts (newest first) instead of corrupting, the
+        preempted request resumes after the incumbent departs, and both
+        finish bit-exactly."""
+        ra = make_request(model, "a", 1, n=4, steps=16, plen=4)
+        rb = make_request(model, "b", 2, n=4, steps=16, plen=4)
+        ref = {r.rid: reference_run(model, r) for r in (ra, rb)}
+        eng = make_engine(model, max_seqs=8, num_blocks=20)
+        sched = Scheduler(eng, grow=False)
+        sched.submit(ra)
+        sched.submit(rb)
+        res = sched.run()
+        assert sched.stats.preemptions >= 1
+        for r in (ra, rb):
+            np.testing.assert_array_equal(
+                np.asarray(res[r.rid].tokens), np.asarray(ref[r.rid].tokens)
+            )
+            assert not bool(res[r.rid].oom)
+
+    def test_growth_preferred_over_preemption(self, model):
+        """With growth on (the §3.1 policy), the same pressure scenario
+        grows the shared pool and never preempts."""
+        ra = make_request(model, "a", 1, n=4, steps=16, plen=4)
+        rb = make_request(model, "b", 2, n=4, steps=16, plen=4)
+        ref = {r.rid: reference_run(model, r) for r in (ra, rb)}
+        eng = make_engine(model, max_seqs=8, num_blocks=8)
+        sched = Scheduler(eng)
+        sched.submit(ra)
+        sched.submit(rb)
+        res = sched.run()
+        assert sched.stats.preemptions == 0
+        assert eng.num_blocks > 8  # the pool grew instead
+        for r in (ra, rb):
+            np.testing.assert_array_equal(
+                np.asarray(res[r.rid].tokens), np.asarray(ref[r.rid].tokens)
+            )
+
+    def test_shrink_on_complete_is_invisible(self, model):
+        """Compaction when the batch thins out returns memory without
+        touching results (observational invisibility, §3.1)."""
+        ra = make_request(model, "a", 1, n=6, steps=6, plen=4)
+        rb = make_request(model, "b", 2, n=4, steps=14, plen=4)
+        ref = {r.rid: reference_run(model, r) for r in (ra, rb)}
+        eng = make_engine(model, max_seqs=10)
+        sched = Scheduler(eng, shrink_on_complete=True)
+        sched.submit(ra)
+        sched.submit(rb)
+        res = sched.run()
+        assert sched.stats.compactions >= 1
+        for r in (ra, rb):
+            np.testing.assert_array_equal(
+                np.asarray(res[r.rid].tokens), np.asarray(ref[r.rid].tokens)
+            )
+            assert not bool(res[r.rid].oom)
