@@ -15,19 +15,18 @@ Gates (the PR's acceptance criteria):
 
 from __future__ import annotations
 
-import dataclasses
 import time
 
-import jax
 import numpy as np
 
 from benchmarks.common import KEY, emit
 from repro.configs import smoke_config
 from repro.models.model import LanguageModel
+from repro.serving import traces as traces_lib
 from repro.serving.engine import ServeEngine
 from repro.serving.kv_cache import KVCacheConfig
-from repro.serving.scheduler import DecodeRequest, Scheduler
 from repro.serving.smc_decode import SMCDecoder
+from repro.serving.scheduler import Scheduler
 
 BS = 4  # KV page size
 
@@ -45,24 +44,16 @@ def _engine(cfg, lm, params, max_seqs, max_blocks_per_seq):
     return ServeEngine(lm, params, ccfg)
 
 
-def _requests(cfg, n_reqs, n_particles, steps, plen):
-    return [
-        DecodeRequest(
-            rid=f"r{i}",
-            prompt=jax.random.randint(
-                jax.random.PRNGKey(i),
-                (plen,),
-                0,
-                cfg.vocab_size,
-            ),
-            n_particles=n_particles,
-            steps=steps,
-            key=jax.random.PRNGKey(1000 + i),
-            target_temp=0.5,
-            token_block_size=BS,
-        )
-        for i in range(n_reqs)
-    ]
+def _requests(cfg, n_reqs, n_particles, steps, plen, interval=0):
+    """The bench's arrival patterns come from the shared seeded trace
+    generator (``repro.serving.traces``) — the same bytes the simulator
+    and tests replay (tests/test_traces.py gates reproducibility)."""
+    trace = traces_lib.staggered(
+        n_reqs, interval, n_particles=n_particles, steps=steps, plen=plen
+    )
+    return traces_lib.to_decode_requests(
+        trace, cfg.vocab_size, target_temp=0.5, token_block_size=BS
+    )
 
 
 def _dense_equiv(reqs):
@@ -135,10 +126,7 @@ def run(n_reqs: int = 4, n_particles: int = 8, steps: int = 16, plen: int = 6):
     # -- arrival-rate sweep over one shared pool -----------------------------
     dense = _dense_equiv(reqs)
     for label, interval in (("burst", 0), ("stagger2", 2), ("stagger6", 6)):
-        arr = [
-            dataclasses.replace(r, arrive_at=i * interval)
-            for i, r in enumerate(reqs)
-        ]
+        arr = _requests(cfg, n_reqs, n_particles, steps, plen, interval=interval)
         res, sched, secs, peak, tokens, cold = _run_schedule(cfg, lm, params, arr, mbs)
         for r in arr:
             assert not bool(res[r.rid].oom), (label, r.rid)

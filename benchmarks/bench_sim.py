@@ -1,0 +1,144 @@
+"""Scheduler-simulator validation + capacity projection (DESIGN.md §9).
+
+Two differential rows gate the simulator against the real scheduler on
+quick traces: the recorded decision sequence must replay exactly
+(``decision_exact=1`` is a baseline-gated bit, and the run asserts it
+outright) and the calibrated cost model must predict the warm
+device-path wall — the sum of recorded decode/prefill/grow segments,
+the portion the model prices — within +/-25% (``time_ratio``; asserted
+in-bench, excluded from the cross-host baseline gate).  A third, device-free row replays a large
+Poisson trace against the roofline cost model for a production-size
+config — its peak blocks, preemption/growth counts, and predicted p99
+queueing latency are fully deterministic, so the committed baseline
+remembers them bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.bench_scheduler import BS, _engine
+from benchmarks.common import KEY, emit
+from repro.configs import get_config, smoke_config
+from repro.models.model import LanguageModel
+from repro.serving import traces as traces_lib
+from repro.serving.kv_cache import KVCacheConfig
+from repro.serving.scheduler import Scheduler, SchedulerEventLog
+from repro.serving.sim import CostModel, first_divergence, simulate
+
+TIME_RATIO_TOL = 0.25  # predicted / measured device-path wall, both ways
+
+
+def _diff_row(cfg, lm, params, label, interval, n_reqs, n_particles, steps, plen):
+    trace = traces_lib.staggered(
+        n_reqs, interval, n_particles=n_particles, steps=steps, plen=plen
+    )
+    reqs = traces_lib.to_decode_requests(
+        trace, cfg.vocab_size, target_temp=0.5, token_block_size=BS
+    )
+    mbs = -(-(plen + steps) // BS) + 2
+    eng = _engine(cfg, lm, params, sum(r.n_particles for r in reqs), mbs)
+
+    def once(log=None):
+        sched = Scheduler(eng, event_log=log)
+        for r in reqs:
+            sched.submit(r)
+        t0 = time.time()
+        sched.run()
+        return time.time() - t0
+
+    once()  # cold: compile + grow the pool
+    pre_blocks = eng.num_blocks
+    log = SchedulerEventLog()
+    wall = once(log)
+
+    cost = CostModel.from_event_log(log)
+    res = simulate(
+        log.to_trace(label), eng.cache_cfg, cost, initial_blocks=pre_blocks
+    )
+    div = first_divergence(log.decisions, res.decisions)
+    assert div is None, f"{label}: simulator diverged from recording: {div}"
+    assert res.peak_blocks == log.peak_blocks(), (
+        f"{label}: peak {res.peak_blocks} != recorded {log.peak_blocks()}"
+    )
+    ratio = res.sim_time_s / log.recorded_wall_s()
+    assert (1 - TIME_RATIO_TOL) <= ratio <= (1 + TIME_RATIO_TOL), (
+        f"{label}: predicted/measured device-path ratio {ratio:.2f} "
+        f"outside +/-{TIME_RATIO_TOL:.0%}"
+    )
+    return emit(
+        "sim",
+        f"sim_diff_{label}_R{n_reqs}xN{n_particles}",
+        wall / (steps * n_reqs),
+        f"decision_exact=1;peak_blocks={res.peak_blocks};"
+        f"events={len(log.decisions)};time_ratio={ratio:.2f}",
+        n_reqs=n_reqs,
+        n_particles=n_particles,
+        steps=steps,
+        interval=interval,
+    )
+
+
+def _scale_row(n_reqs: int):
+    """Device-free: a big Poisson trace with synthetic fork schedules
+    against the §3.1 roofline costs of a production-size config.  Every
+    derived number is a deterministic function of (trace seed, cost
+    model), so the baseline gates them across hosts."""
+    big = get_config("qwen2.5-32b")
+    ccfg = KVCacheConfig(
+        n_layers=big.n_layers,
+        n_kv_heads=big.n_kv_heads,
+        head_dim=big.hd,
+        block_size=16,
+        max_seqs=64,
+        max_blocks_per_seq=8,
+        dtype=big.dtype,
+    )
+    trace = traces_lib.with_synthetic_forks(
+        traces_lib.poisson(
+            n_reqs,
+            0.08,
+            n_particles=(2, 8),
+            steps=(24, 64),
+            plen=(8, 48),
+            seed=7,
+        ),
+        p_resample=0.4,
+    )
+    cost = CostModel.from_roofline(big, ccfg)
+    t0 = time.time()
+    res = simulate(trace, ccfg, cost)
+    host_secs = time.time() - t0
+    lat = res.latency_percentiles()
+    return emit(
+        "sim",
+        f"sim_poisson_R{n_reqs}",
+        host_secs / n_reqs,
+        f"peak_blocks={res.peak_blocks};grow={res.grow_events};"
+        f"preempt={res.stats.preemptions};ticks={res.stats.ticks};"
+        f"p99_queue_ms={lat['queue_p99_s'] * 1e3:.1f};"
+        f"pred_tokens_per_sec={res.tokens_per_sec:.0f}",
+        n_reqs=n_reqs,
+        seed=trace.seed,
+        arch="qwen2.5-32b",
+    )
+
+
+def run(n_reqs: int = 3, n_particles: int = 6, steps: int = 12, plen: int = 6,
+        scale_reqs: int = 200):
+    rows = []
+    cfg = smoke_config("musicgen_large")
+    lm = LanguageModel(cfg)
+    params, _ = lm.init(KEY)
+    for label, interval in (("burst", 0), ("stagger", 2)):
+        rows.append(
+            _diff_row(
+                cfg, lm, params, label, interval, n_reqs, n_particles, steps, plen
+            )
+        )
+    rows.append(_scale_row(scale_reqs))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

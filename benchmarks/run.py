@@ -20,6 +20,10 @@
 #           tokens/sec + peak shared-pool blocks vs request arrival
 #           rate; gates single-request parity (bit-exact tokens) and
 #           peak < sum of per-request dense-equivalent caches
+#   sim   — scheduler simulator validation (DESIGN.md §9): gates
+#           decision-exact replay of recorded runs and +/-25% wall-time
+#           prediction, plus a device-free Poisson capacity row whose
+#           deterministic outputs the baseline remembers bit-for-bit
 #
 # ``--quick`` shrinks N/T for CI-speed runs; default sizes run in
 # minutes on a CPU host.  The at-scale numbers live in the dry-run
@@ -41,7 +45,7 @@ def main() -> None:
     ap.add_argument(
         "--only", default="",
         help="comma list of {fig5,fig6,fig7,tree,serve,block,sharded,write,"
-        "pool,pgibbs,sched}",
+        "pool,pgibbs,sched,sim}",
     )
     ap.add_argument(
         "--json", default="",
@@ -110,6 +114,15 @@ def _run_suites(args, only, n: int, t: int) -> None:
             n_reqs=3 if args.quick else 4,
             n_particles=6 if args.quick else 8,
             steps=12 if args.quick else 24,
+        )
+    if only is None or "sim" in only:
+        from benchmarks import bench_sim
+
+        bench_sim.run(
+            n_reqs=3,
+            n_particles=6,
+            steps=12,
+            scale_reqs=120 if args.quick else 300,
         )
     if only is None or "sharded" in only:
         # Subprocess: bench_sharded fakes a multi-device host via

@@ -50,6 +50,10 @@ METRIC_TOL = {
     "iters_per_s": None,
     "fixed_us": None,
     "legacy_us": None,
+    # sim suite: the predicted/measured wall ratio is host+jax-version
+    # noise; the in-bench assertion gates it, the decision-exactness
+    # bits are what the baseline remembers.
+    "time_ratio": None,
 }
 _NUM = re.compile(r"^-?\d+(\.\d+)?([eE][+-]?\d+)?x?$")
 

@@ -1,23 +1,35 @@
 # Serving runtime: COW-paged KV cache (the paper's platform applied to
-# inference), batched decode engine, and population-based SMC decoding.
+# inference), batched decode engine, population-based SMC decoding, and
+# the device-free scheduler simulator (DESIGN.md §9).
 
 from repro.serving.kv_cache import KVCacheConfig, PagedKVCache
 from repro.serving.engine import ServeEngine
 from repro.serving.smc_decode import SMCDecoder
 from repro.serving.scheduler import (
+    TUNED_DEFAULTS,
     AdmissionRefused,
     DecodeRequest,
     Scheduler,
+    SchedulerEventLog,
     SlotTable,
 )
+from repro.serving.sim import CostModel, SimScheduler, simulate
+from repro.serving.traces import Trace, TraceRequest
 
 __all__ = [
     "AdmissionRefused",
+    "CostModel",
     "DecodeRequest",
     "KVCacheConfig",
     "PagedKVCache",
     "Scheduler",
+    "SchedulerEventLog",
     "ServeEngine",
+    "SimScheduler",
     "SlotTable",
     "SMCDecoder",
+    "TUNED_DEFAULTS",
+    "Trace",
+    "TraceRequest",
+    "simulate",
 ]

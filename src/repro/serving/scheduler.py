@@ -46,6 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -66,9 +67,25 @@ __all__ = [
     "AdmissionRefused",
     "DecodeRequest",
     "Scheduler",
+    "SchedulerEventLog",
     "SchedulerStats",
     "SlotTable",
+    "TUNED_DEFAULTS",
 ]
+
+# Knob values from the simulator sweep (``scripts/autotune.py``,
+# qwen2.5-32b roofline costs, poisson/bursty/diurnal traces): the
+# provably-safe 1.0 margins already maximize delivered tokens/sec under
+# the SLA, and a 1.5x growth factor matches that throughput with the
+# smallest peak pool.  Constructor defaults stay as they are — recorded
+# traces replay against the defaults they were recorded under — so opt
+# in explicitly: ``Scheduler(engine, **TUNED_DEFAULTS)``.
+TUNED_DEFAULTS = {
+    "grow_factor": 1.5,
+    "watermark": 1.0,
+    "admission_margin": 1.0,
+    "preempt_margin": 1.0,
+}
 
 
 class AdmissionRefused(RuntimeError):
@@ -149,6 +166,98 @@ class SchedulerStats:
         return dataclasses.asdict(self)
 
 
+@dataclasses.dataclass
+class SchedulerEventLog:
+    """Decision + cost recording for the scheduler simulator (DESIGN.md
+    §9).  Pass one to :class:`Scheduler` and the run appends a canonical
+    *decision sequence* — every admission, resume, growth, preemption,
+    compaction, completion, refusal, and per-tick step (with the shared
+    pool's block count after the decode) — plus the per-segment wall
+    times the simulator's cost model calibrates from, and the recorded
+    fork (ancestor) schedule that re-derives the run's COW sharing
+    structure off-device.
+
+    Decision tuples (``tick`` is the scheduler tick at the decision):
+
+    * ``("admit", rid, tick, lo)`` / ``("resume", rid, tick, lo)``
+    * ``("grow", tick, new_num_blocks)``
+    * ``("preempt", rid, tick)``
+    * ``("complete", rid, tick)``
+    * ``("compact", tick, new_num_blocks)``
+    * ``("refused", rid, tick)`` — immediately before AdmissionRefused
+    * ``("step", tick, (rid, ...), used_blocks)`` — one per decode tick
+
+    ``serving/sim.py`` replays :meth:`to_trace` and must reproduce this
+    sequence exactly (tests/test_sim.py).
+    """
+
+    events: List[tuple] = dataclasses.field(default_factory=list)
+    requests: Dict[str, dict] = dataclasses.field(default_factory=dict)
+    step_wall_s: List[float] = dataclasses.field(default_factory=list)
+    prefill_wall_s: List[float] = dataclasses.field(default_factory=list)
+    grow_wall_s: List[float] = dataclasses.field(default_factory=list)
+    grow_old_blocks: List[int] = dataclasses.field(default_factory=list)
+
+    def emit(self, *event) -> None:
+        self.events.append(tuple(event))
+
+    @property
+    def decisions(self) -> List[tuple]:
+        return list(self.events)
+
+    def peak_blocks(self) -> int:
+        """Peak shared-pool blocks over the recorded decode ticks (the
+        same samples the per-request ``used_blocks_trace`` sees)."""
+        used = [e[3] for e in self.events if e[0] == "step"]
+        return max(used) if used else 0
+
+    def recorded_wall_s(self) -> float:
+        """Total measured device-path seconds: decode ticks + prefills +
+        growth relocations.  This is the portion of the run's wall the
+        simulator's cost model prices — the Python scheduler loop and
+        boundary-hook host time around it are deliberately unmodeled, so
+        time-prediction gates compare against this sum, not the
+        end-to-end ``run()`` wall (which host overhead dominates for
+        smoke-sized models)."""
+        return (
+            sum(self.step_wall_s)
+            + sum(self.prefill_wall_s)
+            + sum(self.grow_wall_s)
+        )
+
+    def record_request(self, req: "DecodeRequest") -> None:
+        self.requests[req.rid] = {
+            "arrive_at": req.arrive_at,
+            "n_particles": req.n_particles,
+            "steps": req.steps,
+            "plen": int(req.prompt.shape[0]),
+            "forks": {},
+        }
+
+    def record_forks(self, rid: str, forks: Dict[int, np.ndarray]) -> None:
+        self.requests[rid]["forks"] = {
+            int(t): tuple(int(a) for a in anc) for t, anc in forks.items()
+        }
+
+    def to_trace(self, name: str = "recorded"):
+        """The recorded run as a replayable :class:`repro.serving.traces.
+        Trace` (submission order preserved; forks as recorded)."""
+        from repro.serving import traces as traces_lib
+
+        reqs = tuple(
+            traces_lib.TraceRequest(
+                rid=rid,
+                arrive_at=spec["arrive_at"],
+                n_particles=spec["n_particles"],
+                steps=spec["steps"],
+                plen=spec["plen"],
+                forks=dict(spec["forks"]),
+            )
+            for rid, spec in self.requests.items()
+        )
+        return traces_lib.Trace(name=name, requests=reqs)
+
+
 class _ReqState:
     """Scheduler-internal request state.  Lives from submit to
     completion; survives preemption (``lo`` is None while off the
@@ -207,6 +316,21 @@ class Scheduler:
     blocks until departures free capacity, and raises
     :class:`AdmissionRefused` when no active request remains to wait
     for.
+
+    The three policy knobs (swept by ``scripts/autotune.py`` in the
+    simulator, defaults re-validated against ``BENCH_sched.json``):
+
+    * ``watermark`` — boundary growth fires when free blocks dip under
+      ``ceil(watermark * worst_case_need)``; > 1 grows ahead of
+      pressure (fewer, larger growth events), 1.0 grows exactly at the
+      provable-safety line.
+    * ``admission_margin`` — a join must leave
+      ``ceil(admission_margin * incumbents_need)`` headroom beyond its
+      own demand; >= 1 guarantees the join cannot force the preemption
+      backstop at the very next boundary.
+    * ``preempt_margin`` — the backstop preempts while free blocks are
+      under ``ceil(preempt_margin * need)`` after growth is exhausted;
+      > 1 preempts earlier (more headroom, more evictions).
     """
 
     def __init__(
@@ -215,16 +339,24 @@ class Scheduler:
         *,
         grow: bool = True,
         grow_factor: float = 2.0,
+        watermark: float = 1.0,
+        admission_margin: float = 1.0,
+        preempt_margin: float = 1.0,
         strict_admission: bool = True,
         shrink_on_complete: bool = False,
         executor: Optional[executor_lib.PopulationExecutor] = None,
         on_boundary: Optional[Callable[["Scheduler"], None]] = None,
+        event_log: Optional[SchedulerEventLog] = None,
     ):
         self.engine = engine
         self.grow = grow
         self.grow_factor = grow_factor
+        self.watermark = watermark
+        self.admission_margin = admission_margin
+        self.preempt_margin = preempt_margin
         self.strict_admission = strict_admission
         self.shrink_on_complete = shrink_on_complete
+        self.event_log = event_log
         # Observation/intervention hook at the leading edge of every
         # token boundary (tests force preemption; benches sample pool
         # occupancy) — runs before admission/growth/preemption.
@@ -246,6 +378,8 @@ class Scheduler:
         if req.rid in live or req.rid in self._results:
             raise ValueError(f"duplicate request id {req.rid!r}")
         self._queue.append(_ReqState(req, self.engine.cache_cfg.block_size))
+        if self.event_log is not None:
+            self.event_log.record_request(req)
 
     def run(self) -> Dict[str, SMCDecodeResult]:
         """Drive every submitted request to completion; returns
@@ -294,6 +428,8 @@ class Scheduler:
         token boundary — observationally invisible (DESIGN.md §3.1)."""
         self.engine.compact_cache(new_num_blocks)
         self.stats.compactions += 1
+        if self.event_log is not None:
+            self.event_log.emit("compact", self.tick, self.engine.num_blocks)
 
     # -- pool views ----------------------------------------------------------
 
@@ -305,9 +441,23 @@ class Scheduler:
             free=lambda _: eng.free_blocks,
             num_blocks=lambda _: eng.num_blocks,
             cap=eng.cache_cfg.pool_blocks_cap,
-            grow_to=lambda carry, nb: (eng.grow_cache(nb), carry)[1],
+            grow_to=lambda carry, nb: (self._grow_cache(nb), carry)[1],
             oom=lambda _: eng.oom,
         )
+
+    def _grow_cache(self, new_num_blocks: int) -> None:
+        """Grow the shared pool, recording the decision (and its wall
+        cost, for the simulator's calibrated cost model)."""
+        if self.event_log is None:
+            self.engine.grow_cache(new_num_blocks)
+            return
+        old = self.engine.num_blocks
+        t0 = time.perf_counter()
+        self.engine.grow_cache(new_num_blocks)
+        jax.block_until_ready(self.engine.cache.pool.data)
+        self.event_log.grow_wall_s.append(time.perf_counter() - t0)
+        self.event_log.grow_old_blocks.append(old)
+        self.event_log.emit("grow", self.tick, new_num_blocks)
 
     # -- admission -----------------------------------------------------------
 
@@ -343,6 +493,8 @@ class Scheduler:
             lo = self.slots.alloc(s.n)
             if lo is None:
                 if not self._active:
+                    if self.event_log is not None:
+                        self.event_log.emit("refused", s.req.rid, self.tick)
                     raise AdmissionRefused(
                         f"request {s.req.rid!r} needs {s.n} slots; "
                         f"{self.slots.free_slots} of {self.slots.capacity} "
@@ -358,10 +510,13 @@ class Scheduler:
                 # the same engine).
                 s.grew0 = self._exec.stats.grow_events
                 s.oom0 = bool(self.engine.oom)
-            # Admission margin: joining must leave one worst-case token
-            # of headroom for the incumbents, or the join itself forces
-            # the preemption backstop at the very next boundary.
-            demand = self._join_demand(s) + sum(a.n for a in self._active)
+            # Admission margin: joining must leave (a multiple of) one
+            # worst-case token of headroom for the incumbents, or the
+            # join itself forces the preemption backstop at the very
+            # next boundary.
+            demand = self._join_demand(s) + math.ceil(
+                self.admission_margin * sum(a.n for a in self._active)
+            )
             if self.grow:
                 self._exec.ensure(self._kv_view(), None, demand, self.grow_factor)
             if self.strict_admission and self.engine.free_blocks < demand:
@@ -375,6 +530,8 @@ class Scheduler:
                 else:
                     self.slots.free(lo, s.n)
                     if not self._active:
+                        if self.event_log is not None:
+                            self.event_log.emit("refused", s.req.rid, self.tick)
                         raise AdmissionRefused(
                             f"request {s.req.rid!r} needs {demand} pages "
                             f"(prefill + worst-case clone/append demand); "
@@ -385,6 +542,9 @@ class Scheduler:
                         )
                     break
             self._queue.pop(0)
+            if self.event_log is not None:
+                kind = "resume" if s.trace is not None else "admit"
+                self.event_log.emit(kind, s.req.rid, self.tick, lo)
             self._place(s, lo)
             self._active.append(s)
             if s.done:  # zero-step request: joins and leaves in one tick
@@ -411,9 +571,13 @@ class Scheduler:
             self.stats.resumes += 1
         # Prefill the prompt ONCE into the range's first slot, then fork
         # the population across the range: O(1) per particle.
+        t0 = time.perf_counter()
         logits = eng.prefill(s.req.prompt[None, :], jnp.array([lo], jnp.int32))
         eng.fork_slots(lo, jnp.zeros((s.n,), jnp.int32))
         s.logits = jnp.broadcast_to(logits[0], (s.n, logits.shape[-1]))
+        if self.event_log is not None:
+            jax.block_until_ready(s.logits)
+            self.event_log.prefill_wall_s.append(time.perf_counter() - t0)
         if resuming:
             self._replay(s)
 
@@ -423,6 +587,8 @@ class Scheduler:
         """Release the request's pages; keep its token history (trace
         store + replay log) and SMC state.  Resumes from the *front* of
         the queue, before any fresh admission."""
+        if self.event_log is not None:
+            self.event_log.emit("preempt", s.req.rid, self.tick)
         self.engine.free_slots(s.lo, s.n)
         self.slots.free(s.lo, s.n)
         self._active.remove(s)
@@ -471,12 +637,20 @@ class Scheduler:
             # Watermark: a token step allocates at most one page per
             # active particle (COW or fresh append; forks allocate
             # nothing) — grow/compact policy first (§3.1)...
-            self._exec.ensure(self._kv_view(), None, need, self.grow_factor)
+            self._exec.ensure(
+                self._kv_view(),
+                None,
+                math.ceil(self.watermark * need),
+                self.grow_factor,
+            )
         # ...preemption second: capacity is exhausted (cap reached or
         # growth off) and headroom still short of the worst case.
         # Newest-first keeps the oldest requests finishing (no thrash:
         # a resume goes to the queue front, ahead of fresh admissions).
-        while self.engine.free_blocks < need and len(self._active) > 1:
+        while (
+            self.engine.free_blocks < math.ceil(self.preempt_margin * need)
+            and len(self._active) > 1
+        ):
             victim = self._active[-1]
             self._preempt(victim)
             need = sum(s.n for s in self._active)
@@ -497,6 +671,7 @@ class Scheduler:
         if not self._active:
             self.tick += 1
             return carry, ()
+        t0 = time.perf_counter()
         eng = self.engine
         S = eng.cache_cfg.max_seqs
         tokens = jnp.zeros((S,), jnp.int32)
@@ -536,6 +711,11 @@ class Scheduler:
             mask = mask.at[s.lo : s.lo + s.n].set(True)
         logits = eng.decode(tokens[:, None], mask)
         used = eng.used_blocks  # one device sync, shared by all requests
+        if self.event_log is not None:
+            self.event_log.step_wall_s.append(time.perf_counter() - t0)
+            self.event_log.emit(
+                "step", self.tick, tuple(s.req.rid for s in self._active), used
+            )
         for s, token in pending:
             s.logits = logits[s.lo : s.lo + s.n]
             s.trace.append(token.astype(jnp.int32))
@@ -553,6 +733,9 @@ class Scheduler:
 
     def _finalize(self, s: _ReqState) -> None:
         steps = s.req.steps
+        if self.event_log is not None:
+            self.event_log.emit("complete", s.req.rid, self.tick)
+            self.event_log.record_forks(s.req.rid, s.forks)
         self._results[s.req.rid] = SMCDecodeResult(
             tokens=s.trace.tokens(steps),
             log_weights=s.logw,

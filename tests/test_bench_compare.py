@@ -1,0 +1,194 @@
+"""Unit tests for scripts/bench_compare.py — the CI perf gate's logic.
+
+The comparator has been CI-critical since PR 5 but untested: a bug here
+either lets regressions merge silently or fails every PR on host noise.
+Covered against synthetic baseline/fresh JSON fixtures: host-median
+time normalization (uniform slowdown passes, single-row slowdown
+fails), per-metric tolerance overrides (``None`` skips, ``logz`` is
+tight), missing suites/rows/metrics fail loudly, derived-string
+parsing, and ``--update`` rebasing.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import json
+import pathlib
+import sys
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_compare",
+    pathlib.Path(__file__).resolve().parents[1] / "scripts" / "bench_compare.py",
+)
+bc = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(bc)
+
+
+def write_suite(path: pathlib.Path, suite: str, rows: dict) -> None:
+    path.mkdir(parents=True, exist_ok=True)
+    payload = {
+        "suite": suite,
+        "rows": [
+            {"name": n, "us_per_call": us, "derived": der, "config": {}}
+            for n, (us, der) in rows.items()
+        ],
+    }
+    (path / f"BENCH_{suite}.json").write_text(json.dumps(payload))
+
+
+def run_compare(base, fresh, tol=0.25, time_tol=0.25):
+    return bc.compare(bc.load_dir(base), bc.load_dir(fresh), tol, time_tol)
+
+
+class TestDerivedMetrics:
+    def test_parses_numbers_and_x_suffix_skips_text(self):
+        row = {"derived": "peak_blocks=40;saving=2.50x;parity=exact;x=1e-3"}
+        assert bc.derived_metrics(row) == {
+            "peak_blocks": 40.0,
+            "saving": 2.5,
+            "x": 1e-3,
+        }
+
+    def test_empty_and_missing(self):
+        assert bc.derived_metrics({}) == {}
+        assert bc.derived_metrics({"derived": "no equals here"}) == {}
+
+
+class TestTimeNormalization:
+    def test_uniform_slowdown_is_host_factor_not_failure(self, tmp_path):
+        """Every row 2x slower = a slower host, not a regression."""
+        write_suite(tmp_path / "b", "s", {f"r{i}": (100.0, "") for i in range(5)})
+        write_suite(
+            tmp_path / "f", "s", {f"r{i}": (200.0, "") for i in range(5)}
+        )
+        assert run_compare(tmp_path / "b", tmp_path / "f") == 0
+
+    def test_single_row_slowdown_fails(self, tmp_path):
+        """One row 2x slower while the median holds = a real regression."""
+        write_suite(tmp_path / "b", "s", {f"r{i}": (100.0, "") for i in range(5)})
+        fresh = {f"r{i}": (100.0, "") for i in range(5)}
+        fresh["r0"] = (200.0, "")
+        write_suite(tmp_path / "f", "s", fresh)
+        assert run_compare(tmp_path / "b", tmp_path / "f") == 1
+
+    def test_single_row_speedup_passes(self, tmp_path):
+        write_suite(tmp_path / "b", "s", {f"r{i}": (100.0, "") for i in range(5)})
+        fresh = {f"r{i}": (100.0, "") for i in range(5)}
+        fresh["r0"] = (10.0, "")
+        write_suite(tmp_path / "f", "s", fresh)
+        assert run_compare(tmp_path / "b", tmp_path / "f") == 0
+
+
+class TestMetricGate:
+    def test_within_tolerance_passes_beyond_fails(self, tmp_path):
+        write_suite(tmp_path / "b", "s", {"r": (100.0, "peak_blocks=100")})
+        write_suite(tmp_path / "f1", "s", {"r": (100.0, "peak_blocks=120")})
+        write_suite(tmp_path / "f2", "s", {"r": (100.0, "peak_blocks=130")})
+        assert run_compare(tmp_path / "b", tmp_path / "f1") == 0  # +20% < 25%
+        assert run_compare(tmp_path / "b", tmp_path / "f2") == 1  # +30% > 25%
+
+    def test_none_override_skips_metric(self, tmp_path):
+        """tokens_per_sec is time-family: excluded from the +/-25% gate
+        (covered by the normalized us_per_call instead)."""
+        write_suite(tmp_path / "b", "s", {"r": (100.0, "tokens_per_sec=1000")})
+        write_suite(tmp_path / "f", "s", {"r": (100.0, "tokens_per_sec=10")})
+        assert run_compare(tmp_path / "b", tmp_path / "f") == 0
+        assert bc.METRIC_TOL["time_ratio"] is None  # sim suite rides the same
+
+    def test_tight_override_applies(self, tmp_path):
+        write_suite(tmp_path / "b", "s", {"r": (100.0, "logz=-100.0")})
+        write_suite(tmp_path / "f", "s", {"r": (100.0, "logz=-110.0")})
+        # 10% drift > the 5% logz override, < the 25% default
+        assert run_compare(tmp_path / "b", tmp_path / "f") == 1
+
+
+class TestMissing:
+    def test_missing_row_fails(self, tmp_path):
+        write_suite(tmp_path / "b", "s", {"r0": (100.0, ""), "r1": (100.0, "")})
+        write_suite(tmp_path / "f", "s", {"r0": (100.0, "")})
+        assert run_compare(tmp_path / "b", tmp_path / "f") == 1
+
+    def test_missing_suite_fails(self, tmp_path):
+        write_suite(tmp_path / "b", "s", {"r": (100.0, "")})
+        (tmp_path / "f").mkdir()
+        assert run_compare(tmp_path / "b", tmp_path / "f") == 1
+
+    def test_disappeared_metric_fails(self, tmp_path):
+        write_suite(tmp_path / "b", "s", {"r": (100.0, "peak_blocks=10")})
+        write_suite(tmp_path / "f", "s", {"r": (100.0, "other=1")})
+        assert run_compare(tmp_path / "b", tmp_path / "f") == 1
+
+    def test_new_fresh_suite_is_note_not_failure(self, tmp_path):
+        write_suite(tmp_path / "b", "s", {"r": (100.0, "")})
+        write_suite(tmp_path / "f", "s", {"r": (100.0, "")})
+        write_suite(tmp_path / "f", "new", {"n": (50.0, "")})
+        assert run_compare(tmp_path / "b", tmp_path / "f") == 0
+
+
+class TestUpdateRebase:
+    def _main(self, argv, monkeypatch):
+        monkeypatch.setattr(sys, "argv", ["bench_compare.py"] + argv)
+        return bc.main()
+
+    def test_update_copies_fresh_over_baselines(self, tmp_path, monkeypatch):
+        write_suite(tmp_path / "fresh", "s", {"r": (123.0, "m=1")})
+        base = tmp_path / "base"
+        assert (
+            self._main(
+                [
+                    "--fresh", str(tmp_path / "fresh"),
+                    "--baseline", str(base),
+                    "--update",
+                ],
+                monkeypatch,
+            )
+            == 0
+        )
+        data = json.loads((base / "BENCH_s.json").read_text())
+        assert data["rows"][0]["us_per_call"] == 123.0
+        # and the rebased baseline now gates clean
+        assert (
+            self._main(
+                ["--fresh", str(tmp_path / "fresh"), "--baseline", str(base)],
+                monkeypatch,
+            )
+            == 0
+        )
+
+    def test_update_with_empty_fresh_dir_errors(self, tmp_path, monkeypatch):
+        (tmp_path / "fresh").mkdir()
+        assert (
+            self._main(
+                [
+                    "--fresh", str(tmp_path / "fresh"),
+                    "--baseline", str(tmp_path / "base"),
+                    "--update",
+                ],
+                monkeypatch,
+            )
+            == 2
+        )
+
+    def test_no_baseline_dir_errors(self, tmp_path, monkeypatch):
+        write_suite(tmp_path / "fresh", "s", {"r": (1.0, "")})
+        assert (
+            self._main(
+                [
+                    "--fresh", str(tmp_path / "fresh"),
+                    "--baseline", str(tmp_path / "nope"),
+                ],
+                monkeypatch,
+            )
+            == 2
+        )
+
+
+@pytest.mark.parametrize(
+    "val,ok",
+    [("1", True), ("2.5", True), ("-3e-2", True), ("2.50x", True),
+     ("exact", False), ("1.2.3", False), ("", False)],
+)
+def test_num_regex(val, ok):
+    assert bool(bc._NUM.match(val)) == ok

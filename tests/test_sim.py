@@ -1,0 +1,471 @@
+"""Differential + property harness for the scheduler simulator (§9).
+
+The contract: ``repro.serving.sim`` is **decision-exact** against the
+real :class:`Scheduler` — replaying a recorded event log reproduces the
+admission/resume/grow/preempt/complete/compact decision sequence tuple
+for tuple and the peak pool blocks bit for bit — and its calibrated
+cost model predicts measured warm wall time within +/-25%.
+
+Scenarios mirror tests/test_scheduler.py: burst, staggered arrival,
+queue overflow (slot-table waiting), forced preemption mid-flight,
+pressure preemption on a fixed pool, growth-preferred, and
+shrink-on-complete compaction.
+
+Property tests (hypothesis when installed, seeded sweep otherwise — the
+repo idiom) cover the :class:`SlotTable` allocator and the simulator's
+admission accounting: no double-booking, free-block accounting never
+negative, and an admitted request is never preempted in the same tick
+it was admitted (the admission margin's whole point).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models.model import LanguageModel
+from repro.serving import traces as traces_lib
+from repro.serving.engine import ServeEngine
+from repro.serving.kv_cache import KVCacheConfig
+from repro.serving.scheduler import (
+    AdmissionRefused,
+    DecodeRequest,
+    Scheduler,
+    SchedulerEventLog,
+    SlotTable,
+)
+from repro.serving.sim import (
+    CostModel,
+    SimScheduler,
+    first_divergence,
+    simulate,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare CI hosts
+    HAVE_HYPOTHESIS = False
+
+
+def seeded_property(max_examples: int = 25, fallback_seeds: int = 12):
+    """@given(seed) under hypothesis, a seeded parametrize without."""
+
+    def deco(fn):
+        if HAVE_HYPOTHESIS:
+            return settings(max_examples=max_examples, deadline=None)(
+                given(seed=st.integers(0, 10_000))(fn)
+            )
+        return pytest.mark.parametrize("seed", range(fallback_seeds))(fn)
+
+    return deco
+
+
+KEY = jax.random.PRNGKey(0)
+BS = 4
+
+COST = CostModel(
+    step_s=1e-3, prefill_s=2e-3, grow_s_per_block=1e-5, compact_s_per_block=1e-5
+)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = smoke_config("musicgen_large")
+    lm = LanguageModel(cfg)
+    params, _ = lm.init(KEY)
+    return cfg, lm, params
+
+
+def make_engine(model, max_seqs, num_blocks=0, max_blocks_per_seq=24):
+    cfg, lm, params = model
+    ccfg = KVCacheConfig(
+        n_layers=cfg.n_layers,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.hd,
+        block_size=BS,
+        max_seqs=max_seqs,
+        max_blocks_per_seq=max_blocks_per_seq,
+        num_blocks=num_blocks,
+        dtype=cfg.dtype,
+    )
+    return ServeEngine(lm, params, ccfg)
+
+
+def make_request(model, rid, seed, n, steps, plen, arrive_at=0):
+    cfg, _, _ = model
+    return DecodeRequest(
+        rid=rid,
+        prompt=jax.random.randint(
+            jax.random.PRNGKey(seed), (plen,), 0, cfg.vocab_size
+        ),
+        n_particles=n,
+        steps=steps,
+        key=jax.random.PRNGKey(100 + seed),
+        target_temp=0.5,
+        token_block_size=BS,
+        arrive_at=arrive_at,
+    )
+
+
+def preempt_once_at(rid, t):
+    """A fresh boundary hook: preempt ``rid`` the first time the oldest
+    active request reaches ``t`` decoded tokens.  Works on both the real
+    scheduler and the simulator (same ``_active``/``preempt`` surface)."""
+    fired = []
+
+    def hook(sched):
+        active = list(sched._active)
+        if active and active[0].t_done == t and not fired:
+            fired.append(True)
+            sched.preempt(rid)
+
+    return hook
+
+
+def record_and_replay(model, reqs, engine_kw, sched_kw=None, hook=None):
+    """Run the real scheduler with an event log, then replay the
+    recorded trace through the simulator with the same knobs."""
+    sched_kw = dict(sched_kw or {})
+    eng = make_engine(model, **engine_kw)
+    log = SchedulerEventLog()
+    sched = Scheduler(
+        eng,
+        event_log=log,
+        on_boundary=hook[0] if hook else None,
+        **sched_kw,
+    )
+    for r in reqs:
+        sched.submit(r)
+    sched.run()
+    res = simulate(
+        log.to_trace("recorded"),
+        eng.cache_cfg,
+        COST,
+        on_boundary=hook[1] if hook else None,
+        **sched_kw,
+    )
+    return log, res, sched
+
+
+class TestDecisionExact:
+    """The differential oracle: recorded real runs replay exactly."""
+
+    def check(self, log, res):
+        div = first_divergence(log.decisions, res.decisions)
+        assert div is None, div
+        assert res.peak_blocks == log.peak_blocks()
+
+    def test_burst(self, model):
+        reqs = [
+            make_request(model, "a", 1, n=6, steps=8, plen=6),
+            make_request(model, "b", 2, n=4, steps=10, plen=9),
+        ]
+        log, res, sched = record_and_replay(model, reqs, dict(max_seqs=10))
+        self.check(log, res)
+        assert res.stats.as_dict() == sched.stats.as_dict()
+
+    def test_staggered_arrival(self, model):
+        reqs = [
+            make_request(model, "a", 5, n=6, steps=10, plen=4),
+            make_request(model, "b", 6, n=4, steps=6, plen=6, arrive_at=5),
+        ]
+        log, res, _ = record_and_replay(model, reqs, dict(max_seqs=10))
+        self.check(log, res)
+        kinds = [e[0] for e in res.decisions]
+        assert kinds.count("admit") == 2  # b joined mid-flight
+
+    def test_queue_overflow_waits(self, model):
+        reqs = [
+            make_request(model, f"r{i}", 10 + i, n=4, steps=5, plen=4)
+            for i in range(3)
+        ]
+        log, res, _ = record_and_replay(model, reqs, dict(max_seqs=4))
+        self.check(log, res)
+
+    def test_forced_preempt_resume(self, model):
+        reqs = [make_request(model, "a", 7, n=6, steps=10, plen=6)]
+        hooks = (preempt_once_at("a", 4), preempt_once_at("a", 4))
+        log, res, sched = record_and_replay(
+            model, reqs, dict(max_seqs=6), hook=hooks
+        )
+        self.check(log, res)
+        assert res.stats.preemptions == 1
+        assert res.stats.replayed_tokens == sched.stats.replayed_tokens == 4
+
+    def test_pressure_preemption_fixed_pool(self, model):
+        reqs = [
+            make_request(model, "a", 1, n=4, steps=12, plen=4),
+            make_request(model, "b", 2, n=4, steps=12, plen=4),
+        ]
+        log, res, sched = record_and_replay(
+            model,
+            reqs,
+            dict(max_seqs=8, num_blocks=20),
+            sched_kw=dict(grow=False),
+        )
+        self.check(log, res)
+        assert sched.stats.preemptions >= 1
+        assert res.stats.preemptions == sched.stats.preemptions
+
+    def test_growth_preferred(self, model):
+        reqs = [
+            make_request(model, "a", 1, n=4, steps=12, plen=4),
+            make_request(model, "b", 2, n=4, steps=12, plen=4),
+        ]
+        log, res, _ = record_and_replay(
+            model, reqs, dict(max_seqs=8, num_blocks=8)
+        )
+        self.check(log, res)
+        assert res.stats.preemptions == 0
+        assert any(e[0] == "grow" for e in res.decisions)
+        assert res.num_blocks > 8
+
+    def test_shrink_on_complete(self, model):
+        reqs = [
+            make_request(model, "a", 1, n=6, steps=5, plen=4),
+            make_request(model, "b", 2, n=4, steps=12, plen=4),
+        ]
+        log, res, _ = record_and_replay(
+            model,
+            reqs,
+            dict(max_seqs=10),
+            sched_kw=dict(shrink_on_complete=True),
+        )
+        self.check(log, res)
+        assert any(e[0] == "compact" for e in res.decisions)
+
+
+class TestTimePrediction:
+    """The calibrated cost model predicts the measured warm device-path
+    wall (sum of recorded decode/prefill/grow segments — the portion the
+    model prices; Python loop overhead is unmodeled) within +/-25%."""
+
+    @pytest.fixture(scope="class")
+    def recordings(self, model):
+        """Warm recorded runs of two arrival patterns on one engine
+        family; the cold pass absorbs compiles and pool growth."""
+        out = {}
+        # steps=24: enough tick samples that one noisy CPU wall doesn't
+        # move the calibration mean or the target sum past the gate.
+        for label, interval in (("burst", 0), ("stagger", 3)):
+            trace = traces_lib.staggered(
+                2, interval, n_particles=5, steps=24, plen=6
+            )
+            reqs = traces_lib.to_decode_requests(
+                trace, model[0].vocab_size, target_temp=0.5, token_block_size=BS
+            )
+            eng = make_engine(model, max_seqs=10)
+
+            def once(log=None):
+                sched = Scheduler(eng, event_log=log)
+                for r in reqs:
+                    sched.submit(r)
+                sched.run()
+
+            once()
+            pre_blocks = eng.num_blocks
+            log = SchedulerEventLog()
+            once(log)
+            out[label] = (log, log.recorded_wall_s(), eng.cache_cfg, pre_blocks)
+        return out
+
+    def test_self_prediction(self, recordings):
+        for label, (log, wall, ccfg, pre) in recordings.items():
+            cost = CostModel.from_event_log(log)
+            res = simulate(
+                log.to_trace(label), ccfg, cost, initial_blocks=pre
+            )
+            ratio = res.sim_time_s / wall
+            assert 0.75 <= ratio <= 1.25, (label, ratio)
+
+    def test_cross_scenario_prediction(self, recordings):
+        """A model calibrated on one arrival pattern composes correctly
+        over the other's replay: burst's per-segment costs times
+        stagger's tick/prefill structure — the accounting identity the
+        capacity planner relies on.  Deliberately *not* a wall-clock
+        comparison between the two recordings: those are independent
+        measurements on a shared CPU host, where sustained load shifts
+        between them say nothing about the simulator (self-prediction
+        above carries the empirical +/-25% gate against its own
+        recording)."""
+        cost = CostModel.from_event_log(recordings["burst"][0])
+        log, _, ccfg, pre = recordings["stagger"]
+        res = simulate(log.to_trace("stagger"), ccfg, cost, initial_blocks=pre)
+        # benign by construction: no grows/preempts/compacts and no idle
+        # gaps, so the identity below covers every time term the sim has
+        kinds = {e[0] for e in log.decisions}
+        assert kinds <= {"admit", "step", "complete"}, kinds
+        n_ticks = sum(1 for e in log.decisions if e[0] == "step")
+        n_prefills = sum(1 for e in log.decisions if e[0] == "admit")
+        expected = cost.step_s * n_ticks + cost.prefill_s * n_prefills
+        assert res.sim_time_s == pytest.approx(expected, rel=1e-9)
+        assert n_ticks != sum(
+            1 for e in recordings["burst"][0].decisions if e[0] == "step"
+        )  # the two patterns genuinely differ, so the identity isn't vacuous
+
+
+def _random_trace(rng, *, n_reqs=None, with_forks=True):
+    n_reqs = n_reqs or int(rng.integers(1, 7))
+    trace = traces_lib.poisson(
+        n_reqs,
+        float(rng.uniform(0.05, 1.0)),
+        n_particles=(1, 6),
+        steps=(0, 12),
+        plen=(1, 10),
+        seed=int(rng.integers(0, 2**31)),
+    )
+    if with_forks:
+        trace = traces_lib.with_synthetic_forks(
+            trace, p_resample=float(rng.uniform(0.0, 0.8))
+        )
+    return trace
+
+
+class TestSlotTableProperties:
+    @seeded_property()
+    def test_no_double_booking(self, seed):
+        """Random alloc/free interleavings: live ranges never overlap,
+        accounting always balances, first-fit stays in capacity."""
+        rng = np.random.default_rng(seed)
+        cap = int(rng.integers(1, 33))
+        table = SlotTable(cap)
+        live: dict[int, int] = {}  # lo -> n
+        for _ in range(200):
+            if live and rng.random() < 0.4:
+                lo = int(rng.choice(list(live)))
+                table.free(lo, live.pop(lo))
+            else:
+                n = int(rng.integers(1, max(cap // 2, 2)))
+                lo = table.alloc(n)
+                if lo is None:
+                    # refusal must be honest: no contiguous gap of n
+                    gaps, prev = [], 0
+                    for glo in sorted(live):
+                        gaps.append(glo - prev)
+                        prev = glo + live[glo]
+                    gaps.append(cap - prev)
+                    assert max(gaps, default=0) < n
+                    continue
+                live[lo] = n
+            spans = sorted((lo, lo + n) for lo, n in live.items())
+            for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+                assert a1 <= b0, "overlapping slot ranges"
+            assert all(0 <= a0 and a1 <= cap for a0, a1 in spans)
+            assert table.used == sum(n for n in live.values())
+            assert table.free_slots == cap - table.used
+
+
+class TestAdmissionAccountingProperties:
+    @seeded_property()
+    def test_accounting_never_negative(self, seed):
+        """Random traces through the simulator: free-block accounting
+        never goes negative and refcounts stay consistent (SimPool
+        asserts internally) — growth on and off, strict and not."""
+        rng = np.random.default_rng(seed)
+        trace = _random_trace(rng)
+        max_len = max(r.plen + r.steps for r in trace.requests)
+        ccfg = KVCacheConfig(
+            n_layers=1,
+            n_kv_heads=1,
+            head_dim=8,
+            block_size=int(rng.integers(2, 9)),
+            max_seqs=int(rng.integers(6, 17)),
+            max_blocks_per_seq=-(-max_len // 2) + 1,
+            num_blocks=int(rng.integers(0, 24)),
+            dtype="float32",
+        )
+        grow = bool(rng.random() < 0.7)
+        try:
+            res = simulate(trace, ccfg, COST, grow=grow)
+        except AdmissionRefused:
+            return  # surfaced refusal is a legal outcome, not corruption
+        assert res.min_free >= 0
+        assert res.peak_blocks <= res.pool_peak
+        if not res.oom:
+            assert res.stats.completed == len(trace.requests)
+
+    @seeded_property()
+    def test_admit_never_preempts_itself_same_tick(self, seed):
+        """The admission margin guarantees a join cannot force the
+        preemption backstop onto itself at its own first boundary."""
+        rng = np.random.default_rng(seed)
+        trace = _random_trace(rng)
+        max_len = max(r.plen + r.steps for r in trace.requests)
+        ccfg = KVCacheConfig(
+            n_layers=1,
+            n_kv_heads=1,
+            head_dim=8,
+            block_size=4,
+            max_seqs=int(rng.integers(6, 17)),
+            max_blocks_per_seq=-(-max_len // 4) + 1,
+            num_blocks=int(rng.integers(0, 24)),
+            dtype="float32",
+        )
+        sched = SimScheduler(ccfg, COST, grow=bool(rng.random() < 0.7))
+        for r in trace.requests:
+            sched.submit(r)
+        try:
+            res = sched.run()
+        except AdmissionRefused:
+            res = None
+        decisions = sched.decisions if res is None else res.decisions
+        admitted_at = {}
+        for e in decisions:
+            if e[0] in ("admit", "resume"):
+                admitted_at[e[1]] = e[2]
+            elif e[0] == "preempt":
+                assert admitted_at.get(e[1]) != e[2], (
+                    f"request {e[1]} admitted and preempted in tick {e[2]}"
+                )
+
+
+class TestSimEdges:
+    def test_zero_step_request(self):
+        trace = traces_lib.Trace(
+            name="zero",
+            requests=(
+                traces_lib.TraceRequest(
+                    rid="z", arrive_at=0, n_particles=2, steps=0, plen=3
+                ),
+            ),
+        )
+        ccfg = KVCacheConfig(
+            n_layers=1, n_kv_heads=1, head_dim=8, block_size=4,
+            max_seqs=4, max_blocks_per_seq=4, dtype="float32",
+        )
+        res = simulate(trace, ccfg, COST)
+        kinds = [e[0] for e in res.decisions]
+        assert kinds == ["admit", "complete"]
+        assert res.stats.completed == 1 and res.tokens == 0
+
+    def test_duplicate_rid_rejected(self):
+        ccfg = KVCacheConfig(
+            n_layers=1, n_kv_heads=1, head_dim=8, block_size=4,
+            max_seqs=4, max_blocks_per_seq=4, dtype="float32",
+        )
+        sched = SimScheduler(ccfg, COST)
+        r = traces_lib.TraceRequest(
+            rid="a", arrive_at=0, n_particles=2, steps=2, plen=3
+        )
+        sched.submit(r)
+        with pytest.raises(ValueError, match="duplicate"):
+            sched.submit(r)
+
+    def test_refused_on_full_fixed_pool(self):
+        ccfg = KVCacheConfig(
+            n_layers=1, n_kv_heads=1, head_dim=8, block_size=4,
+            max_seqs=8, max_blocks_per_seq=6, num_blocks=6, dtype="float32",
+        )
+        sched = SimScheduler(ccfg, COST, grow=False)
+        sched.submit(
+            traces_lib.TraceRequest(
+                rid="big", arrive_at=0, n_particles=8, steps=8, plen=8
+            )
+        )
+        with pytest.raises(AdmissionRefused, match="big"):
+            sched.run()
+        assert ("refused", "big", 0) in sched.decisions

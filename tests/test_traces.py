@@ -1,0 +1,154 @@
+"""Seeded trace generation: reproducible bytes everywhere (ISSUE 6).
+
+The bench, the differential tests, and the autotuner all consume
+``repro.serving.traces``; these tests pin down (a) generator semantics,
+(b) JSON round-tripping, (c) **cross-process reproducibility** — the
+same seed yields the same trace in a fresh interpreter, so committed
+baselines and recorded comparisons stay valid — and (d) that lowering a
+trace to :class:`DecodeRequest`s reproduces the scheduler bench's
+historical request bytes exactly (the refactor must not invalidate
+``BENCH_sched.json``).
+"""
+
+from __future__ import annotations
+
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.serving import traces as traces_lib
+
+SIZES = dict(n_particles=(2, 6), steps=(4, 16), plen=(2, 12))
+
+
+class TestGenerators:
+    def test_staggered_arrivals_and_names(self):
+        t = traces_lib.staggered(4, 3, n_particles=5, steps=7, plen=6)
+        assert t.name == "stagger3"
+        assert [r.arrive_at for r in t.requests] == [0, 3, 6, 9]
+        assert [r.rid for r in t.requests] == ["r0", "r1", "r2", "r3"]
+        assert all(
+            (r.n_particles, r.steps, r.plen) == (5, 7, 6) for r in t.requests
+        )
+        assert t.total_tokens == 4 * 5 * 7
+        assert traces_lib.staggered(2, 0, **SIZES).name == "burst"
+
+    def test_poisson_arrivals_sorted_nonnegative(self):
+        t = traces_lib.poisson(50, 0.5, seed=3, **SIZES)
+        arr = [r.arrive_at for r in t.requests]
+        assert arr == sorted(arr) and arr[0] >= 0
+        assert len({r.seed for r in t.requests}) == 50
+
+    def test_bursty_shape(self):
+        t = traces_lib.bursty(3, 4, 10, seed=1, **SIZES)
+        arr = [r.arrive_at for r in t.requests]
+        assert arr == [0] * 4 + [10] * 4 + [20] * 4
+
+    def test_diurnal_count_and_order(self):
+        t = traces_lib.diurnal(40, 100, 1.0, 0.1, seed=2, **SIZES)
+        arr = [r.arrive_at for r in t.requests]
+        assert len(arr) == 40 and arr == sorted(arr)
+
+    def test_size_ranges_inclusive(self):
+        t = traces_lib.poisson(200, 1.0, seed=5, **SIZES)
+        for lo_hi, field in (
+            ((2, 6), "n_particles"),
+            ((4, 16), "steps"),
+            ((2, 12), "plen"),
+        ):
+            vals = [getattr(r, field) for r in t.requests]
+            assert min(vals) >= lo_hi[0] and max(vals) <= lo_hi[1]
+
+    def test_synthetic_forks_seeded_and_in_range(self):
+        t = traces_lib.with_synthetic_forks(
+            traces_lib.poisson(20, 0.3, seed=9, **SIZES), p_resample=0.5
+        )
+        t2 = traces_lib.with_synthetic_forks(
+            traces_lib.poisson(20, 0.3, seed=9, **SIZES), p_resample=0.5
+        )
+        assert t == t2  # derived from request seeds, not process state
+        some = 0
+        for r in t.requests:
+            assert r.forks is not None
+            for step, anc in r.forks.items():
+                some += 1
+                assert 0 <= step < r.steps
+                assert len(anc) == r.n_particles
+                assert all(0 <= a < r.n_particles for a in anc)
+        assert some > 0
+
+
+class TestRoundTrip:
+    def test_json_roundtrip_with_forks(self):
+        t = traces_lib.with_synthetic_forks(
+            traces_lib.bursty(2, 3, 5, seed=4, **SIZES)
+        )
+        assert traces_lib.from_json(traces_lib.to_json(t)) == t
+
+    def test_json_roundtrip_without_forks(self):
+        t = traces_lib.staggered(3, 2, n_particles=4, steps=6, plen=5, seed=1)
+        back = traces_lib.from_json(traces_lib.to_json(t))
+        assert back == t and back.requests[0].forks is None
+
+
+_CHILD = """
+import sys
+from repro.serving import traces as traces_lib
+t = traces_lib.with_synthetic_forks(
+    traces_lib.poisson(
+        25, 0.4, n_particles=(2, 6), steps=(4, 16), plen=(2, 12), seed=13
+    ),
+    p_resample=0.5,
+)
+sys.stdout.write(traces_lib.to_json(t))
+"""
+
+
+class TestCrossProcess:
+    def test_same_bytes_in_fresh_interpreter(self):
+        """The regression gate for satellite 4: trace generation depends
+        only on explicit seeds, never on interpreter state."""
+        here = traces_lib.with_synthetic_forks(
+            traces_lib.poisson(25, 0.4, seed=13, **SIZES), p_resample=0.5
+        )
+        import os
+        import pathlib
+
+        env = dict(os.environ)
+        src = str(pathlib.Path(traces_lib.__file__).resolve().parents[2])
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        out = subprocess.run(
+            [sys.executable, "-c", _CHILD],
+            capture_output=True,
+            text=True,
+            check=True,
+            env=env,
+        )
+        assert traces_lib.to_json(here) == out.stdout
+
+
+class TestDecodeRequestLowering:
+    def test_matches_bench_historical_bytes(self):
+        """to_decode_requests(staggered(...)) reproduces the request
+        construction bench_scheduler.py used before the refactor:
+        prompt from PRNGKey(i), SMC key from PRNGKey(1000 + i)."""
+        jax = pytest.importorskip("jax")
+        vocab = 101
+        t = traces_lib.staggered(3, 2, n_particles=4, steps=6, plen=5)
+        reqs = traces_lib.to_decode_requests(
+            t, vocab, target_temp=0.5, token_block_size=4
+        )
+        for i, r in enumerate(reqs):
+            assert r.rid == f"r{i}" and r.arrive_at == 2 * i
+            np.testing.assert_array_equal(
+                np.asarray(r.prompt),
+                np.asarray(
+                    jax.random.randint(jax.random.PRNGKey(i), (5,), 0, vocab)
+                ),
+            )
+            np.testing.assert_array_equal(
+                np.asarray(r.key), np.asarray(jax.random.PRNGKey(1000 + i))
+            )
+            assert r.target_temp == 0.5 and r.token_block_size == 4
