@@ -24,6 +24,9 @@
 #           decision-exact replay of recorded runs and +/-25% wall-time
 #           prediction, plus a device-free Poisson capacity row whose
 #           deterministic outputs the baseline remembers bit-for-bit
+#   faults — fault-injection overhead (DESIGN.md §10): tokens/sec at
+#           0/5/20% injected transient-fault rates; gates bit-exact
+#           recovery (faulted runs == fault-free run in every output)
 #
 # ``--quick`` shrinks N/T for CI-speed runs; default sizes run in
 # minutes on a CPU host.  The at-scale numbers live in the dry-run
@@ -45,7 +48,7 @@ def main() -> None:
     ap.add_argument(
         "--only", default="",
         help="comma list of {fig5,fig6,fig7,tree,serve,block,sharded,write,"
-        "pool,pgibbs,sched,sim}",
+        "pool,pgibbs,sched,sim,faults}",
     )
     ap.add_argument(
         "--json", default="",
@@ -123,6 +126,14 @@ def _run_suites(args, only, n: int, t: int) -> None:
             n_particles=6,
             steps=12,
             scale_reqs=120 if args.quick else 300,
+        )
+    if only is None or "faults" in only:
+        from benchmarks import bench_faults
+
+        bench_faults.run(
+            n_reqs=2 if args.quick else 3,
+            n_particles=6,
+            steps=12 if args.quick else 16,
         )
     if only is None or "sharded" in only:
         # Subprocess: bench_sharded fakes a multi-device host via

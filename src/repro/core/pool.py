@@ -89,6 +89,7 @@ __all__ = [
     "push_free_mask",
     "rebuild_free_stack",
     "free_stack_consistent",
+    "refcount_matches_tables",
     "NULL_BLOCK",
 ]
 
@@ -546,3 +547,19 @@ def free_stack_consistent(pool: BlockPool) -> jax.Array:
         & (pool.free_top == jnp.sum(free))
         & jnp.all(counts == free)
     )
+
+
+def refcount_matches_tables(pool: BlockPool, tables: jax.Array) -> jax.Array:
+    """Scalar bool: refcount conservation against the reference holders.
+
+    Every non-NULL table entry is one reference; conservation says the
+    pool's refcount vector equals the histogram of table entries — no
+    leaked block (refcount > references: never reclaimed) and no
+    premature free (refcount < references: a live page can be handed
+    out again).  Jittable; the serving watchdog runs it at token
+    boundaries (DESIGN.md §10) over the KV cache's tables.
+    """
+    nb = pool.num_blocks
+    sids = _scatter_ids(nb, tables.reshape(-1).astype(jnp.int32))
+    counts = jnp.zeros((nb,), jnp.int32).at[sids].add(1, mode="drop")
+    return jnp.all(counts == pool.refcount)

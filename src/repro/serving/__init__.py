@@ -1,10 +1,23 @@
 # Serving runtime: COW-paged KV cache (the paper's platform applied to
-# inference), batched decode engine, population-based SMC decoding, and
-# the device-free scheduler simulator (DESIGN.md §9).
+# inference), batched decode engine, population-based SMC decoding, the
+# device-free scheduler simulator (DESIGN.md §9), and the fault
+# injection / recovery layer (DESIGN.md §10).
 
 from repro.serving.kv_cache import KVCacheConfig, PagedKVCache
 from repro.serving.engine import ServeEngine
 from repro.serving.smc_decode import SMCDecoder
+from repro.serving.faults import (
+    DeviceLost,
+    FaultEvent,
+    FaultInjector,
+    FaultKind,
+    FaultRetriesExhausted,
+    InvariantViolation,
+    RequestStatus,
+    RetryPolicy,
+    TransientStepFailure,
+    chaos_schedule,
+)
 from repro.serving.scheduler import (
     TUNED_DEFAULTS,
     AdmissionRefused,
@@ -12,6 +25,8 @@ from repro.serving.scheduler import (
     Scheduler,
     SchedulerEventLog,
     SlotTable,
+    load_checkpoint,
+    save_checkpoint,
 )
 from repro.serving.sim import CostModel, SimScheduler, simulate
 from repro.serving.traces import Trace, TraceRequest
@@ -20,8 +35,16 @@ __all__ = [
     "AdmissionRefused",
     "CostModel",
     "DecodeRequest",
+    "DeviceLost",
+    "FaultEvent",
+    "FaultInjector",
+    "FaultKind",
+    "FaultRetriesExhausted",
+    "InvariantViolation",
     "KVCacheConfig",
     "PagedKVCache",
+    "RequestStatus",
+    "RetryPolicy",
     "Scheduler",
     "SchedulerEventLog",
     "ServeEngine",
@@ -31,5 +54,9 @@ __all__ = [
     "TUNED_DEFAULTS",
     "Trace",
     "TraceRequest",
+    "TransientStepFailure",
+    "chaos_schedule",
+    "load_checkpoint",
+    "save_checkpoint",
     "simulate",
 ]

@@ -40,12 +40,27 @@ decode step.  This module owns that multiplexing (DESIGN.md §8):
 ``benchmarks/bench_scheduler.py`` measures tokens/sec and peak pool
 blocks against request arrival rate and gates single-request parity and
 the peak-under-sum-of-dense bound.
+
+**Operating under failure (DESIGN.md §10).**  The scheduler is also the
+recovery layer: every tick runs inside a rollback-retry loop (a
+transient step failure restores the pre-tick snapshot — engine cache,
+SMC state, replay logs, event log — and retries with capped exponential
+backoff); non-finite logits quarantine *their* request
+(``RequestStatus.POISONED``) while the rest of the batch proceeds;
+per-request ``deadline``/:meth:`Scheduler.cancel` terminate requests
+with typed statuses instead of hanging the batch; the ``shed``
+admission policy bounds the wait queue under overload; and
+:meth:`Scheduler.checkpoint`/:meth:`Scheduler.restore` serialize the
+whole mid-run state for bit-exact resume in a fresh process.  The
+optional watchdog re-verifies pool/slot bookkeeping invariants at every
+boundary.  Fault schedules come from :mod:`repro.serving.faults`.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
+import pickle
 import time
 from typing import Callable, Dict, List, Optional
 
@@ -54,8 +69,19 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.core import pool as pool_lib
 from repro.core.config import CopyMode
+from repro.serving import faults as faults_lib
 from repro.serving.engine import ServeEngine
+from repro.serving.faults import (
+    DeviceLost,
+    FaultInjector,
+    FaultKind,
+    FaultRetriesExhausted,
+    RequestStatus,
+    RetryPolicy,
+    TransientStepFailure,
+)
 from repro.serving.smc_decode import (
     SMCDecodeResult,
     _TokenTrace,
@@ -66,11 +92,15 @@ from repro.smc import executor as executor_lib
 __all__ = [
     "AdmissionRefused",
     "DecodeRequest",
+    "RequestStatus",
+    "RetryPolicy",
     "Scheduler",
     "SchedulerEventLog",
     "SchedulerStats",
     "SlotTable",
     "TUNED_DEFAULTS",
+    "load_checkpoint",
+    "save_checkpoint",
 ]
 
 # Knob values from the simulator sweep (``scripts/autotune.py``,
@@ -90,14 +120,44 @@ TUNED_DEFAULTS = {
 
 class AdmissionRefused(RuntimeError):
     """The pool (or slot table) cannot absorb a request and no progress
-    is possible — surfaced loudly instead of dropping the request."""
+    is possible — surfaced loudly instead of dropping the request.
+
+    Structured fields say which resource fell short and by how much:
+    ``resource`` is ``"slots"`` (decode-batch rows) or ``"blocks"``
+    (pool pages), ``needed``/``available`` the demand and supply at the
+    refusal, ``shortfall`` their difference.
+    """
+
+    def __init__(
+        self,
+        msg: str,
+        *,
+        rid: Optional[str] = None,
+        resource: Optional[str] = None,
+        needed: Optional[int] = None,
+        available: Optional[int] = None,
+    ):
+        super().__init__(msg)
+        self.rid = rid
+        self.resource = resource
+        self.needed = needed
+        self.available = available
+
+    @property
+    def shortfall(self) -> Optional[int]:
+        if self.needed is None or self.available is None:
+            return None
+        return self.needed - self.available
 
 
 @dataclasses.dataclass(frozen=True)
 class DecodeRequest:
     """One SMC-decode request: an independent population competing for
     the shared pool.  ``arrive_at`` (in token-boundary ticks) lets
-    benchmarks model arrival rates; 0 means "queued from the start"."""
+    benchmarks model arrival rates; 0 means "queued from the start".
+    ``deadline`` (also in ticks, ``None`` = none) is an SLA bound: a
+    request still live at the boundary of tick ``deadline`` terminates
+    with ``RequestStatus.EXPIRED`` instead of occupying the batch."""
 
     rid: str
     prompt: jax.Array  # [plen] int32
@@ -113,6 +173,7 @@ class DecodeRequest:
     data_axes: str = "shards"
     use_store_kernels: bool = False
     arrive_at: int = 0
+    deadline: Optional[int] = None
 
 
 class SlotTable:
@@ -139,6 +200,16 @@ class SlotTable:
         return lo
 
     def free(self, lo: int, n: int) -> None:
+        """Release an allocated range.  ``(lo, n)`` must be exactly a
+        range :meth:`alloc` returned and not yet freed — a double free
+        or an overlapping/partial free raises instead of silently
+        desynchronizing the table from the engine's live slots."""
+        if (lo, n) not in self._ranges:
+            raise ValueError(
+                f"SlotTable.free({lo}, {n}): no such allocated range "
+                f"(allocated: {self._ranges}) — double free or "
+                "overlapping free"
+            )
         self._ranges.remove((lo, n))
 
     @property
@@ -161,6 +232,14 @@ class SchedulerStats:
     replayed_tokens: int = 0
     compactions: int = 0
     ticks: int = 0
+    # Fault/recovery surface (DESIGN.md §10):
+    faults: int = 0  # injected fault events fired
+    retries: int = 0  # rollback-retried ticks (per attempt)
+    cancelled: int = 0
+    expired: int = 0
+    poisoned: int = 0
+    shed: int = 0
+    checkpoints: int = 0
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -184,11 +263,24 @@ class SchedulerEventLog:
     * ``("preempt", rid, tick)``
     * ``("complete", rid, tick)``
     * ``("compact", tick, new_num_blocks)``
-    * ``("refused", rid, tick)`` — immediately before AdmissionRefused
+    * ``("refused", rid, tick, resource, shortfall)`` — immediately
+      before :class:`AdmissionRefused`; ``resource`` is ``"slots"`` or
+      ``"blocks"`` and ``shortfall`` how many of it were missing
     * ``("step", tick, (rid, ...), used_blocks)`` — one per decode tick
 
-    ``serving/sim.py`` replays :meth:`to_trace` and must reproduce this
-    sequence exactly (tests/test_sim.py).
+    Fault/recovery tuples (DESIGN.md §10; only the final, surviving
+    attempt of a rolled-back tick keeps its step tuple):
+
+    * ``("fault", kind, tick)`` — an injected fault fired
+      (``("fault", "nan_logits", tick, rid)`` carries its target)
+    * ``("retry", tick, attempt)`` — the tick rolled back and retried
+    * ``("cancel", rid, tick)`` / ``("expired", rid, tick)`` /
+      ``("shed", rid, tick)`` / ``("poisoned", rid, tick)`` — typed
+      terminations (pages freed, partial result surfaced)
+
+    ``serving/sim.py`` replays :meth:`to_trace` (driven by the same
+    fault schedule) and must reproduce this sequence exactly
+    (tests/test_sim.py, tests/test_faults.py).
     """
 
     events: List[tuple] = dataclasses.field(default_factory=list)
@@ -231,6 +323,7 @@ class SchedulerEventLog:
             "n_particles": req.n_particles,
             "steps": req.steps,
             "plen": int(req.prompt.shape[0]),
+            "deadline": req.deadline,
             "forks": {},
         }
 
@@ -251,6 +344,7 @@ class SchedulerEventLog:
                 n_particles=spec["n_particles"],
                 steps=spec["steps"],
                 plen=spec["plen"],
+                deadline=spec.get("deadline"),
                 forks=dict(spec["forks"]),
             )
             for rid, spec in self.requests.items()
@@ -331,6 +425,28 @@ class Scheduler:
     * ``preempt_margin`` — the backstop preempts while free blocks are
       under ``ceil(preempt_margin * need)`` after growth is exhausted;
       > 1 preempts earlier (more headroom, more evictions).
+
+    The fault-model knobs (DESIGN.md §10):
+
+    * ``faults`` — a :class:`~repro.serving.faults.FaultInjector` whose
+      schedule fires at decode attempts (chaos testing; None in
+      production, where real device errors would raise through the same
+      recovery path).
+    * ``retry_policy`` — rollback-retry budget/backoff for transient
+      step failures; exhaustion raises
+      :class:`~repro.serving.faults.FaultRetriesExhausted` with the
+      pre-tick state restored.
+    * ``quarantine`` — detect non-finite logits rows after each decode
+      and terminate the owning request (``POISONED``) at the trailing
+      edge, keeping its clean token prefix.
+    * ``admission`` — ``"fifo"`` (default: wait, head-of-line blocking)
+      or ``"shed"``: expired waiters terminate oldest-first and the
+      arrived-but-waiting queue is bounded at ``queue_limit`` (excess
+      sheds newest-first with ``RequestStatus.SHED``; resumes are
+      exempt — their pages were already paid for once).
+    * ``watchdog`` — run :meth:`check_invariants` at every boundary and
+      raise :class:`~repro.serving.faults.InvariantViolation` at the
+      first corrupted block (debug; each check is a device sync).
     """
 
     def __init__(
@@ -347,7 +463,15 @@ class Scheduler:
         executor: Optional[executor_lib.PopulationExecutor] = None,
         on_boundary: Optional[Callable[["Scheduler"], None]] = None,
         event_log: Optional[SchedulerEventLog] = None,
+        faults: Optional[FaultInjector] = None,
+        retry_policy: Optional[RetryPolicy] = None,
+        quarantine: bool = True,
+        admission: str = "fifo",
+        queue_limit: Optional[int] = None,
+        watchdog: bool = False,
     ):
+        if admission not in ("fifo", "shed"):
+            raise ValueError(f"unknown admission policy {admission!r}")
         self.engine = engine
         self.grow = grow
         self.grow_factor = grow_factor
@@ -357,6 +481,12 @@ class Scheduler:
         self.strict_admission = strict_admission
         self.shrink_on_complete = shrink_on_complete
         self.event_log = event_log
+        self.faults = faults
+        self.retry_policy = retry_policy or RetryPolicy()
+        self.quarantine = quarantine
+        self.admission = admission
+        self.queue_limit = queue_limit
+        self.watchdog = watchdog
         # Observation/intervention hook at the leading edge of every
         # token boundary (tests force preemption; benches sample pool
         # occupancy) — runs before admission/growth/preemption.
@@ -406,6 +536,8 @@ class Scheduler:
                 boundary=self._boundary,
                 traced=False,
             )
+        if self.watchdog:
+            self._run_watchdog()
         return self._results
 
     @property
@@ -423,6 +555,18 @@ class Scheduler:
                 return
         raise KeyError(f"request {rid!r} is not active")
 
+    def cancel(self, rid: str) -> None:
+        """Terminate a live (queued or active) request with
+        ``RequestStatus.CANCELLED``: its pages are freed at this
+        boundary, its completed token prefix is surfaced in the result,
+        and the rest of the batch is unperturbed.  Callable from the
+        ``on_boundary`` hook."""
+        for s in self._active + self._queue:
+            if s.req.rid == rid:
+                self._terminate(s, RequestStatus.CANCELLED, "cancel")
+                return
+        raise KeyError(f"request {rid!r} is not live")
+
     def compact(self, new_num_blocks: Optional[int] = None) -> None:
         """Densify the shared page pool (optionally shrink-to-fit) at a
         token boundary — observationally invisible (DESIGN.md §3.1)."""
@@ -430,6 +574,210 @@ class Scheduler:
         self.stats.compactions += 1
         if self.event_log is not None:
             self.event_log.emit("compact", self.tick, self.engine.num_blocks)
+
+    # -- crash consistency (DESIGN.md §10) -----------------------------------
+
+    def checkpoint(self) -> dict:
+        """Serialize the whole mid-run state — pool snapshot (data +
+        refcounts + free stack + sticky flags), slot table, per-request
+        SMC state, replay logs, token-trace stores, and RNG keys — as a
+        picklable dict of host arrays (:func:`save_checkpoint` writes it
+        to disk).  Call at a token boundary (the ``on_boundary`` hook)
+        or between runs; :meth:`restore` in a fresh process continues
+        bit-exactly.  Mesh-sharded traces are not supported."""
+        for s in self._active + self._queue:
+            if s.req.mesh is not None:
+                raise NotImplementedError(
+                    "checkpoint of mesh-sharded token traces"
+                )
+        cfg = self.engine.cache_cfg
+        self.stats.checkpoints += 1
+        return {
+            "version": 1,
+            "tick": self.tick,
+            "cache_shape": {
+                "block_size": cfg.block_size,
+                "max_seqs": cfg.max_seqs,
+                "max_blocks_per_seq": cfg.max_blocks_per_seq,
+            },
+            "cache": jax.tree_util.tree_map(np.asarray, self.engine.cache),
+            "slot_ranges": list(self.slots._ranges),
+            "stats": self.stats.as_dict(),
+            "active": [self._req_ckpt(s) for s in self._active],
+            "queue": [self._req_ckpt(s) for s in self._queue],
+            "results": {
+                rid: res._replace(
+                    **{
+                        f: np.asarray(v)
+                        for f, v in res._asdict().items()
+                        if isinstance(v, jax.Array)
+                    }
+                )
+                for rid, res in self._results.items()
+            },
+        }
+
+    @classmethod
+    def restore(
+        cls, engine: ServeEngine, state: dict, **knobs
+    ) -> "Scheduler":
+        """Rebuild a mid-run scheduler from a :meth:`checkpoint` dict,
+        possibly in a fresh process: the pool, slot table, per-request
+        SMC state + replay logs, and RNG keys come back bit-exactly, so
+        :meth:`run` completes with results identical to the
+        uninterrupted run (tests/test_faults.py).  ``engine`` must be
+        built from the same model/cache config; ``knobs`` are the
+        constructor's policy arguments."""
+        cfg = engine.cache_cfg
+        shape = state["cache_shape"]
+        if (cfg.block_size, cfg.max_seqs, cfg.max_blocks_per_seq) != (
+            shape["block_size"],
+            shape["max_seqs"],
+            shape["max_blocks_per_seq"],
+        ):
+            raise ValueError(
+                "engine cache config does not match the checkpoint "
+                f"(checkpoint: {shape})"
+            )
+        sched = cls(engine, **knobs)
+        engine.cache = jax.tree_util.tree_map(jnp.asarray, state["cache"])
+        sched.tick = state["tick"]
+        sched.slots._ranges = sorted(tuple(r) for r in state["slot_ranges"])
+        sched.stats = SchedulerStats(**state["stats"])
+        sched._active = [sched._req_restore(d) for d in state["active"]]
+        sched._queue = [sched._req_restore(d) for d in state["queue"]]
+        sched._results = {
+            rid: res._replace(
+                **{
+                    f: jnp.asarray(v)
+                    for f, v in res._asdict().items()
+                    if isinstance(v, np.ndarray)
+                }
+            )
+            for rid, res in state["results"].items()
+        }
+        return sched
+
+    # -- the invariant watchdog ----------------------------------------------
+
+    def check_invariants(self) -> List[str]:
+        """Verify the bookkeeping conservation laws over every pool the
+        scheduler owns; returns the violated ones (empty = clean).
+
+        * KV pool free-stack/refcount agreement
+          (:func:`repro.core.pool.free_stack_consistent`),
+        * KV refcount == block-table reference histogram
+          (:func:`repro.core.pool.refcount_matches_tables`),
+        * slot-table conservation (allocated slots == active particles),
+        * the same two pool checks for every active request's token
+          trace store.
+        """
+        problems: List[str] = []
+        cache = self.engine.cache
+        if not bool(pool_lib.free_stack_consistent(cache.pool)):
+            problems.append("kv pool free stack inconsistent")
+        if not bool(pool_lib.refcount_matches_tables(cache.pool, cache.tables)):
+            problems.append("kv pool refcount/table conservation violated")
+        held = sum(s.n for s in self._active)
+        if self.slots.used != held:
+            problems.append(
+                f"slot table holds {self.slots.used} slots; active "
+                f"requests account for {held}"
+            )
+        for s in self._active:
+            if (
+                s.trace is None
+                or s.req.mesh is not None
+                or s.trace.cfg.mode is CopyMode.EAGER
+            ):
+                continue
+            st = s.trace.store
+            if not bool(pool_lib.free_stack_consistent(st.pool)):
+                problems.append(
+                    f"trace pool free stack inconsistent ({s.req.rid!r})"
+                )
+            if not bool(pool_lib.refcount_matches_tables(st.pool, st.tables)):
+                problems.append(
+                    f"trace refcount/table conservation violated "
+                    f"({s.req.rid!r})"
+                )
+        return problems
+
+    def _run_watchdog(self) -> None:
+        problems = self.check_invariants()
+        if problems:
+            raise faults_lib.InvariantViolation(problems, self.tick)
+
+    # -- checkpoint helpers --------------------------------------------------
+
+    def _req_ckpt(self, s: _ReqState) -> dict:
+        req = s.req
+        return {
+            # The frozen request spec itself, with device arrays hoisted
+            # to host (CopyMode/None-mesh pickle fine).
+            "req": dataclasses.replace(
+                req, prompt=np.asarray(req.prompt), key=np.asarray(req.key)
+            ),
+            "lo": s.lo,
+            "key": np.asarray(s.key),
+            "logw": np.asarray(s.logw),
+            "logz": np.asarray(s.logz),
+            "logits": None if s.logits is None else np.asarray(s.logits),
+            "t_done": s.t_done,
+            "ess": [np.asarray(e) for e in s.ess],
+            "used": list(s.used),
+            "resampled": list(s.resampled),
+            "fed": [np.asarray(f) for f in s.fed],
+            "forks": {int(t): np.asarray(a) for t, a in s.forks.items()},
+            # Growth attribution survives the executor swap: grew =
+            # events-since-admission, re-based against the fresh
+            # executor's zero on restore.
+            "grew_sofar": self._exec.stats.grow_events - s.grew0,
+            "oom0": s.oom0,
+            "preemptions": s.preemptions,
+            "store": (
+                None
+                if s.trace is None
+                else jax.tree_util.tree_map(np.asarray, s.trace.store)
+            ),
+        }
+
+    def _req_restore(self, d: dict) -> _ReqState:
+        req = dataclasses.replace(
+            d["req"],
+            prompt=jnp.asarray(d["req"].prompt),
+            key=jnp.asarray(d["req"].key),
+        )
+        s = _ReqState(req, self.engine.cache_cfg.block_size)
+        s.lo = d["lo"]
+        s.key = jnp.asarray(d["key"])
+        s.logw = jnp.asarray(d["logw"])
+        s.logz = jnp.asarray(d["logz"])
+        s.logits = None if d["logits"] is None else jnp.asarray(d["logits"])
+        s.t_done = d["t_done"]
+        s.ess = [jnp.asarray(e) for e in d["ess"]]
+        s.used = list(d["used"])
+        s.resampled = list(d["resampled"])
+        s.fed = [np.asarray(f, dtype=np.int32) for f in d["fed"]]
+        s.forks = {int(t): np.asarray(a) for t, a in d["forks"].items()}
+        s.grew0 = self._exec.stats.grow_events - d["grew_sofar"]
+        s.oom0 = d["oom0"]
+        s.preemptions = d["preemptions"]
+        if d["store"] is not None:
+            s.trace = _TokenTrace(
+                s.n,
+                req.steps,
+                req.token_copy_mode,
+                s.block_size,
+                None,
+                req.data_axes,
+                use_kernels=req.use_store_kernels,
+            )
+            s.trace.store = jax.tree_util.tree_map(jnp.asarray, d["store"])
+            s.trace_view = s.trace.pool_view()
+        if self.event_log is not None:
+            self.event_log.record_request(req)
+        return s
 
     # -- pool views ----------------------------------------------------------
 
@@ -490,15 +838,30 @@ class Scheduler:
                 if self._active:
                     break  # not here yet; keep decoding who is
                 self.tick = s.req.arrive_at  # idle: fast-forward
+            if self._expired(s):
+                # Arrived (possibly via fast-forward) already past its
+                # deadline: terminate instead of admitting.
+                self._terminate(s, RequestStatus.EXPIRED, "expired")
+                continue
             lo = self.slots.alloc(s.n)
             if lo is None:
                 if not self._active:
                     if self.event_log is not None:
-                        self.event_log.emit("refused", s.req.rid, self.tick)
+                        self.event_log.emit(
+                            "refused",
+                            s.req.rid,
+                            self.tick,
+                            "slots",
+                            s.n - self.slots.free_slots,
+                        )
                     raise AdmissionRefused(
                         f"request {s.req.rid!r} needs {s.n} slots; "
                         f"{self.slots.free_slots} of {self.slots.capacity} "
-                        "are free and no active request remains to finish"
+                        "are free and no active request remains to finish",
+                        rid=s.req.rid,
+                        resource="slots",
+                        needed=s.n,
+                        available=self.slots.free_slots,
                     )
                 break
             if s.trace is None:
@@ -531,14 +894,24 @@ class Scheduler:
                     self.slots.free(lo, s.n)
                     if not self._active:
                         if self.event_log is not None:
-                            self.event_log.emit("refused", s.req.rid, self.tick)
+                            self.event_log.emit(
+                                "refused",
+                                s.req.rid,
+                                self.tick,
+                                "blocks",
+                                demand - self.engine.free_blocks,
+                            )
                         raise AdmissionRefused(
                             f"request {s.req.rid!r} needs {demand} pages "
                             f"(prefill + worst-case clone/append demand); "
                             f"pool has {self.engine.free_blocks} free of "
                             f"{self.engine.num_blocks} "
                             f"(cap {self.engine.cache_cfg.pool_blocks_cap}) "
-                            "and no active request remains to free any"
+                            "and no active request remains to free any",
+                            rid=s.req.rid,
+                            resource="blocks",
+                            needed=demand,
+                            available=self.engine.free_blocks,
                         )
                     break
             self._queue.pop(0)
@@ -621,6 +994,52 @@ class Scheduler:
             s.logits = logits[s.lo : s.lo + s.n]
             self.stats.replayed_tokens += 1
 
+    # -- typed terminations (DESIGN.md §10) ----------------------------------
+
+    def _expired(self, s: _ReqState) -> bool:
+        return s.req.deadline is not None and self.tick >= s.req.deadline
+
+    def _expire_deadlines(self) -> None:
+        """Deadline enforcement at the boundary, active first then
+        queued (both in FIFO/admission order — "oldest first").  An
+        expired active request frees its pages immediately instead of
+        occupying the batch; an expired waiter stops blocking the line
+        (head-of-line deadlock would otherwise be possible: a huge
+        expired head that can never fit)."""
+        for s in [a for a in self._active if self._expired(a)]:
+            self._terminate(s, RequestStatus.EXPIRED, "expired")
+        for s in [q for q in self._queue if self._expired(q)]:
+            self._terminate(s, RequestStatus.EXPIRED, "expired")
+
+    def _shed_overflow(self) -> None:
+        """The ``shed`` admission policy's queue bound: after deadline
+        expiry has dropped the stale waiters, at most ``queue_limit``
+        *arrived, fresh* requests may wait; the excess sheds
+        newest-first (the FIFO keeps its oldest waiters — they shed
+        last).  Preempted requests waiting to resume are exempt: their
+        pages were already paid for once and they sit at the queue
+        front by construction."""
+        if self.admission != "shed" or self.queue_limit is None:
+            return
+        waiting = [
+            s
+            for s in self._queue
+            if s.trace is None and s.req.arrive_at <= self.tick
+        ]
+        for s in waiting[self.queue_limit :]:
+            self._terminate(s, RequestStatus.SHED, "shed")
+
+    def _terminate(
+        self, s: _ReqState, status: RequestStatus, event: str
+    ) -> None:
+        """Typed early termination (cancel / expire / poison / shed):
+        emit the decision, bump the matching stat, and finalize with the
+        partial result — pages freed, batch unperturbed."""
+        if self.event_log is not None:
+            self.event_log.emit(event, s.req.rid, self.tick)
+        setattr(self.stats, status.value, getattr(self.stats, status.value) + 1)
+        self._finalize(s, status=status)
+
     # -- the boundary hook ---------------------------------------------------
 
     def _boundary(self, carry, ts):
@@ -629,7 +1048,14 @@ class Scheduler:
         the trailing edge (end of :meth:`_token_step`)."""
         if self.on_boundary is not None:
             self.on_boundary(self)
+        if self.watchdog:
+            self._run_watchdog()
+        self._expire_deadlines()
         self._admit_ready()
+        # Shed AFTER admission: the queue bound applies to requests
+        # that actually have to wait, not to ones this very boundary
+        # was about to place.
+        self._shed_overflow()
         need = sum(s.n for s in self._active)
         if need == 0:
             return carry
@@ -663,16 +1089,160 @@ class Scheduler:
 
     # -- one global token step ----------------------------------------------
 
+    def _snapshot(self) -> dict:
+        """Reference-capture the state one decode tick can mutate (jax
+        arrays are immutable, so this is O(active) pointers, not a
+        copy): engine cache, batch membership, per-request SMC state +
+        trace stores + log lengths, growth counter, event-log lengths.
+        The rollback-retry loop restores it on a transient failure —
+        PR 3's growth rollback promoted to general recovery."""
+        return {
+            "cache": self.engine.cache,
+            "active": list(self._active),
+            "queue": list(self._queue),
+            "reqs": [
+                (
+                    s,
+                    s.key,
+                    s.logw,
+                    s.logz,
+                    s.logits,
+                    s.t_done,
+                    None if s.trace is None else s.trace.store,
+                    len(s.ess),
+                    len(s.used),
+                    len(s.resampled),
+                    len(s.fed),
+                    dict(s.forks),
+                )
+                for s in self._active
+            ],
+            "grow_events": self._exec.stats.grow_events,
+        }
+
+    def _log_mark(self) -> Optional[tuple]:
+        """Event-log lengths at the start of one decode *attempt* —
+        re-captured per attempt (unlike :meth:`_snapshot`, taken once
+        per tick), so truncating a failed attempt never swallows an
+        earlier attempt's re-logged faults or its retry tuple."""
+        log = self.event_log
+        if log is None:
+            return None
+        return (
+            len(log.events),
+            len(log.step_wall_s),
+            len(log.prefill_wall_s),
+            len(log.grow_wall_s),
+            len(log.grow_old_blocks),
+        )
+
+    def _log_truncate(self, mark: Optional[tuple]) -> None:
+        if mark is None:
+            return
+        log = self.event_log
+        ne, ns, npre, ng, ngo = mark
+        del log.events[ne:]
+        del log.step_wall_s[ns:]
+        del log.prefill_wall_s[npre:]
+        del log.grow_wall_s[ng:]
+        del log.grow_old_blocks[ngo:]
+
+    def _restore(self, snap: dict) -> None:
+        self.engine.cache = snap["cache"]
+        self._active = list(snap["active"])
+        self._queue = list(snap["queue"])
+        for (
+            s,
+            key,
+            logw,
+            logz,
+            logits,
+            t_done,
+            store,
+            ne,
+            nu,
+            nr,
+            nf,
+            forks,
+        ) in snap["reqs"]:
+            s.key, s.logw, s.logz, s.logits, s.t_done = (
+                key,
+                logw,
+                logz,
+                logits,
+                t_done,
+            )
+            if store is not None:
+                s.trace.store = store
+            del s.ess[ne:], s.used[nu:], s.resampled[nr:], s.fed[nf:]
+            s.forks = dict(forks)
+        self._exec.stats.grow_events = snap["grow_events"]
+
+    def _log_fault(self, ev: faults_lib.FaultEvent) -> None:
+        if self.event_log is not None:
+            self.event_log.emit(*faults_lib.fault_tuple(ev, self.tick))
+
     def _token_step(self, carry, ts):
-        """One token for every active request: per-request SMC updates
-        (sample → reweight → resample/fork), then ONE jitted decode over
-        the union of the active slot ranges, then per-request appends
-        and departures."""
+        """One decode tick inside the recovery loop: a transient failure
+        (injected, or a real device error surfacing as
+        :class:`TransientStepFailure`) rolls the tick back to its
+        pre-step snapshot and retries under the
+        :class:`~repro.serving.faults.RetryPolicy`'s capped exponential
+        backoff.  The surviving attempt is bit-identical to a fault-free
+        tick — same RNG keys, same pool state — which is the chaos
+        harness's differential gate."""
         if not self._active:
             self.tick += 1
             return carry, ()
+        snap = self._snapshot()
+        attempt = 0
+        while True:
+            mark = self._log_mark()
+            try:
+                return self._token_step_attempt(carry)
+            except TransientStepFailure as exc:
+                self._restore(snap)
+                self._log_truncate(mark)
+                attempt += 1
+                # The failed attempt's log entries were truncated with
+                # the rollback; the fired faults stay on the record.
+                for ev in exc.events:
+                    self._log_fault(ev)
+                if attempt > self.retry_policy.max_retries:
+                    raise FaultRetriesExhausted(
+                        f"tick {self.tick} failed {attempt} times "
+                        f"(max_retries={self.retry_policy.max_retries}); "
+                        "state restored to the pre-tick snapshot",
+                        tick=self.tick,
+                        attempts=attempt,
+                    ) from exc
+                self.stats.retries += 1
+                if self.event_log is not None:
+                    self.event_log.emit("retry", self.tick, attempt)
+                delay = self.retry_policy.delay_s(attempt)
+                if delay > 0.0:
+                    time.sleep(delay)
+
+    def _token_step_attempt(self, carry):
+        """One token for every active request: per-request SMC updates
+        (sample → reweight → resample/fork), then ONE jitted decode over
+        the union of the active slot ranges, then per-request appends
+        and departures (completions, then quarantines)."""
         t0 = time.perf_counter()
         eng = self.engine
+        events = self.faults.step_events(self.tick) if self.faults else []
+        for ev in events:
+            self.stats.faults += 1
+            self._log_fault(ev)
+            if ev.kind is FaultKind.DEVICE_LOSS:
+                # Unrecoverable — and raised before any mutation, so the
+                # pool stays invariant-clean for checkpoint recovery.
+                raise DeviceLost(f"device lost at tick {self.tick}")
+            if ev.kind is FaultKind.LATENCY and ev.delay_s > 0.0:
+                time.sleep(ev.delay_s)  # lands in the recorded step wall
+        fail_step = any(ev.kind is FaultKind.STEP_FAILURE for ev in events)
+        starve = any(ev.kind is FaultKind.OOM for ev in events)
+        poison = {ev.rid for ev in events if ev.kind is FaultKind.NAN_LOGITS}
         S = eng.cache_cfg.max_seqs
         tokens = jnp.zeros((S,), jnp.int32)
         mask = jnp.zeros((S,), jnp.bool_)
@@ -709,35 +1279,89 @@ class Scheduler:
             pending.append((s, token))
             tokens = tokens.at[s.lo : s.lo + s.n].set(token.astype(jnp.int32))
             mask = mask.at[s.lo : s.lo + s.n].set(True)
+        if starve:
+            # Forced mid-run alloc OOM: empty the free stack so every
+            # allocation inside this decode fails (sticky ``oom`` flag,
+            # dump-row writes — the §3.1 exhaustion path), then fail the
+            # step.  The rollback restores the pre-starvation pool,
+            # sticky flag included.
+            pool = eng.cache.pool
+            eng.cache = eng.cache._replace(
+                pool=pool._replace(free_top=jnp.zeros_like(pool.free_top))
+            )
         logits = eng.decode(tokens[:, None], mask)
+        if fail_step or starve:
+            raise TransientStepFailure(
+                f"transient step failure at tick {self.tick}", events=events
+            )
+        for s in self._active:
+            if s.req.rid in poison:
+                # Poisoned *after* the decode: the population's logits
+                # rows go non-finite, exactly like a numerically
+                # diverged model output would.
+                logits = logits.at[s.lo : s.lo + s.n].set(jnp.nan)
+        finite = None
+        if self.quarantine:
+            finite = np.asarray(jnp.all(jnp.isfinite(logits), axis=-1))
         used = eng.used_blocks  # one device sync, shared by all requests
         if self.event_log is not None:
             self.event_log.step_wall_s.append(time.perf_counter() - t0)
             self.event_log.emit(
                 "step", self.tick, tuple(s.req.rid for s in self._active), used
             )
+        poisoned: List[_ReqState] = []
         for s, token in pending:
             s.logits = logits[s.lo : s.lo + s.n]
             s.trace.append(token.astype(jnp.int32))
             s.fed.append(np.asarray(token, dtype=np.int32))
             s.used.append(used)
             s.t_done += 1
+            if finite is not None and not bool(
+                finite[s.lo : s.lo + s.n].all()
+            ):
+                poisoned.append(s)
         self.tick += 1
         self.stats.ticks += 1
-        # Trailing edge: departures leave the batch at the boundary.
+        # Trailing edge: departures leave the batch at the boundary —
+        # completions first, then quarantines.
         for s in [a for a in self._active if a.done]:
             self._finalize(s)
+        # Quarantine: this tick's token was sampled from the *previous*
+        # (clean) logits, so the completed prefix is trustworthy; only
+        # the next sample would read the NaNs.  Terminate the poisoned
+        # request now — one bad population degrades itself, not the
+        # shared batch.  A request that finished this very tick keeps
+        # its completion (its poisoned logits are never read).
+        for s in poisoned:
+            if s in self._active:
+                self._terminate(s, RequestStatus.POISONED, "poisoned")
         return carry, ()
 
     # -- completion ----------------------------------------------------------
 
-    def _finalize(self, s: _ReqState) -> None:
+    def _finalize(
+        self, s: _ReqState, status: RequestStatus = RequestStatus.OK
+    ) -> None:
         steps = s.req.steps
+        ok = status is RequestStatus.OK
         if self.event_log is not None:
-            self.event_log.emit("complete", s.req.rid, self.tick)
+            if ok:
+                self.event_log.emit("complete", s.req.rid, self.tick)
             self.event_log.record_forks(s.req.rid, s.forks)
+        if s.trace is not None:
+            tokens = s.trace.tokens(steps)
+            if not ok and s.t_done < steps:
+                # Terminated mid-flight: surface the completed prefix,
+                # zero-padded to the requested step budget.
+                tokens = jnp.where(
+                    jnp.arange(steps, dtype=jnp.int32)[None, :] < s.t_done,
+                    tokens,
+                    0,
+                )
+        else:
+            tokens = jnp.zeros((s.n, steps), jnp.int32)
         self._results[s.req.rid] = SMCDecodeResult(
-            tokens=s.trace.tokens(steps),
+            tokens=tokens,
             log_weights=s.logw,
             log_evidence=s.logz,
             ess_trace=jnp.stack(s.ess) if s.ess else jnp.zeros((0,), jnp.float32),
@@ -748,16 +1372,27 @@ class Scheduler:
             # engine cannot retroactively poison a clean run; the
             # limitation — an already-set flag masks a second failure —
             # is inherent to one sticky bit per pool).
-            oom=jnp.asarray(s.trace.oom() or (self.engine.oom and not s.oom0)),
+            oom=jnp.asarray(
+                (s.trace is not None and s.trace.oom())
+                or (self.engine.oom and not s.oom0)
+            ),
             grew=jnp.asarray(self._exec.stats.grow_events - s.grew0, jnp.int32),
             preemptions=s.preemptions,
+            status=status.value,
         )
-        self.engine.free_slots(s.lo, s.n)
-        self.slots.free(s.lo, s.n)
+        if s.lo is not None:
+            # Never-placed terminations (queued cancel/expire/shed) hold
+            # no slots or pages — freeing here would corrupt the tables
+            # (the SlotTable.free misuse audit).
+            self.engine.free_slots(s.lo, s.n)
+            self.slots.free(s.lo, s.n)
         if s in self._active:
             self._active.remove(s)
+        if s in self._queue:
+            self._queue.remove(s)
         s.lo = None
-        self.stats.completed += 1
+        if ok:
+            self.stats.completed += 1
         if self.shrink_on_complete and self._active:
             # Return memory when the batch thins out: shrink to 1.25x
             # the live set, floored at two worst-case tokens for the
@@ -768,3 +1403,20 @@ class Scheduler:
             target = max(-(-live * 5 // 4), live + floor, 16)
             if target < self.engine.num_blocks:
                 self.compact(target)
+
+
+# -- checkpoint persistence (DESIGN.md §10) ----------------------------------
+
+
+def save_checkpoint(path, state: dict) -> None:
+    """Write a :meth:`Scheduler.checkpoint` dict to disk.  The state is
+    host numpy arrays in plain containers (plus the frozen request
+    specs), pickled — a local, trusted-process format, like the rest of
+    the repo's checkpoints."""
+    with open(path, "wb") as f:
+        pickle.dump(state, f)
+
+
+def load_checkpoint(path) -> dict:
+    with open(path, "rb") as f:
+        return pickle.load(f)

@@ -46,6 +46,16 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import pool as pool_lib
+from repro.serving import faults as faults_lib
+from repro.serving.faults import (
+    DeviceLost,
+    FaultInjector,
+    FaultKind,
+    FaultRetriesExhausted,
+    RequestStatus,
+    RetryPolicy,
+    TransientStepFailure,
+)
 from repro.roofline.analysis import (
     TPU_V5E,
     Hardware,
@@ -267,6 +277,7 @@ class _SimReq:
         self.tables: Optional[List[List[int]]] = None
         self.length = 0
         self.preemptions = 0
+        self.status = RequestStatus.OK.value
         self.arrival_s: Optional[float] = None
         self.arrival_tick: Optional[int] = None
         self.admit_s: Optional[float] = None
@@ -354,7 +365,13 @@ class SimScheduler:
         shrink_on_complete: bool = False,
         on_boundary: Optional[Callable[["SimScheduler"], None]] = None,
         initial_blocks: Optional[int] = None,
+        faults: Optional[FaultInjector] = None,
+        retry_policy: Optional[RetryPolicy] = None,
+        admission: str = "fifo",
+        queue_limit: Optional[int] = None,
     ):
+        if admission not in ("fifo", "shed"):
+            raise ValueError(f"unknown admission policy {admission!r}")
         self.cache_cfg = cache_cfg
         self.cost = cost
         self.grow = grow
@@ -365,6 +382,14 @@ class SimScheduler:
         self.strict_admission = strict_admission
         self.shrink_on_complete = shrink_on_complete
         self.on_boundary = on_boundary
+        # The fault model (DESIGN.md §10), decision-mirrored: hand this
+        # a fresh injector over the *same schedule* the real run
+        # consumed (the real scheduler's quarantine must be on — the
+        # sim models poison detection as always succeeding).
+        self.faults = faults
+        self.retry_policy = retry_policy or RetryPolicy()
+        self.admission = admission
+        self.queue_limit = queue_limit
         self.slots = SlotTable(cache_cfg.max_seqs)
         # initial_blocks overrides the config's fresh-pool size — replay
         # against an engine whose pool already grew (a warm recording).
@@ -393,8 +418,10 @@ class SimScheduler:
         while self._queue or self._active:
             self._boundary()
             self._token_step()
+        # t_done == steps for completed requests; terminated ones
+        # contribute their completed prefix.
         tokens = sum(
-            s.req.n_particles * s.req.steps for s in self._done.values()
+            s.req.n_particles * s.t_done for s in self._done.values()
         )
         return SimResult(
             trace_name="",
@@ -418,6 +445,7 @@ class SimScheduler:
                     "arrival_tick": s.arrival_tick,
                     "done_tick": s.done_tick,
                     "preemptions": s.preemptions,
+                    "status": s.status,
                 }
                 for rid, s in self._done.items()
             },
@@ -429,6 +457,13 @@ class SimScheduler:
                 self._preempt(s)
                 return
         raise KeyError(f"request {rid!r} is not active")
+
+    def cancel(self, rid: str) -> None:
+        for s in self._active + self._queue:
+            if s.req.rid == rid:
+                self._terminate(s, RequestStatus.CANCELLED, "cancel")
+                return
+        raise KeyError(f"request {rid!r} is not live")
 
     def compact(self, new_num_blocks: Optional[int] = None) -> None:
         self.pool.compact(new_num_blocks)
@@ -535,13 +570,28 @@ class SimScheduler:
                 self.time += (s.req.arrive_at - self.tick) * self.cost.step_s
                 self.tick = s.req.arrive_at
                 self._stamp_arrivals()
+            if self._expired(s):
+                self._terminate(s, RequestStatus.EXPIRED, "expired")
+                continue
             lo = self.slots.alloc(s.n)
             if lo is None:
                 if not self._active:
-                    self.decisions.append(("refused", s.req.rid, self.tick))
+                    self.decisions.append(
+                        (
+                            "refused",
+                            s.req.rid,
+                            self.tick,
+                            "slots",
+                            s.n - self.slots.free_slots,
+                        )
+                    )
                     raise AdmissionRefused(
                         f"request {s.req.rid!r} needs {s.n} slots; "
-                        f"{self.slots.free_slots} of {self.slots.capacity} free"
+                        f"{self.slots.free_slots} of {self.slots.capacity} free",
+                        rid=s.req.rid,
+                        resource="slots",
+                        needed=s.n,
+                        available=self.slots.free_slots,
                     )
                 break
             demand = self._join_demand(s) + math.ceil(
@@ -556,11 +606,23 @@ class SimScheduler:
                 else:
                     self.slots.free(lo, s.n)
                     if not self._active:
-                        self.decisions.append(("refused", s.req.rid, self.tick))
+                        self.decisions.append(
+                            (
+                                "refused",
+                                s.req.rid,
+                                self.tick,
+                                "blocks",
+                                demand - self.pool.free,
+                            )
+                        )
                         raise AdmissionRefused(
                             f"request {s.req.rid!r} needs {demand} pages; "
                             f"pool has {self.pool.free} free of "
-                            f"{self.pool.num_blocks} (cap {self.cap})"
+                            f"{self.pool.num_blocks} (cap {self.cap})",
+                            rid=s.req.rid,
+                            resource="blocks",
+                            needed=demand,
+                            available=self.pool.free,
                         )
                     break
             self._queue.pop(0)
@@ -617,13 +679,46 @@ class SimScheduler:
             self.stats.replayed_tokens += 1
             self.time += self.cost.step_s
 
+    # -- typed terminations (mirror of the real scheduler's) ------------------
+
+    def _expired(self, s: _SimReq) -> bool:
+        return s.req.deadline is not None and self.tick >= s.req.deadline
+
+    def _expire_deadlines(self) -> None:
+        for s in [a for a in self._active if self._expired(a)]:
+            self._terminate(s, RequestStatus.EXPIRED, "expired")
+        for s in [q for q in self._queue if self._expired(q)]:
+            self._terminate(s, RequestStatus.EXPIRED, "expired")
+
+    def _shed_overflow(self) -> None:
+        if self.admission != "shed" or self.queue_limit is None:
+            return
+        waiting = [
+            s
+            for s in self._queue
+            if not s.started and s.req.arrive_at <= self.tick
+        ]
+        for s in waiting[self.queue_limit :]:
+            self._terminate(s, RequestStatus.SHED, "shed")
+
+    def _terminate(
+        self, s: _SimReq, status: RequestStatus, event: str
+    ) -> None:
+        self.decisions.append((event, s.req.rid, self.tick))
+        setattr(self.stats, status.value, getattr(self.stats, status.value) + 1)
+        self._finalize(s, status=status)
+
     # -- the boundary + one token step ---------------------------------------
 
     def _boundary(self) -> None:
         if self.on_boundary is not None:
             self.on_boundary(self)
         self._stamp_arrivals()
+        self._expire_deadlines()
         self._admit_ready()
+        # Shed AFTER admission, like the real scheduler: the queue
+        # bound applies to requests that actually have to wait.
+        self._shed_overflow()
         need = sum(s.n for s in self._active)
         if need == 0:
             return
@@ -640,6 +735,40 @@ class SimScheduler:
         if not self._active:
             self.tick += 1
             return
+        # Fault-model mirror (DESIGN.md §10): consume the schedule per
+        # decode attempt, exactly like the real recovery loop — fault
+        # tuples per attempt, a retry tuple per rollback, the step
+        # tuple only for the surviving attempt.  The rollback itself is
+        # a no-op here (the accounting below hasn't run yet); only the
+        # decision stream and the clock need modeling.
+        attempt = 0
+        while True:
+            events = self.faults.step_events(self.tick) if self.faults else []
+            for ev in events:
+                self.stats.faults += 1
+                self.decisions.append(faults_lib.fault_tuple(ev, self.tick))
+                if ev.kind is FaultKind.DEVICE_LOSS:
+                    raise DeviceLost(f"device lost at tick {self.tick}")
+                if ev.kind is FaultKind.LATENCY:
+                    self.time += ev.delay_s
+            failing = any(
+                ev.kind in (FaultKind.STEP_FAILURE, FaultKind.OOM) for ev in events
+            )
+            if not failing:
+                break
+            self.time += self.cost.step_s  # the discarded attempt's decode
+            attempt += 1
+            if attempt > self.retry_policy.max_retries:
+                raise FaultRetriesExhausted(
+                    f"tick {self.tick} failed {attempt} times "
+                    f"(max_retries={self.retry_policy.max_retries})",
+                    tick=self.tick,
+                    attempts=attempt,
+                )
+            self.stats.retries += 1
+            self.decisions.append(("retry", self.tick, attempt))
+            self.time += self.retry_policy.delay_s(attempt)
+        poison = {ev.rid for ev in events if ev.kind is FaultKind.NAN_LOGITS}
         for s in self._active:
             anc = (s.req.forks or {}).get(s.t_done)
             if anc is not None:
@@ -656,20 +785,32 @@ class SimScheduler:
         self.time += self.cost.step_s
         for s in [a for a in self._active if a.done]:
             self._finalize(s)
+        for s in [a for a in self._active if a.req.rid in poison]:
+            self._terminate(s, RequestStatus.POISONED, "poisoned")
 
     # -- completion ----------------------------------------------------------
 
-    def _finalize(self, s: _SimReq) -> None:
-        self.decisions.append(("complete", s.req.rid, self.tick))
-        self._free_pages(s)
-        self.slots.free(s.lo, s.n)
+    def _finalize(
+        self, s: _SimReq, status: RequestStatus = RequestStatus.OK
+    ) -> None:
+        ok = status is RequestStatus.OK
+        if ok:
+            self.decisions.append(("complete", s.req.rid, self.tick))
+        if s.tables is not None:
+            self._free_pages(s)
+        if s.lo is not None:
+            self.slots.free(s.lo, s.n)
         if s in self._active:
             self._active.remove(s)
+        if s in self._queue:
+            self._queue.remove(s)
         s.lo = None
+        s.status = status.value
         s.done_s = self.time
         s.done_tick = self.tick
         self._done[s.req.rid] = s
-        self.stats.completed += 1
+        if ok:
+            self.stats.completed += 1
         if self.shrink_on_complete and self._active:
             live = self.pool.used
             floor = 2 * sum(a.n for a in self._active)

@@ -222,6 +222,11 @@ class SMCDecodeResult(NamedTuple):
     # preempted (pages released, token history retained, replayed on
     # resume).  Always 0 for a private single-request run.
     preemptions: int = 0
+    # Typed terminal status (DESIGN.md §10): "ok", or a
+    # ``repro.serving.faults.RequestStatus`` value for a request the
+    # scheduler cancelled, expired, quarantined, or shed — in which case
+    # ``tokens`` holds the completed prefix, zero-padded to ``steps``.
+    status: str = "ok"
 
 
 def smc_token_update(

@@ -61,7 +61,9 @@ class TraceRequest:
     (:func:`to_decode_requests`), and its synthetic fork schedule
     (:func:`with_synthetic_forks`).  ``forks`` maps step -> ancestor
     tuple; ``None`` means "no resample at any step" until a schedule is
-    attached or recorded.
+    attached or recorded.  ``deadline`` mirrors
+    ``DecodeRequest.deadline`` (ticks; ``None`` = no SLA bound) so
+    chaos/SLA traces replay decision-exact through the simulator.
     """
 
     rid: str
@@ -71,6 +73,7 @@ class TraceRequest:
     plen: int
     seed: int = 0
     forks: Optional[Dict[int, Tuple[int, ...]]] = None
+    deadline: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -263,6 +266,7 @@ def to_decode_requests(
             target_temp=target_temp,
             token_block_size=token_block_size,
             arrive_at=r.arrive_at,
+            deadline=r.deadline,
         )
         for r in trace.requests
     ]
@@ -283,6 +287,7 @@ def to_json(trace: Trace) -> str:
                 "steps": r.steps,
                 "plen": r.plen,
                 "seed": r.seed,
+                "deadline": r.deadline,
                 "forks": (
                     None
                     if r.forks is None
@@ -305,6 +310,9 @@ def from_json(text: str) -> Trace:
             steps=r["steps"],
             plen=r["plen"],
             seed=r["seed"],
+            # .get: traces recorded before the fault-model PR have no
+            # deadline field.
+            deadline=r.get("deadline"),
             forks=(
                 None
                 if r["forks"] is None

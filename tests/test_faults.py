@@ -1,0 +1,636 @@
+"""Chaos harness for the fault-injection and recovery layer (§10).
+
+The contract under test:
+
+  * **recoverable faults are invisible**: a run under injected
+    transient step failures / forced mid-run OOM / latency spikes
+    produces tokens, log-weights, and log-evidence **bit-identical** to
+    the fault-free run (rollback-retry restores the pre-tick snapshot,
+    RNG keys included);
+  * **unrecoverable faults surface typed**, with the pool
+    invariant-clean: retry exhaustion raises
+    :class:`FaultRetriesExhausted`, device loss raises
+    :class:`DeviceLost`, and ``check_invariants()`` is empty afterward;
+  * **nothing hangs and nothing silently drops**: cancel / deadline /
+    quarantine / load-shed all end in a typed
+    ``SMCDecodeResult.status``, pages freed, the rest of the batch
+    bit-exact;
+  * **crash consistency**: ``checkpoint()`` -> kill -> ``restore()`` in
+    a fresh engine resumes bit-exactly (the kill-and-restore
+    differential);
+  * **the simulator mirrors it all**: chaos runs replay decision-exact
+    through ``serving/sim.py``, including the committed regression
+    corpus in tests/chaos_corpus/.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models.model import LanguageModel
+from repro.serving.engine import ServeEngine
+from repro.serving.faults import (
+    DeviceLost,
+    FaultEvent,
+    FaultInjector,
+    FaultKind,
+    FaultRetriesExhausted,
+    RequestStatus,
+    RetryPolicy,
+    chaos_schedule,
+    schedule_from_json,
+    schedule_to_json,
+)
+from repro.serving.kv_cache import KVCacheConfig
+from repro.serving.scheduler import (
+    DecodeRequest,
+    Scheduler,
+    SchedulerEventLog,
+    load_checkpoint,
+    save_checkpoint,
+)
+from repro.serving.sim import CostModel, first_divergence, simulate
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare CI hosts
+    HAVE_HYPOTHESIS = False
+
+
+def seeded_property(max_examples: int = 10, fallback_seeds: int = 5):
+    """@given(seed) under hypothesis, a seeded parametrize without."""
+
+    def deco(fn):
+        if HAVE_HYPOTHESIS:
+            return settings(max_examples=max_examples, deadline=None)(
+                given(seed=st.integers(0, 10_000))(fn)
+            )
+        return pytest.mark.parametrize("seed", range(fallback_seeds))(fn)
+
+    return deco
+
+
+KEY = jax.random.PRNGKey(0)
+BS = 4
+CORPUS_DIR = os.path.join(os.path.dirname(__file__), "chaos_corpus")
+
+COST = CostModel(
+    step_s=1e-3, prefill_s=2e-3, grow_s_per_block=1e-5, compact_s_per_block=1e-5
+)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = smoke_config("musicgen_large")
+    lm = LanguageModel(cfg)
+    params, _ = lm.init(KEY)
+    return cfg, lm, params
+
+
+def make_engine(model, max_seqs, num_blocks=0, max_blocks_per_seq=24):
+    cfg, lm, params = model
+    ccfg = KVCacheConfig(
+        n_layers=cfg.n_layers,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.hd,
+        block_size=BS,
+        max_seqs=max_seqs,
+        max_blocks_per_seq=max_blocks_per_seq,
+        num_blocks=num_blocks,
+        dtype=cfg.dtype,
+    )
+    return ServeEngine(lm, params, ccfg)
+
+
+def make_request(model, rid, seed, n, steps, plen, arrive_at=0, deadline=None):
+    cfg, _, _ = model
+    return DecodeRequest(
+        rid=rid,
+        prompt=jax.random.randint(
+            jax.random.PRNGKey(seed), (plen,), 0, cfg.vocab_size
+        ),
+        n_particles=n,
+        steps=steps,
+        key=jax.random.PRNGKey(100 + seed),
+        target_temp=0.5,
+        token_block_size=BS,
+        arrive_at=arrive_at,
+        deadline=deadline,
+    )
+
+
+def run_sched(model, reqs, engine_kw, hook=None, **sched_kw):
+    eng = make_engine(model, **engine_kw)
+    sched = Scheduler(eng, on_boundary=hook, **sched_kw)
+    for r in reqs:
+        sched.submit(r)
+    results = sched.run()
+    return sched, results
+
+
+def assert_bit_exact(res_a, res_b):
+    np.testing.assert_array_equal(np.asarray(res_a.tokens), np.asarray(res_b.tokens))
+    np.testing.assert_array_equal(
+        np.asarray(res_a.log_weights), np.asarray(res_b.log_weights)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res_a.log_evidence), np.asarray(res_b.log_evidence)
+    )
+
+
+# -- the injector itself (no model) ------------------------------------------
+
+
+class TestFaultInjector:
+    def test_consumption_and_repeats(self):
+        inj = FaultInjector(
+            [
+                FaultEvent(FaultKind.STEP_FAILURE, tick=2, repeats=2),
+                FaultEvent(FaultKind.NAN_LOGITS, tick=2, rid="a"),
+            ]
+        )
+        assert inj.step_events(0) == []  # off-tick attempts consume nothing
+        evs = inj.step_events(2)  # attempt 1: both fire
+        assert [e.kind for e in evs] == [
+            FaultKind.STEP_FAILURE,
+            FaultKind.NAN_LOGITS,
+        ]
+        evs = inj.step_events(2)  # attempt 2: only the repeats=2 failure
+        assert [e.kind for e in evs] == [FaultKind.STEP_FAILURE]
+        assert inj.step_events(2) == []  # spent
+        assert inj.fired == 3
+
+    def test_reset_replays(self):
+        inj = FaultInjector([FaultEvent(FaultKind.OOM, tick=1)])
+        assert len(inj.step_events(1)) == 1
+        fresh = inj.reset()
+        assert fresh.schedule == inj.schedule
+        assert len(fresh.step_events(1)) == 1
+
+    def test_chaos_schedule_deterministic(self):
+        kw = dict(
+            rate=0.5, rids=("a", "b"), p_poison=0.3, delay_s=0.01, max_repeats=3
+        )
+        s1 = chaos_schedule(42, 20, **kw)
+        s2 = chaos_schedule(42, 20, **kw)
+        assert s1 == s2
+        assert s1 != chaos_schedule(43, 20, **kw)
+        assert any(ev.kind is FaultKind.NAN_LOGITS for ev in s1)
+
+    def test_schedule_json_round_trip(self):
+        sched = chaos_schedule(3, 15, rate=0.4, rids=("x",), p_poison=0.2)
+        assert schedule_from_json(schedule_to_json(sched)) == sched
+
+    def test_retry_backoff_capped(self):
+        rp = RetryPolicy(max_retries=5, backoff_base_s=0.1, backoff_cap_s=0.3)
+        assert [rp.delay_s(a) for a in (1, 2, 3, 4)] == [
+            0.1,
+            0.2,
+            0.3,
+            0.3,
+        ]
+        assert RetryPolicy().delay_s(3) == 0.0  # default never sleeps
+
+
+# -- recoverable faults are bit-invisible ------------------------------------
+
+
+class TestRecovery:
+    def clean(self, model, reqs, engine_kw, **kw):
+        _, results = run_sched(model, reqs, engine_kw, **kw)
+        return results
+
+    def test_step_failure_bit_exact(self, model):
+        reqs = lambda: [  # noqa: E731
+            make_request(model, "a", 1, n=6, steps=8, plen=6),
+            make_request(model, "b", 2, n=4, steps=10, plen=9),
+        ]
+        ref = self.clean(model, reqs(), dict(max_seqs=10))
+        inj = FaultInjector(
+            [
+                FaultEvent(FaultKind.STEP_FAILURE, tick=2, repeats=2),
+                FaultEvent(FaultKind.STEP_FAILURE, tick=7),
+            ]
+        )
+        sched, results = run_sched(
+            model, reqs(), dict(max_seqs=10), faults=inj
+        )
+        for rid in ("a", "b"):
+            assert results[rid].status == "ok"
+            assert_bit_exact(results[rid], ref[rid])
+        assert sched.stats.faults == 3
+        assert sched.stats.retries == 3
+        assert sched.check_invariants() == []
+
+    def test_forced_oom_bit_exact_and_invariant_clean(self, model):
+        req = make_request(model, "a", 3, n=6, steps=8, plen=6)
+        ref = self.clean(
+            model, [make_request(model, "a", 3, n=6, steps=8, plen=6)],
+            dict(max_seqs=8),
+        )
+        inj = FaultInjector([FaultEvent(FaultKind.OOM, tick=3)])
+        sched, results = run_sched(
+            model, [req], dict(max_seqs=8), faults=inj, watchdog=True
+        )
+        assert_bit_exact(results["a"], ref["a"])
+        # The forced starvation set the sticky oom flag mid-attempt; the
+        # rollback must have restored the clean pool (flag included) or
+        # the result would report oom and the watchdog would have fired.
+        assert not bool(results["a"].oom)
+        assert sched.check_invariants() == []
+
+    def test_latency_spike_only_slows(self, model):
+        req = make_request(model, "a", 4, n=4, steps=6, plen=4)
+        ref = self.clean(
+            model, [make_request(model, "a", 4, n=4, steps=6, plen=4)],
+            dict(max_seqs=6),
+        )
+        log = SchedulerEventLog()
+        inj = FaultInjector(
+            [FaultEvent(FaultKind.LATENCY, tick=2, delay_s=0.05)]
+        )
+        sched, results = run_sched(
+            model, [req], dict(max_seqs=6), faults=inj, event_log=log
+        )
+        assert_bit_exact(results["a"], ref["a"])
+        assert sched.stats.retries == 0  # latency is not an error
+        assert max(log.step_wall_s) >= 0.05  # the spike is on the record
+
+    def test_retries_exhausted_surfaces_typed(self, model):
+        req = make_request(model, "a", 5, n=4, steps=6, plen=4)
+        inj = FaultInjector(
+            [FaultEvent(FaultKind.STEP_FAILURE, tick=1, repeats=5)]
+        )
+        eng = make_engine(model, max_seqs=6)
+        sched = Scheduler(
+            eng, faults=inj, retry_policy=RetryPolicy(max_retries=2)
+        )
+        sched.submit(req)
+        with pytest.raises(FaultRetriesExhausted) as exc:
+            sched.run()
+        assert exc.value.tick == 1
+        assert exc.value.attempts == 3  # 1 try + 2 retries
+        # State restored to the pre-tick snapshot: invariant-clean, the
+        # request still live and resumable.
+        assert sched.check_invariants() == []
+        assert [s.req.rid for s in sched._active] == ["a"]
+
+    def test_device_loss_raises_before_mutation(self, model):
+        req = make_request(model, "a", 6, n=4, steps=6, plen=4)
+        inj = FaultInjector([FaultEvent(FaultKind.DEVICE_LOSS, tick=2)])
+        eng = make_engine(model, max_seqs=6)
+        sched = Scheduler(eng, faults=inj)
+        sched.submit(req)
+        with pytest.raises(DeviceLost):
+            sched.run()
+        assert sched.check_invariants() == []
+
+
+# -- quarantine, cancel, deadline, shed --------------------------------------
+
+
+class TestTypedTerminations:
+    def test_nan_quarantine_isolates_one_request(self, model):
+        reqs = lambda: [  # noqa: E731
+            make_request(model, "a", 1, n=6, steps=8, plen=6),
+            make_request(model, "b", 2, n=4, steps=10, plen=9),
+        ]
+        ref = dict(run_sched(model, reqs(), dict(max_seqs=10))[1])
+        inj = FaultInjector(
+            [FaultEvent(FaultKind.NAN_LOGITS, tick=3, rid="a")]
+        )
+        sched, results = run_sched(
+            model, reqs(), dict(max_seqs=10), faults=inj, watchdog=True
+        )
+        assert results["a"].status == RequestStatus.POISONED.value
+        # The poisoned population kept its clean prefix (the tick's
+        # token was sampled from pre-poison logits), zero-padded beyond.
+        toks = np.asarray(results["a"].tokens)
+        np.testing.assert_array_equal(
+            toks[:, :4], np.asarray(ref["a"].tokens)[:, :4]
+        )
+        assert (toks[:, 4:] == 0).all()
+        # The co-resident request never noticed.
+        assert results["b"].status == "ok"
+        assert_bit_exact(results["b"], ref["b"])
+        assert sched.stats.poisoned == 1
+        assert sched.check_invariants() == []
+
+    def test_cancel_mid_flight(self, model):
+        reqs = lambda: [  # noqa: E731
+            make_request(model, "a", 1, n=6, steps=8, plen=6),
+            make_request(model, "b", 2, n=4, steps=10, plen=9),
+        ]
+        ref = run_sched(model, reqs(), dict(max_seqs=10))[1]
+        fired = []
+
+        def hook(sched):
+            if sched.tick >= 3 and not fired:
+                fired.append(True)
+                sched.cancel("a")
+
+        sched, results = run_sched(
+            model, reqs(), dict(max_seqs=10), hook=hook, watchdog=True
+        )
+        assert results["a"].status == RequestStatus.CANCELLED.value
+        assert results["b"].status == "ok"
+        assert_bit_exact(results["b"], ref["b"])
+        assert sched.stats.cancelled == 1
+        assert sched.slots.used == 0
+        with pytest.raises(KeyError):
+            sched.cancel("a")  # no longer live
+
+    def test_deadline_expires_active_request(self, model):
+        req = make_request(model, "a", 7, n=4, steps=20, plen=4, deadline=5)
+        sched, results = run_sched(model, [req], dict(max_seqs=6))
+        assert results["a"].status == RequestStatus.EXPIRED.value
+        toks = np.asarray(results["a"].tokens)
+        assert (toks[:, 5:] == 0).all()  # nothing decoded past the SLA
+        assert sched.stats.expired == 1
+
+    def test_deadline_unblocks_head_of_line(self, model):
+        # "long" holds 4 of 6 slots; "big" (4 slots) can't join while
+        # it runs and, as FIFO head, blocks "small" (2 slots) that
+        # *would* fit.  big's deadline expires it from the queue and
+        # small completes long before long does.
+        reqs = [
+            make_request(model, "long", 8, n=4, steps=14, plen=4),
+            make_request(
+                model, "big", 9, n=4, steps=8, plen=4, arrive_at=1, deadline=4
+            ),
+            make_request(model, "small", 10, n=2, steps=4, plen=4, arrive_at=1),
+        ]
+        sched, results = run_sched(model, reqs, dict(max_seqs=6))
+        assert results["big"].status == RequestStatus.EXPIRED.value
+        assert results["small"].status == "ok"
+        assert results["long"].status == "ok"
+        # small departed before long: the expired head stopped blocking.
+        assert sched.stats.expired == 1
+
+    def test_shed_policy_bounds_queue(self, model):
+        # Four burst arrivals onto a 4-slot engine: one runs, one may
+        # wait, the rest shed newest-first.
+        reqs = [
+            make_request(model, f"r{i}", 10 + i, n=4, steps=6, plen=4)
+            for i in range(4)
+        ]
+        sched, results = run_sched(
+            model,
+            reqs,
+            dict(max_seqs=4),
+            admission="shed",
+            queue_limit=1,
+        )
+        statuses = {rid: r.status for rid, r in results.items()}
+        assert statuses["r0"] == "ok"
+        assert statuses["r1"] == "ok"  # the one bounded waiter
+        assert statuses["r2"] == RequestStatus.SHED.value
+        assert statuses["r3"] == RequestStatus.SHED.value
+        assert sched.stats.shed == 2
+
+    def test_unknown_admission_policy_rejected(self, model):
+        with pytest.raises(ValueError, match="admission"):
+            Scheduler(make_engine(model, max_seqs=4), admission="lifo")
+
+
+# -- crash consistency: checkpoint / kill / restore --------------------------
+
+
+class TestCheckpointRestore:
+    def test_kill_and_restore_bit_exact(self, model, tmp_path):
+        reqs = lambda: [  # noqa: E731
+            make_request(model, "a", 1, n=6, steps=8, plen=6),
+            make_request(model, "b", 2, n=4, steps=10, plen=9),
+        ]
+        ref = run_sched(model, reqs(), dict(max_seqs=10))[1]
+
+        # Run until tick 4, checkpoint at that boundary, then "crash"
+        # (abandon the scheduler object entirely).
+        class Kill(Exception):
+            pass
+
+        saved = {}
+
+        def hook(sched):
+            if sched.tick == 4 and not saved:
+                saved["state"] = sched.checkpoint()
+                raise Kill
+
+        eng = make_engine(model, max_seqs=10)
+        sched = Scheduler(eng, on_boundary=hook)
+        for r in reqs():
+            sched.submit(r)
+        with pytest.raises(Kill):
+            sched.run()
+
+        # Through-disk round trip, then a fresh engine (fresh process
+        # stand-in: nothing shared but the params).
+        path = tmp_path / "sched.ckpt"
+        save_checkpoint(path, saved["state"])
+        state = load_checkpoint(path)
+        eng2 = make_engine(model, max_seqs=10)
+        sched2 = Scheduler.restore(eng2, state, watchdog=True)
+        results = sched2.run()
+        for rid in ("a", "b"):
+            assert results[rid].status == "ok"
+            assert_bit_exact(results[rid], ref[rid])
+        assert sched2.check_invariants() == []
+
+    def test_device_loss_then_restore_last_checkpoint(self, model):
+        reqs = lambda: [make_request(model, "a", 3, n=4, steps=8, plen=4)]  # noqa: E731
+        ref = run_sched(model, reqs(), dict(max_seqs=6))[1]
+        last = {}
+
+        def hook(sched):
+            last["state"] = sched.checkpoint()
+
+        inj = FaultInjector([FaultEvent(FaultKind.DEVICE_LOSS, tick=5)])
+        eng = make_engine(model, max_seqs=6)
+        sched = Scheduler(eng, on_boundary=hook, faults=inj)
+        for r in reqs():
+            sched.submit(r)
+        with pytest.raises(DeviceLost):
+            sched.run()
+        # The device is gone; a fresh engine restores the last boundary
+        # checkpoint and finishes bit-exactly.
+        eng2 = make_engine(model, max_seqs=6)
+        sched2 = Scheduler.restore(eng2, last["state"])
+        results = sched2.run()
+        assert_bit_exact(results["a"], ref["a"])
+
+    def test_restore_rejects_mismatched_engine(self, model):
+        eng = make_engine(model, max_seqs=6)
+        sched = Scheduler(eng)
+        state = sched.checkpoint()
+        with pytest.raises(ValueError, match="cache config"):
+            Scheduler.restore(make_engine(model, max_seqs=8), state)
+
+
+# -- the simulator mirrors chaos runs decision-exactly -----------------------
+
+
+def record_and_replay_chaos(model, reqs, engine_kw, schedule, **sched_kw):
+    eng = make_engine(model, **engine_kw)
+    log = SchedulerEventLog()
+    sched = Scheduler(
+        eng, event_log=log, faults=FaultInjector(schedule), **sched_kw
+    )
+    for r in reqs:
+        sched.submit(r)
+    sched.run()
+    res = simulate(
+        log.to_trace("chaos"),
+        eng.cache_cfg,
+        COST,
+        faults=FaultInjector(schedule),
+        **sched_kw,
+    )
+    return log, res, sched
+
+
+class TestChaosDifferential:
+    def check(self, log, res, sched):
+        div = first_divergence(log.decisions, res.decisions)
+        assert div is None, div
+        assert res.stats.as_dict() == sched.stats.as_dict()
+
+    def test_recoverable_chaos_replays(self, model):
+        reqs = [
+            make_request(model, "a", 1, n=6, steps=8, plen=6),
+            make_request(model, "b", 2, n=4, steps=10, plen=9, arrive_at=3),
+        ]
+        schedule = [
+            FaultEvent(FaultKind.STEP_FAILURE, tick=2, repeats=2),
+            FaultEvent(FaultKind.LATENCY, tick=4, delay_s=0.001),
+            FaultEvent(FaultKind.OOM, tick=6),
+        ]
+        log, res, sched = record_and_replay_chaos(
+            model, reqs, dict(max_seqs=10), schedule
+        )
+        self.check(log, res, sched)
+
+    def test_poison_and_deadline_chaos_replays(self, model):
+        reqs = [
+            make_request(model, "a", 3, n=6, steps=10, plen=6),
+            make_request(model, "b", 4, n=4, steps=12, plen=4, deadline=8),
+        ]
+        schedule = [FaultEvent(FaultKind.NAN_LOGITS, tick=5, rid="a")]
+        log, res, sched = record_and_replay_chaos(
+            model, reqs, dict(max_seqs=10), schedule
+        )
+        self.check(log, res, sched)
+        assert sched._results["a"].status == RequestStatus.POISONED.value
+        assert res.requests["a"]["status"] == RequestStatus.POISONED.value
+
+    @seeded_property(max_examples=5, fallback_seeds=3)
+    def test_seeded_chaos_replays(self, model, seed):
+        schedule = chaos_schedule(
+            seed,
+            12,
+            rate=0.3,
+            rids=("a", "b"),
+            p_poison=0.1,
+            max_repeats=2,
+        )
+        reqs = [
+            make_request(model, "a", seed, n=4, steps=8, plen=4),
+            make_request(model, "b", seed + 1, n=4, steps=6, plen=6, arrive_at=2),
+        ]
+        log, res, sched = record_and_replay_chaos(
+            model, reqs, dict(max_seqs=10), schedule
+        )
+        self.check(log, res, sched)
+
+
+class TestChaosCorpus:
+    """Committed chaos regressions: each corpus file pins a seeded
+    schedule (regenerated and byte-compared — the generator may not
+    drift) and must replay decision-exact real-vs-sim."""
+
+    def load(self):
+        files = sorted(glob.glob(os.path.join(CORPUS_DIR, "*.json")))
+        assert files, "chaos corpus is missing"
+        return [json.load(open(f)) for f in files]
+
+    def test_schedules_pinned(self):
+        for spec in self.load():
+            regen = chaos_schedule(
+                spec["seed"], spec["ticks"], **spec["schedule_kwargs"]
+            )
+            assert schedule_from_json(json.dumps(spec["schedule"])) == regen, (
+                f"corpus {spec['name']!r} drifted from its generator"
+            )
+
+    def test_corpus_replays_decision_exact(self, model):
+        for spec in self.load():
+            reqs = [make_request(model, **r) for r in spec["requests"]]
+            schedule = schedule_from_json(json.dumps(spec["schedule"]))
+            log, res, sched = record_and_replay_chaos(
+                model, reqs, spec["engine"], schedule, **spec.get("knobs", {})
+            )
+            div = first_divergence(log.decisions, res.decisions)
+            assert div is None, f"corpus {spec['name']!r}: {div}"
+            assert res.stats.as_dict() == sched.stats.as_dict()
+            for rid, r in res.requests.items():
+                assert sched._results[rid].status == r["status"]
+
+
+# -- property tests: lifecycle interleavings keep the invariants -------------
+
+
+class TestLifecycleProperties:
+    @seeded_property(max_examples=8, fallback_seeds=4)
+    def test_interleaved_ops_keep_invariants(self, model, seed):
+        """Random interleavings of preempt / cancel / grow-pressure at
+        every boundary, with the watchdog on: the run must end with all
+        requests typed and the conservation laws intact (the watchdog
+        itself raises on the first corrupted boundary)."""
+        rng = np.random.default_rng(seed)
+        reqs = [
+            make_request(
+                model,
+                f"r{i}",
+                int(rng.integers(1, 1000)),
+                n=int(rng.integers(2, 6)),
+                steps=int(rng.integers(4, 9)),
+                plen=int(rng.integers(3, 7)),
+                arrive_at=int(rng.integers(0, 4)),
+                deadline=(
+                    None if rng.random() < 0.6 else int(rng.integers(3, 12))
+                ),
+            )
+            for i in range(3)
+        ]
+
+        def hook(sched):
+            if not sched._active:
+                return
+            r = rng.random()
+            victim = sched._active[int(rng.integers(len(sched._active)))]
+            if r < 0.15 and len(sched._active) > 1:
+                sched.preempt(victim.req.rid)
+            elif r < 0.25:
+                sched.cancel(victim.req.rid)
+
+        sched, results = run_sched(
+            model,
+            reqs,
+            dict(max_seqs=10),
+            hook=hook,
+            watchdog=True,
+        )
+        assert sched.check_invariants() == []
+        assert set(results) == {r.rid for r in reqs}
+        for res in results.values():
+            assert res.status in {s.value for s in RequestStatus}
+        assert sched.slots.used == 0

@@ -107,6 +107,22 @@ class TestSlotTable:
         t.free(0, 4)
         assert t.alloc(4) == 0
 
+    def test_double_free_raises(self):
+        t = SlotTable(10)
+        t.alloc(4)
+        t.free(0, 4)
+        with pytest.raises(ValueError, match="double free"):
+            t.free(0, 4)
+
+    def test_overlapping_free_raises(self):
+        t = SlotTable(10)
+        t.alloc(4)
+        with pytest.raises(ValueError, match="no such allocated range"):
+            t.free(0, 2)  # partial range
+        with pytest.raises(ValueError, match="no such allocated range"):
+            t.free(2, 4)  # straddles the allocation
+        t.free(0, 4)  # the exact range is still fine
+
 
 class TestConcurrency:
     def test_two_concurrent_bit_exact_with_sequential(self, model):

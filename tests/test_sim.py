@@ -468,4 +468,6 @@ class TestSimEdges:
         )
         with pytest.raises(AdmissionRefused, match="big"):
             sched.run()
-        assert ("refused", "big", 0) in sched.decisions
+        # Enriched refusal: which resource fell short and by how much
+        # (demand 10 blocks vs 6 free -> shortfall 4).
+        assert ("refused", "big", 0, "blocks", 4) in sched.decisions

@@ -92,6 +92,32 @@ class TestRoundTrip:
         back = traces_lib.from_json(traces_lib.to_json(t))
         assert back == t and back.requests[0].forks is None
 
+    def test_json_roundtrip_with_deadlines(self):
+        import dataclasses
+
+        t = traces_lib.staggered(3, 2, n_particles=4, steps=6, plen=5, seed=2)
+        reqs = tuple(
+            dataclasses.replace(r, deadline=None if i == 0 else 5 + i)
+            for i, r in enumerate(t.requests)
+        )
+        t = traces_lib.Trace(name=t.name, requests=reqs, seed=t.seed)
+        back = traces_lib.from_json(traces_lib.to_json(t))
+        assert back == t
+        assert [r.deadline for r in back.requests] == [None, 6, 7]
+
+    def test_json_backward_compat_no_deadline_key(self):
+        # Traces recorded before the fault-model PR have no deadline
+        # field; they must load with deadline=None.
+        import json
+
+        t = traces_lib.staggered(2, 1, n_particles=4, steps=6, plen=5, seed=3)
+        payload = json.loads(traces_lib.to_json(t))
+        for r in payload["requests"]:
+            del r["deadline"]
+        back = traces_lib.from_json(json.dumps(payload))
+        assert all(r.deadline is None for r in back.requests)
+        assert back == t
+
 
 _CHILD = """
 import sys
