@@ -93,7 +93,7 @@ def sweep(model_cfg, traces, *, max_seqs, max_len, sla_x, space):
     cost_cache: dict = {}
     rows = []
     for combo in itertools.product(*space.values()):
-        knobs = dict(zip(space.keys(), combo))
+        knobs = dict(zip(space.keys(), combo, strict=True))
         block_size = knobs.pop("block_size")
         tps, attain, peaks = [], [], []
         feasible = True

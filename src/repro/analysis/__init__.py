@@ -1,0 +1,28 @@
+"""repro-lint: static contract analysis for the COW/JAX platform.
+
+The platform's correctness rests on API contracts the runtime cannot
+express in types (DESIGN.md §11): pool state is threaded functionally,
+remaps must be applied after ``compact``, block ids never flow into
+value math, donated buffers die at the call, ``jax.jit`` is constructed
+once, and reads after allocation consult the ``oom`` flag.  This package
+checks those contracts at lint time with a stdlib-``ast`` dataflow
+analyzer — no runtime dependencies, no imports of the analyzed code.
+
+Entry points: :func:`repro.analysis.engine.lint_paths` (library) and
+``scripts/repro_lint.py`` (CLI, wired into the CI ``static-analysis``
+job).  Suppress a finding inline with ``# repro-lint: disable=<rule>``
+plus a one-line justification.
+"""
+
+from repro.analysis.engine import FileContext, lint_file, lint_paths, lint_source
+from repro.analysis.findings import Finding
+from repro.analysis.rules import ALL_RULES
+
+__all__ = [
+    "ALL_RULES",
+    "FileContext",
+    "Finding",
+    "lint_file",
+    "lint_paths",
+    "lint_source",
+]

@@ -1,0 +1,161 @@
+"""The contract surface: which calls thread state, allocate, read, remap.
+
+One table per platform layer, keyed by the call's *terminal* name and
+disambiguated by its *qualifier* (the dotted segment before the
+terminal), following the repo's import idiom:
+
+    from repro.core import pool as pool_lib      # pool_lib.alloc(...)
+    from repro.core import store as store_lib    # store_lib.clone(cfg, st, a)
+    from repro.serving import kv_cache as kvc    # kvc.fork(cache, anc)
+
+The mapped value is the positional index of the *threaded state*
+argument (the pool / store / cache that the call consumes and returns a
+successor of).  Bare-name calls (``from ... import alloc``) match only
+when the terminal is unambiguous across layers.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Optional, Set, Tuple
+
+from repro.analysis.dataflow import split_call
+
+#: qualifier aliases per layer
+POOL_QUALS: Set[str] = {"pool", "pool_lib", "blockpool"}
+STORE_QUALS: Set[str] = {"store", "store_lib"}
+KV_QUALS: Set[str] = {"kv", "kvc", "kv_cache"}
+
+#: terminal -> index of the threaded-state argument
+POOL_APIS: Dict[str, int] = {
+    "alloc": 0,
+    "alloc_scan": 0,
+    "alloc_compact": 0,
+    "add_refs": 0,
+    "sub_refs": 0,
+    "freeze": 0,
+    "write_blocks": 0,
+    "grow": 0,
+    "compact": 0,
+    "rebuild_free_stack": 0,
+    "push_free_mask": 0,
+}
+STORE_APIS: Dict[str, int] = {
+    "append": 1,
+    "write_at": 1,
+    "clone": 1,
+    "clone_partial": 1,
+    "import_trajectories": 1,
+    "grow": 1,
+    "compact": 1,
+}
+KV_APIS: Dict[str, int] = {
+    "fork": 0,
+    "advance": 0,
+    "free": 0,
+    "grow": 0,
+    "compact": 0,
+    "ensure_writable": 1,
+    "write_kv": 1,
+}
+
+#: bare-name fallback: terminals whose state position is the same in
+#: every layer that defines them (grow/compact are ambiguous -> absent)
+BARE_APIS: Dict[str, int] = {
+    "alloc": 0,
+    "alloc_scan": 0,
+    "alloc_compact": 0,
+    "add_refs": 0,
+    "sub_refs": 0,
+    "freeze": 0,
+    "write_blocks": 0,
+    "push_free_mask": 0,
+    "rebuild_free_stack": 0,
+    "append": 1,
+    "write_at": 1,
+    "clone": 1,
+    "clone_partial": 1,
+    "import_trajectories": 1,
+    "fork": 0,
+    "ensure_writable": 1,
+}
+
+#: calls that can exhaust the pool (the oom-flag producers)
+ALLOC_APIS: Set[str] = {
+    "alloc",
+    "alloc_scan",
+    "alloc_compact",
+    "append",
+    "write_at",
+    "import_trajectories",
+    "ensure_writable",
+}
+#: calls that read payload out of the pool (corrupt once oom is sticky)
+READ_APIS: Set[str] = {
+    "trajectory",
+    "materialize",
+    "materialize_batch",
+    "read_at",
+    "read_last",
+    "read_blocks",
+}
+#: any reference to these counts as consulting the exhaustion signal
+OOM_SIGNALS: Set[str] = {
+    "oom",
+    "oom_flag",
+    "strict_oom",
+    "free_blocks",
+    "blocks_free",
+    "check_invariants",
+    "ensure",
+}
+
+#: compact returns (state, remap) at these layers; grow preserves ids
+REMAP_RETURNING: Set[str] = {"compact"}
+
+
+def threading_api(call: ast.Call) -> Optional[Tuple[str, int]]:
+    """``(terminal, state_arg_index)`` when ``call`` is a recognized
+    state-threading API of any layer, else ``None``."""
+    qual, term = split_call(call)
+    if qual in POOL_QUALS and term in POOL_APIS:
+        return term, POOL_APIS[term]
+    if qual in STORE_QUALS and term in STORE_APIS:
+        return term, STORE_APIS[term]
+    if qual in KV_QUALS and term in KV_APIS:
+        return term, KV_APIS[term]
+    if not qual and term in BARE_APIS:
+        return term, BARE_APIS[term]
+    return None
+
+
+def state_arg_name(call: ast.Call) -> Optional[str]:
+    """Plain-``Name`` threaded-state argument of a threading call."""
+    hit = threading_api(call)
+    if hit is None:
+        return None
+    _, idx = hit
+    if idx < len(call.args) and isinstance(call.args[idx], ast.Name):
+        return call.args[idx].id
+    return None
+
+
+def is_pool_compact(call: ast.Call) -> bool:
+    """A ``compact`` whose caller receives ``(pool, remap)`` — the
+    pool-layer form (store/kv compact apply the remap internally)."""
+    qual, term = split_call(call)
+    return term == "compact" and qual in POOL_QUALS
+
+
+def is_any_compact(call: ast.Call) -> bool:
+    qual, term = split_call(call)
+    return term == "compact" and (
+        qual in POOL_QUALS | STORE_QUALS | KV_QUALS or not qual
+    )
+
+
+def is_any_grow(call: ast.Call) -> bool:
+    qual, term = split_call(call)
+    return term == "grow" and (
+        qual in POOL_QUALS | STORE_QUALS | KV_QUALS or not qual
+    )

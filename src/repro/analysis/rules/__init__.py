@@ -1,0 +1,22 @@
+"""Rule registry: one module per contract, all instantiated here."""
+
+from repro.analysis.rules.base import Rule
+from repro.analysis.rules.id_into_values import IdIntoValues
+from repro.analysis.rules.jit_in_hot_path import JitInHotPath
+from repro.analysis.rules.stale_remap import StaleRemap
+from repro.analysis.rules.unchecked_oom import UncheckedOom
+from repro.analysis.rules.unthreaded_pool import UnthreadedPool
+from repro.analysis.rules.use_after_donate import UseAfterDonate
+
+ALL_RULES = (
+    UnthreadedPool(),
+    StaleRemap(),
+    IdIntoValues(),
+    UseAfterDonate(),
+    JitInHotPath(),
+    UncheckedOom(),
+)
+
+RULES_BY_NAME = {r.name: r for r in ALL_RULES}
+
+__all__ = ["ALL_RULES", "RULES_BY_NAME", "Rule"]

@@ -1,0 +1,208 @@
+"""jit-in-hot-path: compile once, call many — never rebuild the jit.
+
+``jax.jit`` / ``pl.pallas_call`` return *fresh* callables with *fresh*
+trace caches: constructing one per call recompiles every time.  This is
+the PR 4 regression class — ``jax.jit(self._csmc)`` inside ``run()``
+turned a microsecond dispatch into a multi-second trace on every
+invocation, and nothing crashed; the only symptom was the wall clock.
+
+Flagged shapes:
+
+* construction inside any loop body;
+* immediate invocation ``jax.jit(f)(*args)`` anywhere below module
+  level (the callable is born and discarded in one expression);
+* construction in a plain function/method body whose result is bound to
+  a local and invoked in the same scope.
+
+Exempt shapes (the repo's sanctioned caching idioms, all observed in
+``src/``): module-level construction; ``__init__`` (one per object);
+enclosing function decorated with ``functools.lru_cache`` / ``cache`` /
+``jax.jit`` / ``partial(jax.jit, ...)`` (memoized factories and nested
+jit); assignment onto ``self``-attributes or ``self``-subscripts (an
+instance cache); a bare ``return jax.jit(...)`` (an explicit builder the
+caller is expected to cache); and ``.lower()`` / ``.trace()`` /
+AOT-style pipelines, which compile deliberately.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional
+
+from repro.analysis.dataflow import (
+    ancestors,
+    attach_parents,
+    dotted,
+    split_call,
+)
+from repro.analysis.findings import Finding
+from repro.analysis.rules.base import Rule
+
+_BUILDER_TERMS = {"jit", "pallas_call"}
+_CACHING_DECORATORS = {"lru_cache", "cache", "jit"}
+_AOT_METHODS = {"lower", "trace", "eval_shape"}
+_LOOPS = (ast.For, ast.AsyncFor, ast.While)
+_FUNCS = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def _is_builder(call: ast.Call) -> bool:
+    qual, term = split_call(call)
+    if term not in _BUILDER_TERMS:
+        return False
+    # plain `jit(...)` only counts when imported bare; `self.jit(...)`
+    # or other odd qualifiers are out of scope
+    return qual in {"", "jax", "pl", "pallas", "plgpu", "pltpu"}
+
+
+def _decorator_exempts(dec: ast.expr) -> bool:
+    """lru_cache / cache / jit / partial(jit, ...) decorations memoize or
+    re-trace deliberately — construction under them runs once per key."""
+    if isinstance(dec, ast.Call):
+        name = dotted(dec.func)
+        if name.rsplit(".", 1)[-1] == "partial":
+            return any(
+                dotted(a).rsplit(".", 1)[-1] in _CACHING_DECORATORS
+                for a in dec.args
+            )
+        dec_name = name
+    else:
+        dec_name = dotted(dec)
+    return dec_name.rsplit(".", 1)[-1] in _CACHING_DECORATORS
+
+
+class JitInHotPath(Rule):
+    name = "jit-in-hot-path"
+    description = (
+        "jax.jit / pallas_call constructed per call (in a loop or hot "
+        "method body) instead of once"
+    )
+
+    def check(self, tree: ast.Module, ctx) -> Iterator[Finding]:
+        parents = attach_parents(tree)
+
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call) or not _is_builder(node):
+                continue
+            chain = list(ancestors(node, parents))
+
+            # deliberate AOT pipeline: jax.jit(f).lower(...) etc.
+            parent = parents.get(node)
+            if (
+                isinstance(parent, ast.Attribute)
+                and parent.attr in _AOT_METHODS
+            ):
+                continue
+
+            enclosing: Optional[ast.AST] = next(
+                (a for a in chain if isinstance(a, _FUNCS)), None
+            )
+            in_loop = any(
+                isinstance(a, _LOOPS)
+                and (enclosing is None or a in set(_below(chain, enclosing)))
+                for a in chain
+            )
+
+            if enclosing is None:
+                if in_loop:
+                    yield self.finding(
+                        ctx,
+                        node,
+                        f"{split_call(node)[1]} constructed inside a "
+                        "module-level loop: each iteration recompiles — "
+                        "hoist the construction out of the loop",
+                    )
+                continue  # module level (outside loops) is the idiom
+
+            if enclosing.name == "__init__":
+                if in_loop:
+                    yield self.finding(
+                        ctx,
+                        node,
+                        f"{split_call(node)[1]} constructed in a loop "
+                        "inside __init__: one compile cache per "
+                        "iteration — build once and reuse",
+                    )
+                continue
+            if any(_decorator_exempts(d) for d in enclosing.decorator_list):
+                continue
+
+            stmt = next(
+                (a for a in [node] + chain if isinstance(a, ast.stmt)), None
+            )
+            if in_loop:
+                yield self.finding(
+                    ctx,
+                    node,
+                    f"{split_call(node)[1]} constructed inside a loop: "
+                    "every iteration makes a fresh callable with a fresh "
+                    "trace cache (recompiles each time) — hoist it",
+                )
+                continue
+
+            # immediate invocation: jax.jit(f)(args)
+            if isinstance(parent, ast.Call) and parent.func is node:
+                yield self.finding(
+                    ctx,
+                    node,
+                    f"{split_call(node)[1]}(...)(...) builds and invokes "
+                    "a fresh callable in one expression: the compile "
+                    "cache is discarded immediately — cache the jitted "
+                    "function (module level, __init__, or lru_cache)",
+                )
+                continue
+
+            if isinstance(stmt, ast.Return):
+                continue  # explicit builder: caller caches
+            if isinstance(stmt, ast.Assign):
+                if all(_is_instance_cache(t) for t in stmt.targets):
+                    continue  # self._fn = jax.jit(...) / self._cache[k] = ...
+                local = _sole_name_target(stmt)
+                if local is not None and _invoked_later(
+                    enclosing, stmt, local
+                ):
+                    yield self.finding(
+                        ctx,
+                        node,
+                        f"{split_call(node)[1]} result bound to local "
+                        f"{local!r} and invoked in the same call of "
+                        f"{enclosing.name!r}: recompiles on every call — "
+                        "cache it (module level, __init__, or lru_cache)",
+                    )
+
+
+def _below(chain: List[ast.AST], stop: ast.AST) -> Iterator[ast.AST]:
+    """Ancestors strictly below ``stop`` (closer to the node)."""
+    for a in chain:
+        if a is stop:
+            return
+        yield a
+
+
+def _is_instance_cache(target: ast.expr) -> bool:
+    """``self.x = ...`` or ``self._cache[k] = ...`` (also chained
+    ``fn = self._cache[k] = ...`` is handled per-target)."""
+    base = target
+    while isinstance(base, (ast.Attribute, ast.Subscript)):
+        base = base.value
+    return isinstance(base, ast.Name) and base.id in {"self", "cls"}
+
+
+def _sole_name_target(stmt: ast.Assign) -> Optional[str]:
+    """The local name when *some* target is a plain name and *no* target
+    is an instance cache (chained self-cache assignment exempts)."""
+    if any(_is_instance_cache(t) for t in stmt.targets):
+        return None
+    for t in stmt.targets:
+        if isinstance(t, ast.Name):
+            return t.id
+    return None
+
+
+def _invoked_later(func: ast.AST, after: ast.stmt, name: str) -> bool:
+    return any(
+        isinstance(n, ast.Call)
+        and isinstance(n.func, ast.Name)
+        and n.func.id == name
+        and n.lineno > after.lineno
+        for n in ast.walk(func)
+    )

@@ -1,0 +1,161 @@
+"""use-after-donate: a donated buffer is dead after the call that eats it.
+
+``jax.jit(..., donate_argnums=...)`` and Pallas ``input_output_aliases``
+let XLA reuse an input buffer for the output — the launch layer leans on
+this for in-place pool updates.  After the call, the donated argument's
+buffer is *deleted*: touching it raises on GPU but can silently read
+garbage under some backends/interpret modes, which is exactly the class
+of bug that passes tests on CPU and corrupts trajectories on device.
+
+The rule tracks bindings created from ``jax.jit``/``pl.pallas_call``
+with a *literal* ``donate_argnums`` / ``input_output_aliases`` (computed
+donation specs are invisible to static analysis and stay unflagged),
+kills the names passed at the donated positions when the jitted function
+is invoked, and flags any later read of a killed name.  Rebinding
+resurrects the name.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.dataflow import (
+    State,
+    bound_names,
+    calls_in,
+    reads_in,
+    run_flow,
+    scopes,
+    split_call,
+)
+from repro.analysis.findings import Finding
+from repro.analysis.rules.base import Rule
+
+_JIT_TERMS = {"jit"}
+_PALLAS_TERMS = {"pallas_call"}
+
+
+def _literal_donated_positions(call: ast.Call) -> Optional[Set[int]]:
+    """Donated positional indices when the spec is a literal, else None."""
+    _, term = split_call(call)
+    if term in _JIT_TERMS:
+        key = "donate_argnums"
+    elif term in _PALLAS_TERMS:
+        key = "input_output_aliases"
+    else:
+        return None
+    for kw in call.keywords:
+        if kw.arg != key:
+            continue
+        value = kw.value
+        if term in _PALLAS_TERMS:
+            # {input_index: output_index} dict literal -> donated inputs
+            if isinstance(value, ast.Dict):
+                out: Set[int] = set()
+                for k in value.keys:
+                    if isinstance(k, ast.Constant) and isinstance(k.value, int):
+                        out.add(k.value)
+                    else:
+                        return None
+                return out
+            return None
+        if isinstance(value, ast.Constant) and isinstance(value.value, int):
+            return {value.value}
+        if isinstance(value, (ast.Tuple, ast.List)):
+            out = set()
+            for e in value.elts:
+                if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                    out.add(e.value)
+                else:
+                    return None
+            return out
+        return None
+    return None
+
+
+class UseAfterDonate(Rule):
+    name = "use-after-donate"
+    description = (
+        "argument donated via donate_argnums/input_output_aliases read "
+        "after the call that consumed its buffer"
+    )
+
+    def check(self, tree: ast.Module, ctx) -> Iterator[Finding]:
+        found: List[Finding] = []
+
+        for scope in scopes(tree):
+
+            def visit(stmt: ast.stmt, state: State) -> None:
+                jitted: Dict[str, Set[int]] = state["jitted"]
+                dead: Dict[str, Tuple[int, str]] = state["dead"]
+
+                # reads of dead names first (the statement runs against
+                # the pre-statement state)
+                for n in reads_in(stmt):
+                    if n.id in dead:
+                        line, fn = dead[n.id]
+                        found.append(
+                            self.finding(
+                                ctx,
+                                n,
+                                f"{n.id!r} was donated to {fn!r} at line "
+                                f"{line}: its buffer is deleted after the "
+                                "call — use the returned output (or drop "
+                                "the donation)",
+                            )
+                        )
+                        dead.pop(n.id, None)  # report once per name
+
+                for call in calls_in(stmt):
+                    # direct form: jax.jit(f, donate_argnums=...)(args)
+                    if isinstance(call.func, ast.Call):
+                        positions = _literal_donated_positions(call.func)
+                        if positions:
+                            _kill(call, positions, dead, split_call(call.func)[1])
+                        continue
+                    callee = call.func.id if isinstance(call.func, ast.Name) else None
+                    if callee in jitted:
+                        _kill(call, jitted[callee], dead, callee)
+
+                # record jitted-with-donation bindings; any rebinding
+                # resurrects donated names and clears jit records
+                targets = bound_names(stmt)
+                for t in targets:
+                    dead.pop(t, None)
+                    jitted.pop(t, None)
+                if (
+                    isinstance(stmt, ast.Assign)
+                    and len(stmt.targets) == 1
+                    and isinstance(stmt.targets[0], ast.Name)
+                    and isinstance(stmt.value, ast.Call)
+                ):
+                    positions = _literal_donated_positions(stmt.value)
+                    if positions:
+                        jitted[stmt.targets[0].id] = positions
+
+            def _kill(
+                call: ast.Call,
+                positions: Set[int],
+                dead: Dict[str, Tuple[int, str]],
+                fn: str,
+            ) -> None:
+                for i in positions:
+                    if i < len(call.args) and isinstance(call.args[i], ast.Name):
+                        dead[call.args[i].id] = (call.lineno, fn)
+
+            def copy(state: State) -> State:
+                return {
+                    "jitted": {k: set(v) for k, v in state["jitted"].items()},
+                    "dead": dict(state["dead"]),
+                }
+
+            def merge(states: List[State]) -> State:
+                out: State = {"jitted": {}, "dead": {}}
+                for s in states:
+                    out["jitted"].update(s["jitted"])
+                    out["dead"].update(s["dead"])
+                return out
+
+            run_flow(scope.body, {"jitted": {}, "dead": {}}, visit, copy, merge)
+        yield from found

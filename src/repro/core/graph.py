@@ -80,7 +80,7 @@ in :mod:`repro.core.pool` / :mod:`repro.core.store`.
 from __future__ import annotations
 
 import itertools
-from typing import Any, Dict, Iterator, List, Optional, Tuple
+from typing import Any, ContextManager, Dict, Iterator, List, Optional, Tuple
 
 from repro.core.config import CopyMode
 
@@ -118,7 +118,7 @@ class Label:
 
     __slots__ = ("id", "memo", "parent_id")
 
-    def __init__(self, parent: Optional["Label"] = None):
+    def __init__(self, parent: Optional["Label"] = None) -> None:
         self.id: int = next(_label_ids)
         self.parent_id: Optional[int] = parent.id if parent is not None else None
         self.memo: Dict[int, Tuple["Vertex", "Vertex"]] = {}
@@ -147,7 +147,7 @@ class Vertex:
         "alive",
     )
 
-    def __init__(self, label: Label):
+    def __init__(self, label: Label) -> None:
         self.id: int = next(_vertex_ids)
         self.label: Label = label  # f(v)
         self.payload: Dict[str, Any] = {}
@@ -184,7 +184,7 @@ class Slot:
 
     __slots__ = ("target", "label")
 
-    def __init__(self, target: Optional[Vertex], label: Label):
+    def __init__(self, target: Optional[Vertex], label: Label) -> None:
         self.target = target  # t(e)
         self.label = label  # h(e)
 
@@ -228,7 +228,7 @@ class RuntimeStats:
 class Runtime:
     """The lazy-copy runtime: context stack, operations, and GC accounting."""
 
-    def __init__(self, mode: CopyMode = CopyMode.LAZY_SR):
+    def __init__(self, mode: CopyMode = CopyMode.LAZY_SR) -> None:
         self.mode = mode
         self.root_label = Label()
         # Definition 4: per-thread context stack, initialized with the
@@ -406,7 +406,7 @@ class Runtime:
         finally:
             self._pop_context()
 
-    def method(self, slot: Slot):
+    def method(self, slot: Slot) -> ContextManager[Vertex]:
         """Context manager emulating a member-function call on ``slot``.
 
         Inside the block the current context is ``f(v)`` so that freshly

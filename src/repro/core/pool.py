@@ -64,7 +64,7 @@ lives on another shard ever move between pools.
 
 from __future__ import annotations
 
-from typing import NamedTuple, Sequence, Tuple
+from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -90,6 +90,7 @@ __all__ = [
     "rebuild_free_stack",
     "free_stack_consistent",
     "refcount_matches_tables",
+    "check_invariants",
     "NULL_BLOCK",
 ]
 
@@ -563,3 +564,26 @@ def refcount_matches_tables(pool: BlockPool, tables: jax.Array) -> jax.Array:
     sids = _scatter_ids(nb, tables.reshape(-1).astype(jnp.int32))
     counts = jnp.zeros((nb,), jnp.int32).at[sids].add(1, mode="drop")
     return jnp.all(counts == pool.refcount)
+
+
+def check_invariants(
+    pool: BlockPool, tables: Optional[jax.Array] = None
+) -> List[str]:
+    """Run every conservation law over one pool; return the violations.
+
+    The host-side face of the verify path: wraps the jittable predicates
+    (:func:`free_stack_consistent` and :func:`refcount_matches_tables`)
+    behind one call returning human-readable violation messages — empty
+    means clean.  ``tables`` is the optional reference-holder array
+    (block tables / trajectory tables); without it only the
+    table-independent laws run.  The sticky OOM flag is *not* a
+    violation — exhaustion is a legitimate state with its own handling
+    path (DESIGN.md §4).  The serving watchdog and the lifecycle tests
+    both gate on this.
+    """
+    problems: List[str] = []
+    if not bool(free_stack_consistent(pool)):
+        problems.append("free stack disagrees with the refcount mask")
+    if tables is not None and not bool(refcount_matches_tables(pool, tables)):
+        problems.append("refcount/table reference conservation violated")
+    return problems

@@ -111,7 +111,7 @@ def spec_for(
     """PartitionSpec for one parameter, with divisibility fallback."""
     used: set = set()
     parts: List[Any] = []
-    for dim, name in zip(shape, logical):
+    for dim, name in zip(shape, logical, strict=True):
         axes = rules.lookup(name)
         axes = tuple(a for a in axes if a not in used)
         if axes and dim % _axis_size(mesh, axes) == 0:
@@ -138,7 +138,7 @@ def shardings_for(
     flat_p, treedef = jax.tree.flatten(params)
     flat_a = treedef.flatten_up_to(axes_tree)
     out = []
-    for p, a in zip(flat_p, flat_a):
+    for p, a in zip(flat_p, flat_a, strict=True):
         spec = spec_for(mesh, rules, p.shape, a, fallbacks=report)
         out.append(NamedSharding(mesh, spec))
     return treedef.unflatten(out)

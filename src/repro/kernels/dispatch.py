@@ -9,17 +9,36 @@ between the COW kernel packages.
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 
+#: backends the dispatch policy knows how to route
+KNOWN_BACKENDS = ("tpu", "gpu", "cpu")
+
 
 def resolve_kernel_mode(
-    use_kernel: bool | None, interpret: bool
+    use_kernel: bool | None,
+    interpret: bool,
+    backend: Optional[str] = None,
 ) -> Tuple[bool, bool]:
-    """Returns the resolved ``(use_kernel, interpret)`` pair."""
+    """Returns the resolved ``(use_kernel, interpret)`` pair.
+
+    ``backend`` overrides ``jax.default_backend()`` — primarily for
+    tests, which must exercise the TPU/GPU/CPU arms of the policy from
+    a CPU host.  An unrecognized backend raises rather than silently
+    routing to the oracle, so a typo'd ``JAX_PLATFORMS`` (or a future
+    plugin backend the policy has never been audited against) fails
+    loudly at dispatch time.
+    """
+    if backend is None:
+        backend = jax.default_backend()
+    if backend not in KNOWN_BACKENDS:
+        raise ValueError(
+            f"unknown backend {backend!r}; expected one of {KNOWN_BACKENDS}"
+        )
     if use_kernel is None:
-        use_kernel = jax.default_backend() == "tpu" or interpret
-    if use_kernel and jax.default_backend() != "tpu":
+        use_kernel = backend == "tpu" or interpret
+    if use_kernel and backend != "tpu":
         interpret = True
     return use_kernel, interpret

@@ -136,7 +136,7 @@ def _estimate_arg_bytes(args, shardings, mesh) -> int:
     flat_sh = jax.tree.leaves(
         shardings, is_leaf=lambda x: isinstance(x, jax.sharding.NamedSharding)
     )
-    for a, s in zip(flat_args, flat_sh):
+    for a, s in zip(flat_args, flat_sh, strict=False):
         if not hasattr(a, "shape"):
             continue
         size = int(np.prod(a.shape)) * a.dtype.itemsize if a.shape else a.dtype.itemsize

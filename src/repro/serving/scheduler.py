@@ -664,20 +664,16 @@ class Scheduler:
         """Verify the bookkeeping conservation laws over every pool the
         scheduler owns; returns the violated ones (empty = clean).
 
-        * KV pool free-stack/refcount agreement
-          (:func:`repro.core.pool.free_stack_consistent`),
-        * KV refcount == block-table reference histogram
-          (:func:`repro.core.pool.refcount_matches_tables`),
+        * KV pool conservation laws
+          (:func:`repro.core.pool.check_invariants`),
         * slot-table conservation (allocated slots == active particles),
-        * the same two pool checks for every active request's token
-          trace store.
+        * the same pool checks for every active request's token trace
+          store.
         """
         problems: List[str] = []
         cache = self.engine.cache
-        if not bool(pool_lib.free_stack_consistent(cache.pool)):
-            problems.append("kv pool free stack inconsistent")
-        if not bool(pool_lib.refcount_matches_tables(cache.pool, cache.tables)):
-            problems.append("kv pool refcount/table conservation violated")
+        for p in pool_lib.check_invariants(cache.pool, cache.tables):
+            problems.append(f"kv pool: {p}")
         held = sum(s.n for s in self._active)
         if self.slots.used != held:
             problems.append(
@@ -692,15 +688,8 @@ class Scheduler:
             ):
                 continue
             st = s.trace.store
-            if not bool(pool_lib.free_stack_consistent(st.pool)):
-                problems.append(
-                    f"trace pool free stack inconsistent ({s.req.rid!r})"
-                )
-            if not bool(pool_lib.refcount_matches_tables(st.pool, st.tables)):
-                problems.append(
-                    f"trace refcount/table conservation violated "
-                    f"({s.req.rid!r})"
-                )
+            for p in pool_lib.check_invariants(st.pool, st.tables):
+                problems.append(f"trace pool ({s.req.rid!r}): {p}")
         return problems
 
     def _run_watchdog(self) -> None:

@@ -466,7 +466,8 @@ class SimScheduler:
         raise KeyError(f"request {rid!r} is not live")
 
     def compact(self, new_num_blocks: Optional[int] = None) -> None:
-        self.pool.compact(new_num_blocks)
+        # SimPool is the mutable cost model, not the functional pool API.
+        self.pool.compact(new_num_blocks)  # repro-lint: disable=unthreaded-pool
         self.time += self.cost.compact_s_per_block * self.pool.used
         self.stats.compactions += 1
         self.decisions.append(("compact", self.tick, self.pool.num_blocks))
@@ -486,7 +487,8 @@ class SimScheduler:
         if free >= need:
             return
         new = pool_lib.next_capacity(nb, need - free, self.cap, self.grow_factor)
-        self.pool.grow(new)
+        # SimPool is the mutable cost model, not the functional pool API.
+        self.pool.grow(new)  # repro-lint: disable=unthreaded-pool
         self.time += self.cost.grow_s_per_block * nb
         self.decisions.append(("grow", self.tick, new))
         self.grow_events += 1
@@ -840,7 +842,7 @@ def first_divergence(
 ) -> Optional[str]:
     """First index where two decision sequences disagree (None when
     decision-exact) — the differential test's error message."""
-    for i, (a, b) in enumerate(zip(real, sim)):
+    for i, (a, b) in enumerate(zip(real, sim, strict=False)):
         if tuple(a) != tuple(b):
             return f"event {i}: real={a!r} sim={b!r}"
     if len(real) != len(sim):

@@ -30,9 +30,12 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.serving.scheduler import DecodeRequest
 
 __all__ = [
     "Trace",
@@ -246,7 +249,7 @@ def to_decode_requests(
     target_temp: float = 0.5,
     token_block_size: Optional[int] = None,
     key_base: int = 1000,
-):
+) -> "List[DecodeRequest]":
     """Lower a trace to real :class:`DecodeRequest`s (prompt and SMC key
     derived from each request's ``seed``) — the one place bench, tests,
     and the recorder build scheduler inputs, so they are identical."""

@@ -143,7 +143,7 @@ class Checkpointer:
             if shardings is not None
             else [None] * len(leaves)
         )
-        for (key, leaf), sh in zip(leaves, sh_leaves):
+        for (key, leaf), sh in zip(leaves, sh_leaves, strict=True):
             entry = by_key.get(key)
             if entry is None:
                 raise KeyError(f"checkpoint missing leaf {key}")

@@ -1,0 +1,21 @@
+"""BAD: block-id arrays leak into value arithmetic/concat/payload."""
+
+import jax.numpy as jnp
+
+from repro.core import pool as pool_lib
+
+
+def ids_into_math(pool, values):
+    pool, bids = pool_lib.alloc(pool, 4)
+    return pool, values + bids  # ids are addresses, not operands
+
+
+def ids_into_concat(pool, values):
+    pool, bids = pool_lib.alloc(pool, 4)
+    return pool, jnp.concatenate([values, bids])
+
+
+def ids_as_payload(pool, mask, tables):
+    pool, bids = pool_lib.alloc(pool, 4)
+    pool = pool_lib.write_blocks(pool, mask, bids)  # ids written as values
+    return pool, tables

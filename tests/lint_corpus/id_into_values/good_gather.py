@@ -1,0 +1,21 @@
+"""GOOD: ids used as indices (gather) and for address arithmetic only."""
+
+import jax.numpy as jnp
+
+from repro.core import pool as pool_lib
+
+
+def gather_payload(pool, tables, step):
+    bids = tables[:, step]
+    payload = pool.data[bids]  # ids as index: gathers values
+    return payload * 2.0
+
+
+def address_offsets(tables):
+    nxt = tables + 1  # int-literal offset: address arithmetic, allowed
+    return jnp.where(nxt >= 0, nxt, 0)
+
+
+def id_to_id(pool, tables, remap):
+    fresh = pool_lib.remap_tables(tables, remap)
+    return jnp.concatenate([fresh, tables])  # ids with ids: consistent

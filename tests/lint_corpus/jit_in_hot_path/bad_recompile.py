@@ -1,0 +1,21 @@
+"""BAD: fresh jit/pallas callables built per iteration or per call."""
+
+import jax
+
+
+def loop_rebuild(kernel, xs):
+    total = 0.0
+    for x in xs:
+        f = jax.jit(kernel)  # fresh trace cache every iteration
+        total = total + f(x)
+    return total
+
+
+def immediate(kernel, x):
+    return jax.jit(kernel)(x)  # built and discarded in one expression
+
+
+class Runner:
+    def step(self, x):
+        f = jax.jit(self._kernel)  # rebuilt (and recompiled) every call
+        return f(x)

@@ -1,0 +1,33 @@
+"""GOOD: the repo's sanctioned caching idioms for jit construction."""
+
+import functools
+
+import jax
+
+
+def _kernel(x):
+    return x * 2
+
+
+STEP = jax.jit(_kernel)  # module level: compiled once per process
+
+
+class Model:
+    def __init__(self, kernel):
+        self._step = jax.jit(kernel)  # once per object
+
+    def run(self, x):
+        return self._step(x)
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_for(static_arg):
+    return jax.jit(functools.partial(_kernel, static_arg))  # memoized factory
+
+
+def builder(fn):
+    return jax.jit(fn)  # explicit builder: the caller caches
+
+
+def aot(fn, x):
+    return jax.jit(fn).lower(x)  # deliberate AOT pipeline

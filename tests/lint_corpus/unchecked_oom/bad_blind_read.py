@@ -1,0 +1,8 @@
+"""BAD: results materialized after allocation with no exhaustion check."""
+
+from repro.core import store as store_lib
+
+
+def blind(cfg, store, pos, vals):
+    store = store_lib.append(cfg, store, pos, vals)
+    return store_lib.read_at(cfg, store, pos)  # dump-row garbage under OOM

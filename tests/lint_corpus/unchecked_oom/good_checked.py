@@ -1,0 +1,14 @@
+"""GOOD: the exhaustion signal is consulted between alloc and read."""
+
+from repro.core import store as store_lib
+
+
+def checked(cfg, store, pos, vals):
+    store = store_lib.append(cfg, store, pos, vals)
+    if bool(store.oom_flag):
+        raise MemoryError("pool exhausted")
+    return store_lib.read_at(cfg, store, pos)
+
+
+def read_only(cfg, store, pos):
+    return store_lib.read_at(cfg, store, pos)  # no alloc: nothing to gate

@@ -1,0 +1,19 @@
+"""BAD: threading-API results discarded or stale bindings re-entered."""
+
+from repro.core import pool as pool_lib
+
+
+def leak_refs(pool, tables):
+    pool_lib.add_refs(pool, tables)  # result discarded: refcounts lost
+    return pool
+
+
+def underscore_discard(pool, tables):
+    _ = pool_lib.sub_refs(pool, tables)  # '_' is still a discard
+    return pool
+
+
+def lost_update(pool, ids):
+    pool2 = pool_lib.sub_refs(pool, ids)
+    pool3 = pool_lib.add_refs(pool, ids)  # stale 'pool': loses the sub_refs
+    return pool2, pool3

@@ -1,0 +1,25 @@
+"""GOOD: successors threaded; checkpoints held but never re-entered."""
+
+from repro.core import pool as pool_lib
+from repro.core import store as store_lib
+
+
+def threaded(pool, ids):
+    pool = pool_lib.add_refs(pool, ids)
+    pool = pool_lib.sub_refs(pool, ids)
+    return pool
+
+
+def checkpoint(pool, ids):
+    saved = pool  # rollback handle: held, never passed back to the API
+    pool = pool_lib.add_refs(pool, ids)
+    if pool.free_top < 0:
+        return saved
+    return pool
+
+
+def store_threaded(cfg, store, pos, vals):
+    store = store_lib.write_at(cfg, store, pos, vals)
+    if bool(store.oom_flag):
+        raise MemoryError("store exhausted")
+    return store_lib.read_at(cfg, store, pos)

@@ -1,0 +1,20 @@
+"""BAD: donated buffers read after the call that consumed them."""
+
+import jax
+
+
+def read_after_donate(update, pool, delta):
+    step = jax.jit(update, donate_argnums=(0,))
+    out = step(pool, delta)
+    return pool.refcount, out  # 'pool' buffer was deleted by the donation
+
+
+def immediate_donate(consume, buf):
+    out = jax.jit(consume, donate_argnums=(0,))(buf)
+    return buf + out  # 'buf' is dead
+
+
+def pallas_alias(kernel, pl, x, y):
+    call = pl.pallas_call(kernel, input_output_aliases={0: 0})
+    out = call(x, y)
+    return x.sum(), out  # aliased input 0 was consumed

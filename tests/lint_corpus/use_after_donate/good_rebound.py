@@ -1,0 +1,22 @@
+"""GOOD: donated names rebound to outputs, or read before the call."""
+
+import jax
+
+
+def rebind(update, pool, delta):
+    step = jax.jit(update, donate_argnums=(0,))
+    pool = step(pool, delta)  # output takes the name: nothing stale
+    return pool.refcount
+
+
+def read_before(update, pool, delta):
+    step = jax.jit(update, donate_argnums=(0,))
+    before = pool.refcount
+    pool = step(pool, delta)
+    return before, pool
+
+
+def no_donation(update, pool, delta):
+    step = jax.jit(update)
+    out = step(pool, delta)
+    return pool.refcount, out  # no donation: input stays live

@@ -1,0 +1,92 @@
+"""Backend-dispatch policy (kernels/dispatch.py).
+
+The policy is one function shared by every kernel entry point, so every
+arm is pinned here: default routing per backend, the off-TPU interpret
+forcing, the unknown-backend error, and — via a monkeypatched kernel —
+that ``use_kernel`` actually routes ``cow_gather`` between the Pallas
+body and the jnp oracle.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.dispatch import KNOWN_BACKENDS, resolve_kernel_mode
+
+
+class TestResolveKernelMode:
+    def test_default_is_kernel_on_tpu_only(self):
+        assert resolve_kernel_mode(None, False, backend="tpu") == (True, False)
+        assert resolve_kernel_mode(None, False, backend="cpu") == (False, False)
+        assert resolve_kernel_mode(None, False, backend="gpu") == (False, False)
+
+    def test_interpret_request_opts_into_kernel_body(self):
+        # interpret=True with no explicit choice: run the kernel body in
+        # interpret mode everywhere (the test-sweep configuration)
+        for backend in KNOWN_BACKENDS:
+            assert resolve_kernel_mode(None, True, backend=backend) == (
+                True,
+                True,
+            )
+
+    def test_explicit_kernel_off_tpu_forces_interpret(self):
+        # Pallas has no compiled CPU/GPU path in this tree
+        assert resolve_kernel_mode(True, False, backend="cpu") == (True, True)
+        assert resolve_kernel_mode(True, False, backend="gpu") == (True, True)
+        assert resolve_kernel_mode(True, False, backend="tpu") == (True, False)
+
+    def test_explicit_oracle_everywhere(self):
+        for backend in KNOWN_BACKENDS:
+            assert resolve_kernel_mode(False, False, backend=backend) == (
+                False,
+                False,
+            )
+
+    def test_unknown_backend_raises(self):
+        with pytest.raises(ValueError, match="unknown backend 'rocm'"):
+            resolve_kernel_mode(None, False, backend="rocm")
+
+    def test_default_backend_used_when_omitted(self):
+        # on the CI host jax.default_backend() is cpu: policy = oracle
+        use_kernel, interpret = resolve_kernel_mode(None, False)
+        assert isinstance(use_kernel, bool) and isinstance(interpret, bool)
+
+
+class TestRouting:
+    """use_kernel actually selects the implementation, not just a flag."""
+
+    def _spy(self, monkeypatch):
+        from repro.kernels.cow_gather import ops
+
+        calls = {"pallas": 0, "ref": 0}
+        real_ref = ops.cow_gather_ref
+
+        def fake_pallas(flat, table, interpret=False):
+            calls["pallas"] += 1
+            return real_ref(flat, table)
+
+        def spy_ref(pool, table):
+            calls["ref"] += 1
+            return real_ref(pool, table)
+
+        monkeypatch.setattr(ops, "cow_gather_pallas", fake_pallas)
+        monkeypatch.setattr(ops, "cow_gather_ref", spy_ref)
+        return ops, calls
+
+    def test_oracle_route(self, monkeypatch):
+        ops, calls = self._spy(monkeypatch)
+        pool = jnp.arange(12.0).reshape(3, 4)
+        table = jnp.asarray([2, 0], jnp.int32)
+        out = ops.cow_gather(pool, table, use_kernel=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(pool)[[2, 0]])
+        assert calls == {"pallas": 0, "ref": 1}
+
+    def test_kernel_route(self, monkeypatch):
+        ops, calls = self._spy(monkeypatch)
+        pool = jnp.arange(12.0).reshape(3, 4)
+        table = jnp.asarray([1, 2], jnp.int32)
+        out = ops.cow_gather(pool, table, use_kernel=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(pool)[[1, 2]])
+        assert calls["pallas"] == 1 and calls["ref"] == 0

@@ -52,7 +52,7 @@ def test_forward_shapes_and_finite(arch):
     flat_p = jax.tree.leaves(params)
     flat_a = jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple))
     assert len(flat_p) == len(flat_a)
-    for p, a in zip(flat_p, flat_a):
+    for p, a in zip(flat_p, flat_a, strict=True):
         assert p.ndim == len(a), (p.shape, a)
 
 

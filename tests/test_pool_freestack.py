@@ -300,3 +300,47 @@ class TestNoScanOnHotPath:
         pool = pool_lib.init(8, (2,))
         jax.make_jaxpr(lambda p: pool_lib.alloc_scan(p, 2)[0])(pool)
         assert calls["n"] > 0
+
+
+class TestCheckInvariants:
+    """pool.check_invariants: the consolidated host-side verify call."""
+
+    def test_clean_pool_is_clean(self):
+        pool = pool_lib.init(8, (2,))
+        pool, ids = pool_lib.alloc(pool, 3)
+        tables = ids.reshape(1, -1)
+        assert pool_lib.check_invariants(pool, tables) == []
+        assert pool_lib.check_invariants(pool) == []  # tables optional
+
+    def test_corrupt_free_stack_reported(self):
+        pool = pool_lib.init(8, (2,))
+        pool, _ = pool_lib.alloc(pool, 3)
+        broken = pool._replace(free_top=pool.free_top + 1)
+        problems = pool_lib.check_invariants(broken)
+        assert problems == ["free stack disagrees with the refcount mask"]
+
+    def test_refcount_table_drift_reported(self):
+        pool = pool_lib.init(8, (2,))
+        pool, ids = pool_lib.alloc(pool, 3)
+        # tables claim one extra reference to block ids[0]
+        tables = jnp.concatenate([ids, ids[:1]]).reshape(1, -1)
+        problems = pool_lib.check_invariants(pool, tables)
+        assert problems == ["refcount/table reference conservation violated"]
+
+    def test_oom_is_not_a_violation(self):
+        """Exhaustion is a state with its own handling path, not a
+        bookkeeping bug — the watchdog must not page anyone for it."""
+        pool = pool_lib.init(2, (2,))
+        pool, _ = pool_lib.alloc(pool, 4)  # over-commit: oom goes sticky
+        assert bool(pool.oom)
+        assert pool_lib.check_invariants(pool) == []
+
+    def test_scheduler_watchdog_uses_consolidated_call(self, monkeypatch):
+        """The serving watchdog routes through pool.check_invariants."""
+        import inspect
+
+        from repro.serving import scheduler as sched_lib
+
+        src = inspect.getsource(sched_lib.Scheduler.check_invariants)
+        assert "check_invariants(" in src
+        assert "free_stack_consistent" not in src

@@ -66,7 +66,7 @@ def random_pool(rng, nb: int):
             pool, ids, jnp.arange(2 * k, dtype=jnp.float32).reshape(k, 2) + 1
         )
         extra = rng.integers(0, 3, k)
-        for i, e in zip(np.asarray(ids), extra):
+        for i, e in zip(np.asarray(ids), extra, strict=True):
             if e:
                 pool = pool_lib.add_refs(pool, jnp.full((int(e),), int(i)))
         drop = np.asarray(ids)[rng.random(k) < 0.4]

@@ -1,0 +1,216 @@
+"""repro-lint: engine mechanics, per-rule corpus, and the CI gate.
+
+Every rule is exercised against its fixture corpus twice: the ``bad_*``
+files must produce at least one finding of that rule (true positives),
+the ``good_*`` files must be clean under it (no false positives on the
+sanctioned idioms).  The gate test runs the real CLI as a subprocess —
+the same invocation CI uses — and checks the exit-code contract.
+"""
+
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import ALL_RULES, lint_paths, lint_source
+from repro.analysis.engine import suppressions
+
+REPO = Path(__file__).resolve().parent.parent
+CORPUS = Path(__file__).resolve().parent / "lint_corpus"
+CLI = REPO / "scripts" / "repro_lint.py"
+
+RULE_NAMES = [r.name for r in ALL_RULES]
+
+
+def _findings(path: Path, rule: str):
+    return [
+        f
+        for f in lint_paths([path], select=[rule])
+        if not f.suppressed and f.rule == rule
+    ]
+
+
+# -- corpus --------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rule", RULE_NAMES)
+def test_bad_fixtures_flag(rule):
+    corpus = CORPUS / rule.replace("-", "_")
+    bad = sorted(corpus.glob("bad_*.py"))
+    assert bad, f"no bad fixtures for {rule}"
+    for path in bad:
+        assert _findings(path, rule), f"{path.name} produced no {rule} finding"
+
+
+@pytest.mark.parametrize("rule", RULE_NAMES)
+def test_good_fixtures_clean(rule):
+    corpus = CORPUS / rule.replace("-", "_")
+    good = sorted(corpus.glob("good_*.py"))
+    assert good, f"no good fixtures for {rule}"
+    for path in good:
+        hits = _findings(path, rule)
+        assert not hits, f"{path.name}: false positives {hits}"
+
+
+def test_every_bad_fixture_line_documented():
+    """Each bad fixture flags the contract it claims to break, and only
+    rules with both fixture kinds ship — the corpus is the rule's spec."""
+    dirs = sorted(p.name for p in CORPUS.iterdir() if p.is_dir())
+    assert dirs == sorted(r.replace("-", "_") for r in RULE_NAMES)
+
+
+# -- engine mechanics ----------------------------------------------------
+
+
+BAD_SNIPPET = """\
+from repro.core import pool as pool_lib
+
+def f(pool, tables):
+    pool_lib.add_refs(pool, tables)
+    return pool
+"""
+
+
+def test_finding_positions_and_fields():
+    (finding,) = lint_source(BAD_SNIPPET, path="x.py")
+    assert finding.rule == "unthreaded-pool"
+    assert finding.path == "x.py"
+    assert finding.line == 4
+    assert not finding.suppressed
+    assert "x.py:4" in finding.render()
+
+
+def test_trailing_suppression_silences():
+    src = BAD_SNIPPET.replace(
+        "pool_lib.add_refs(pool, tables)",
+        "pool_lib.add_refs(pool, tables)  # repro-lint: disable=unthreaded-pool",
+    )
+    (finding,) = lint_source(src)
+    assert finding.suppressed
+
+
+def test_standalone_suppression_covers_next_line():
+    src = BAD_SNIPPET.replace(
+        "    pool_lib.add_refs(pool, tables)",
+        "    # repro-lint: disable=unthreaded-pool\n"
+        "    pool_lib.add_refs(pool, tables)",
+    )
+    (finding,) = lint_source(src)
+    assert finding.suppressed
+
+
+def test_disable_all_and_wrong_rule():
+    src_all = BAD_SNIPPET.replace(
+        "pool_lib.add_refs(pool, tables)",
+        "pool_lib.add_refs(pool, tables)  # repro-lint: disable=all",
+    )
+    assert lint_source(src_all)[0].suppressed
+    src_wrong = BAD_SNIPPET.replace(
+        "pool_lib.add_refs(pool, tables)",
+        "pool_lib.add_refs(pool, tables)  # repro-lint: disable=stale-remap",
+    )
+    assert not lint_source(src_wrong)[0].suppressed
+
+
+def test_suppression_parser_multi_rule():
+    got = suppressions("x = 1  # repro-lint: disable=a-b,c-d\n")
+    assert got == {1: {"a-b", "c-d"}}
+
+
+def test_parse_error_is_a_finding():
+    (finding,) = lint_source("def broken(:\n", path="bad.py")
+    assert finding.rule == "parse-error"
+
+
+def test_unknown_rule_rejected():
+    with pytest.raises(KeyError):
+        lint_source("x = 1\n", select=["no-such-rule"])
+
+
+def test_nested_function_state_isolated():
+    """A threading call in a nested function does not leak staleness
+    into (or from) the enclosing scope."""
+    src = """\
+from repro.core import pool as pool_lib
+
+def outer(pool, ids):
+    def inner(pool, ids):
+        return pool_lib.add_refs(pool, ids)
+    pool = pool_lib.add_refs(pool, ids)
+    return inner(pool, ids)
+"""
+    assert lint_source(src) == []
+
+
+def test_loop_carried_staleness_found_once():
+    """The flow driver runs loop bodies twice; the engine dedupes."""
+    src = """\
+from repro.core import pool as pool_lib
+
+def f(pool, ids, xs):
+    for _x in xs:
+        pool2 = pool_lib.add_refs(pool, ids)
+    return pool2
+"""
+    hits = [f for f in lint_source(src) if f.rule == "unthreaded-pool"]
+    assert len(hits) == 1  # stale 'pool' on iteration 2+, reported once
+
+
+# -- the src/ contract and the CI gate -----------------------------------
+
+
+def _run_cli(*args):
+    return subprocess.run(
+        [sys.executable, str(CLI), *args],
+        capture_output=True,
+        text=True,
+        cwd=REPO,
+    )
+
+
+def test_src_tree_is_clean():
+    """The acceptance bar: zero unsuppressed findings over src/."""
+    proc = _run_cli("src/")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_fails_on_injected_violation(tmp_path):
+    """The CI gate actually gates: a planted contract violation makes
+    the CLI exit non-zero and name the rule."""
+    bad = tmp_path / "planted.py"
+    bad.write_text(
+        "from repro.core import pool as pool_lib\n\n"
+        "def f(pool, tables):\n"
+        "    pool_lib.add_refs(pool, tables)\n"
+        "    return pool\n"
+    )
+    proc = _run_cli(str(bad))
+    assert proc.returncode == 1
+    assert "unthreaded-pool" in proc.stdout
+
+
+def test_cli_json_output(tmp_path):
+    bad = tmp_path / "planted.py"
+    bad.write_text(
+        "from repro.core import pool as pool_lib\n\n"
+        "def f(pool, tables):\n"
+        "    pool_lib.add_refs(pool, tables)\n"
+        "    return pool\n"
+    )
+    proc = _run_cli(str(bad), "--json")
+    payload = json.loads(proc.stdout)
+    assert payload["unsuppressed"] == 1
+    assert payload["findings"][0]["rule"] == "unthreaded-pool"
+
+
+def test_cli_list_rules_and_select():
+    proc = _run_cli("--list-rules")
+    assert proc.returncode == 0
+    for name in RULE_NAMES:
+        assert name in proc.stdout
+    proc = _run_cli("src/", "--select", "no-such-rule")
+    assert proc.returncode == 2

@@ -76,7 +76,7 @@ class TestSingleShardBitExact:
             if t == 2:
                 ref = store_lib.clone(base, ref, anc)
                 sh = sharded_lib.clone(shcfg, m, sh, anc)
-        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(sh)):
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(sh), strict=True):
             np.testing.assert_array_equal(
                 np.asarray(a).reshape(-1), np.asarray(b).reshape(-1)
             )

@@ -352,7 +352,7 @@ class TestSlotTableProperties:
                     continue
                 live[lo] = n
             spans = sorted((lo, lo + n) for lo, n in live.items())
-            for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+            for (a0, a1), (b0, b1) in zip(spans, spans[1:], strict=False):
                 assert a1 <= b0, "overlapping slot ranges"
             assert all(0 <= a0 and a1 <= cap for a0, a1 in spans)
             assert table.used == sum(n for n in live.values())

@@ -147,7 +147,9 @@ class TestFaultTolerance:
         resumed.run()
         res_params = resumed.final_state[0]
 
-        for a, b in zip(jax.tree.leaves(ref_params), jax.tree.leaves(res_params)):
+        for a, b in zip(
+            jax.tree.leaves(ref_params), jax.tree.leaves(res_params), strict=True
+        ):
             np.testing.assert_allclose(
                 np.asarray(a, np.float32), np.asarray(b, np.float32),
                 rtol=1e-6, atol=1e-6,

@@ -91,7 +91,7 @@ class TestRefcountUpdateKernel:
             rr = refcount_update(
                 refcount, frozen, new, old, do_freeze=do_freeze, use_kernel=False
             )
-            for a, b in zip(rk, rr):
+            for a, b in zip(rk, rr, strict=True):
                 np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
     def test_matches_legacy_triple(self):
