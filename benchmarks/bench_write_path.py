@@ -29,7 +29,8 @@ from repro.core import store as store_lib
 from repro.core.config import CopyMode
 from repro.core.pool import NULL_BLOCK
 from repro.core.store import StoreConfig
-from repro.roofline.write_path import append_cost, clone_cost
+from repro.roofline.write_path import append_cost, chain_cost, clone_cost
+from repro.smc import resampling
 
 from benchmarks.common import emit
 
@@ -222,6 +223,109 @@ def run(quick: bool = False, reps: int = 3, t: int = 32):
             assert costs["kernel"].speedup_over(costs["legacy"]) >= 2.0, costs
         assert clones["kernel"].bytes < clones["legacy"].bytes, clones
         assert clones["legacy"].passes >= 2 * clones["kernel"].passes, clones
+
+    # Sub-block delta COW gates (DESIGN.md §3.2, host-independent): a
+    # sparse single-element write to a freshly shared full block
+    # (dirty_items=0 — the post-fork divergence write) must move >= 2x
+    # fewer bytes than the whole-block kernel copy at every
+    # block_size >= 8; a dense COW whose mask fills (degenerating the
+    # page back to a full block) must never lose to the whole-block copy.
+    for bs in (8, 16, 32):
+        dcfg = StoreConfig(
+            mode=CopyMode.LAZY_SR, n=1024, block_size=bs, max_blocks=-(-64 // bs),
+            delta_cow=True,
+        )
+        item_bytes, block_bytes = 4, 4 * bs
+        kw = dict(
+            n=dcfg.n, touched=dcfg.n, copies=dcfg.n,
+            num_blocks=dcfg.pool_blocks,
+            block_bytes=block_bytes, item_bytes=item_bytes,
+        )
+        whole = append_cost("kernel", **kw)
+        sparse = append_cost("kernel", delta=True, dirty_items=0, **kw)
+        dense = append_cost("kernel", delta=True, dirty_items=bs - 1, **kw)
+        rows.append(
+            emit(
+                "write",
+                f"write_model_delta_bs{bs}",
+                0.0,
+                f"whole_bytes={whole.bytes};"
+                f"sparse_delta_bytes={sparse.bytes};"
+                f"dense_delta_bytes={dense.bytes};"
+                f"sparse_win={whole.bytes / max(sparse.bytes, 1):.2f}x",
+                n=dcfg.n,
+                block_size=bs,
+            )
+        )
+        assert sparse.bytes * 2 <= whole.bytes, (bs, sparse, whole)
+        assert dense.bytes <= whole.bytes, (bs, dense, whole)
+
+    # Fused resample->clone chain gate (kernels/clone_chain): the fused
+    # op reads the tables once where the composed path dispatches three
+    # times — >= 1.3x fewer HBM passes (it is 3x) and >= 1.3x fewer
+    # bytes per resampling generation.
+    nbc = StoreConfig(
+        mode=CopyMode.LAZY_SR, n=1024, block_size=4, max_blocks=16
+    ).pool_blocks
+    comp = chain_cost("fused_jnp", n=1024, table_entries=1024 * 16, num_blocks=nbc)
+    fused = chain_cost("kernel", n=1024, table_entries=1024 * 16, num_blocks=nbc)
+    rows.append(
+        emit(
+            "write",
+            "write_model_chain_N1024",
+            0.0,
+            f"composed_bytes={comp.bytes};fused_bytes={fused.bytes};"
+            f"composed_passes={comp.passes};fused_passes={fused.passes};"
+            f"fused_win={fused.speedup_over(comp):.2f}x",
+            n=1024,
+            block_size=4,
+        )
+    )
+    assert comp.passes >= 1.3 * fused.passes, (comp, fused)
+    assert comp.bytes >= 1.3 * fused.bytes, (comp, fused)
+
+    # Wall-clock delta-vs-whole and fused-vs-composed rows (jnp fallback
+    # on CPU hosts — indicative; the model gates above are the contract).
+    for n, bs in [(256, 8)] if quick else [(256, 8), (1024, 8)]:
+        base = dict(
+            mode=CopyMode.LAZY_SR, n=n, block_size=bs, max_blocks=-(-t // bs)
+        )
+        cfg_w = StoreConfig(**base)
+        cfg_d = StoreConfig(**base, delta_cow=True)
+        append_j = jax.jit(store_lib.append, static_argnums=0)
+        clone_j = jax.jit(store_lib.clone, static_argnums=0)
+        chain_j = jax.jit(store_lib.clone_chain, static_argnums=0)
+        key0, logw0 = jax.random.PRNGKey(0), jnp.zeros((n,))
+
+        def chain_fn(cfg, s, _anc):
+            s, _ = chain_j(cfg, s, key0, logw0)
+            return s
+
+        def composed_fn(cfg, s, _anc):
+            return clone_j(cfg, s, resampling.resample_systematic(key0, logw0))
+
+        app_w, cl_comp = _time_program(cfg_w, append_j, composed_fn, t, reps)
+        app_d, cl_fused = _time_program(cfg_d, append_j, chain_fn, t, reps)
+        rows.append(
+            emit(
+                "write",
+                f"write_append_delta_N{n}_bs{bs}",
+                app_d,
+                f"whole_us={app_w * 1e6:.0f};T={t}",
+                n=n,
+                block_size=bs,
+            )
+        )
+        rows.append(
+            emit(
+                "write",
+                f"write_chain_N{n}_bs{bs}",
+                cl_fused,
+                f"composed_us={cl_comp * 1e6:.0f};T={t}",
+                n=n,
+                block_size=bs,
+            )
+        )
     return rows
 
 

@@ -77,6 +77,8 @@ __all__ = [
     "alloc_compact",
     "add_refs",
     "sub_refs",
+    "release_parents",
+    "parent_or_self",
     "freeze",
     "write_blocks",
     "read_blocks",
@@ -112,6 +114,22 @@ class BlockPool(NamedTuple):
                   ``free_stack[:free_top]`` is exactly the free set.
       free_top:   scalar int32 — number of live entries in ``free_stack``.
       oom:        scalar bool, sticky: an allocation ever failed.
+      parent:     ``[num_blocks] int32`` — sub-block delta COW backing
+                  block (DESIGN.md §3.2).  ``NULL_BLOCK`` for a *full*
+                  block (payload complete in ``data``); a non-NULL entry
+                  makes the block a *delta* block whose non-dirty slots
+                  resolve through the parent.  Parents are always full
+                  blocks (delta depth <= 1) and each delta child holds
+                  exactly one refcount reference on its parent.  With
+                  ``delta_cow`` off this stays all-NULL and every
+                  operation below is value-identical to the pre-delta
+                  pool.
+      dirty:      ``[num_blocks, npos] bool`` — per-slot dirty mask along
+                  the block's position axis.  For a delta block,
+                  ``dirty[b, p]`` means slot ``p`` is materialized in
+                  ``data[b]``; non-dirty slots of ``data[b]`` are kept
+                  zero so pools stay leaf-comparable across write paths.
+                  Full blocks carry an all-False mask.
     """
 
     data: jax.Array
@@ -120,6 +138,8 @@ class BlockPool(NamedTuple):
     free_stack: jax.Array
     free_top: jax.Array
     oom: jax.Array
+    parent: jax.Array
+    dirty: jax.Array
 
     @property
     def num_blocks(self) -> int:
@@ -134,13 +154,20 @@ def init(
     num_blocks: int,
     block_shape: Sequence[int],
     dtype: jnp.dtype = jnp.float32,
+    npos: int | None = None,
 ) -> BlockPool:
     """Create an empty pool of ``num_blocks`` blocks (+ the dump row).
 
     The free stack is seeded descending so pops hand out ascending block
     ids — the same order the legacy ``nonzero`` scan produced on an
-    empty pool.
+    empty pool.  ``npos`` sizes the per-block dirty mask (the length of
+    the block's position axis); it defaults to ``block_shape[0]``, which
+    is right for the store's ``[block_size, *item]`` blocks — the KV
+    cache passes its own position axis explicitly.
     """
+    block_shape = tuple(block_shape)
+    if npos is None:
+        npos = block_shape[0] if block_shape else 1
     return BlockPool(
         data=jnp.zeros((num_blocks + 1, *block_shape), dtype=dtype),
         refcount=jnp.zeros((num_blocks,), dtype=jnp.int32),
@@ -148,6 +175,8 @@ def init(
         free_stack=jnp.arange(num_blocks - 1, -1, -1, dtype=jnp.int32),
         free_top=jnp.asarray(num_blocks, dtype=jnp.int32),
         oom=jnp.zeros((), dtype=jnp.bool_),
+        parent=jnp.full((num_blocks,), NULL_BLOCK, dtype=jnp.int32),
+        dirty=jnp.zeros((num_blocks, npos), dtype=jnp.bool_),
     )
 
 
@@ -227,6 +256,8 @@ def alloc(pool: BlockPool, n: int, commit: jax.Array | None = None) -> Tuple[Blo
     sids = _scatter_ids(nb, cand, ok)
     refcount = pool.refcount.at[sids].add(1, mode="drop")
     frozen = pool.frozen.at[sids].set(False, mode="drop")
+    parent = pool.parent.at[sids].set(NULL_BLOCK, mode="drop")
+    dirty = pool.dirty.at[sids].set(False, mode="drop")
     oom = pool.oom | jnp.any(commit & ~have)
     # Remove the committed candidates from the stack window, compacting
     # the uncommitted survivors downward in their original relative
@@ -241,7 +272,13 @@ def alloc(pool: BlockPool, n: int, commit: jax.Array | None = None) -> Tuple[Blo
     top = top - jnp.sum(ok, dtype=jnp.int32)
     out_ids = jnp.where(ok, cand, NULL_BLOCK)
     pool = pool._replace(
-        refcount=refcount, frozen=frozen, oom=oom, free_stack=stack, free_top=top
+        refcount=refcount,
+        frozen=frozen,
+        oom=oom,
+        free_stack=stack,
+        free_top=top,
+        parent=parent,
+        dirty=dirty,
     )
     return pool, out_ids
 
@@ -263,9 +300,13 @@ def alloc_scan(
     sids = _scatter_ids(pool.num_blocks, cand, ok)
     refcount = pool.refcount.at[sids].add(1, mode="drop")
     frozen = pool.frozen.at[sids].set(False, mode="drop")
+    parent = pool.parent.at[sids].set(NULL_BLOCK, mode="drop")
+    dirty = pool.dirty.at[sids].set(False, mode="drop")
     oom = pool.oom | jnp.any(commit & (cand < 0))
     out_ids = jnp.where(ok, cand, NULL_BLOCK)
-    pool = pool._replace(refcount=refcount, frozen=frozen, oom=oom)
+    pool = pool._replace(
+        refcount=refcount, frozen=frozen, oom=oom, parent=parent, dirty=dirty
+    )
     return rebuild_free_stack(pool), out_ids
 
 
@@ -309,14 +350,14 @@ def add_refs(pool: BlockPool, ids: jax.Array, amount: jax.Array | int = 1) -> Bl
     return pool._replace(refcount=refcount)
 
 
-def sub_refs(pool: BlockPool, ids: jax.Array, amount: jax.Array | int = 1) -> BlockPool:
-    """Decrement refcounts; blocks hitting zero are freed onto the stack.
+def _sub_refs_level(
+    pool: BlockPool, ids: jax.Array, amount: jax.Array | int = 1
+) -> Tuple[BlockPool, jax.Array]:
+    """One refcount-decrement pass; returns the deduplicated freed ids.
 
-    (``refcount == 0`` *is* the free set — rule 4 of the paper's count
-    scheme collapses to this in a cycle-free pool.)  The newly-freed ids
-    are pushed incrementally: O(k) work for ``k = ids.size``, with a
-    first-occurrence claim pass deduplicating repeated ids, rather than
-    any rescan of the pool.
+    The freed array is ``ids``-shaped with ``NULL_BLOCK`` in every slot
+    that did not free a block (and in all but the first occurrence of a
+    repeated id, so each freed block appears exactly once).
     """
     ids = ids.reshape(-1)
     k = ids.shape[0]
@@ -330,10 +371,77 @@ def sub_refs(pool: BlockPool, ids: jax.Array, amount: jax.Array | int = 1) -> Bl
     order = jnp.arange(k, dtype=jnp.int32)
     claim = jnp.full((nb + 1,), k, dtype=jnp.int32).at[sids].min(order, mode="drop")
     rep = flip & (claim[gids] == order)
-    stack, top = _push_free_ids(
-        pool.free_stack, pool.free_top, jnp.where(rep, ids, NULL_BLOCK)
+    freed = jnp.where(rep, ids, NULL_BLOCK)
+    stack, top = _push_free_ids(pool.free_stack, pool.free_top, freed)
+    pool = pool._replace(refcount=refcount, free_stack=stack, free_top=top)
+    return pool, freed
+
+
+def sub_refs(pool: BlockPool, ids: jax.Array, amount: jax.Array | int = 1) -> BlockPool:
+    """Decrement refcounts; blocks hitting zero are freed onto the stack.
+
+    (``refcount == 0`` *is* the free set — rule 4 of the paper's count
+    scheme collapses to this in a cycle-free pool.)  The newly-freed ids
+    are pushed incrementally: O(k) work for ``k = ids.size``, with a
+    first-occurrence claim pass deduplicating repeated ids, rather than
+    any rescan of the pool.
+
+    Delta cascade (DESIGN.md §3.2): a freed *delta* block releases the
+    single reference it held on its parent, which may free the parent in
+    turn.  Parents are always full blocks (delta depth <= 1), so the
+    cascade terminates after one extra level; the freed children's
+    ``parent``/``dirty`` bookkeeping is cleared.  With all-NULL parents
+    (``delta_cow`` off) both extra passes are value-level no-ops.
+    """
+    pool, freed = _sub_refs_level(pool, ids, amount)
+    parents = jnp.where(freed >= 0, pool.parent[_gather_ids(freed)], NULL_BLOCK)
+    pool, _ = _sub_refs_level(pool, parents, 1)
+    sids = _scatter_ids(pool.num_blocks, freed)
+    parent = pool.parent.at[sids].set(NULL_BLOCK, mode="drop")
+    dirty = pool.dirty.at[sids].set(False, mode="drop")
+    return pool._replace(parent=parent, dirty=dirty)
+
+
+def release_parents(pool: BlockPool, freed: jax.Array) -> BlockPool:
+    """Cascade a mask-shaped free (:func:`push_free_mask` callers) to the
+    delta parents.
+
+    ``freed`` is a ``[num_blocks] bool`` mask of blocks that were just
+    freed by a table-reference pass (fused clone bookkeeping, KV slot
+    release).  Each freed *delta* child releases the one reference it
+    held on its parent; parents whose refcount hits zero are pushed onto
+    the free stack, and the freed children's ``parent``/``dirty``
+    bookkeeping is cleared.  Two-phase safe: a parent still holding
+    child references cannot have been freed by the table pass, so no id
+    is pushed twice.  With all-NULL parents this is a value-level no-op.
+    """
+    nb = pool.num_blocks
+    child_par = jnp.where(freed, pool.parent, NULL_BLOCK)
+    sids = _scatter_ids(nb, child_par)
+    drops = jnp.zeros((nb,), jnp.int32).at[sids].add(1, mode="drop")
+    refcount = pool.refcount - drops
+    newly = (drops > 0) & (pool.refcount > 0) & (refcount == 0)
+    stack, top = push_free_mask(pool.free_stack, pool.free_top, newly)
+    parent = jnp.where(freed, NULL_BLOCK, pool.parent)
+    dirty = jnp.where(freed[:, None], False, pool.dirty)
+    return pool._replace(
+        refcount=refcount,
+        free_stack=stack,
+        free_top=top,
+        parent=parent,
+        dirty=dirty,
     )
-    return pool._replace(refcount=refcount, free_stack=stack, free_top=top)
+
+
+def parent_or_self(pool: BlockPool, ids: jax.Array) -> jax.Array:
+    """Resolve table entries to the block holding their *base* payload.
+
+    Full blocks resolve to themselves, delta blocks to their parent;
+    NULL entries stay NULL.  Read paths pair this with the ``dirty``
+    mask: ``out[p] = dirty[b, p] ? data[b, p] : data[parent_or_self(b), p]``.
+    """
+    par = pool.parent[_gather_ids(ids)]
+    return jnp.where((ids >= 0) & (par >= 0), par, ids)
 
 
 def freeze(pool: BlockPool, ids: jax.Array) -> BlockPool:
@@ -419,6 +527,14 @@ def grow(pool: BlockPool, new_num_blocks: int) -> BlockPool:
     data = data.at[:nb].set(pool.data[:nb])
     refcount = jnp.zeros((new_num_blocks,), jnp.int32).at[:nb].set(pool.refcount)
     frozen = jnp.zeros((new_num_blocks,), jnp.bool_).at[:nb].set(pool.frozen)
+    parent = (
+        jnp.full((new_num_blocks,), NULL_BLOCK, jnp.int32).at[:nb].set(pool.parent)
+    )
+    dirty = (
+        jnp.zeros((new_num_blocks, pool.dirty.shape[1]), jnp.bool_)
+        .at[:nb]
+        .set(pool.dirty)
+    )
     fresh = jnp.arange(new_num_blocks - 1, nb - 1, -1, dtype=jnp.int32)
     stack = jnp.concatenate([fresh, pool.free_stack])
     return BlockPool(
@@ -428,6 +544,8 @@ def grow(pool: BlockPool, new_num_blocks: int) -> BlockPool:
         free_stack=stack,
         free_top=pool.free_top + g,
         oom=pool.oom,
+        parent=parent,
+        dirty=dirty,
     )
 
 
@@ -496,6 +614,13 @@ def compact(
     safe = jnp.where(perm >= 0, perm, 0)
     refcount = jnp.where(perm >= 0, pool.refcount[safe], 0)
     frozen = jnp.where(perm >= 0, pool.frozen[safe], False)
+    # Delta bookkeeping relocates with the block: rows permute like
+    # refcount, and parent *values* are ids, so they go through the
+    # remap (a live child's parent is live — the child's reference
+    # keeps it so — hence never remaps to NULL).
+    par_old = jnp.where(perm >= 0, pool.parent[safe], NULL_BLOCK)
+    parent = remap_tables(par_old, remap)
+    dirty = jnp.where((perm >= 0)[:, None], pool.dirty[safe], False)
     # Canonical stack over the dense free suffix: ids descending so pops
     # hand out ascending ids, same as a fresh pool.
     n_free = jnp.maximum(target - n_live, 0)
@@ -509,6 +634,8 @@ def compact(
         free_stack=stack,
         free_top=n_free,
         oom=oom,
+        parent=parent,
+        dirty=dirty,
     )
     return pool, remap
 
@@ -563,6 +690,10 @@ def refcount_matches_tables(pool: BlockPool, tables: jax.Array) -> jax.Array:
     nb = pool.num_blocks
     sids = _scatter_ids(nb, tables.reshape(-1).astype(jnp.int32))
     counts = jnp.zeros((nb,), jnp.int32).at[sids].add(1, mode="drop")
+    # Each delta child holds one refcount reference on its parent
+    # (DESIGN.md §3.2) — count those alongside the table references.
+    psids = _scatter_ids(nb, pool.parent)
+    counts = counts.at[psids].add(1, mode="drop")
     return jnp.all(counts == pool.refcount)
 
 

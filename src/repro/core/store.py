@@ -58,6 +58,7 @@ import jax.numpy as jnp
 from repro.core import pool as pool_lib
 from repro.core.config import CopyMode
 from repro.core.pool import NULL_BLOCK, BlockPool
+from repro.kernels.clone_chain import clone_chain as clone_chain_op
 from repro.kernels.cow_gather import cow_gather
 from repro.kernels.cow_write import cow_write
 from repro.kernels.refcount_update import refcount_update
@@ -69,6 +70,7 @@ __all__ = [
     "append",
     "write_at",
     "clone",
+    "clone_chain",
     "clone_partial",
     "read_at",
     "read_last",
@@ -101,6 +103,18 @@ class StoreConfig:
     # DESIGN.md §3).  Interpret mode on non-TPU backends; bit-exact with
     # the fused jnp fallback on every non-dump pool row.
     use_kernels: bool = False
+    # Sub-block delta COW (DESIGN.md §3.2): a write to a shared block
+    # copies only the slots the writer has materialized (the dirty mask)
+    # plus the written item, leaving the rest to resolve through the
+    # ``parent`` pointer — write-granular copies instead of
+    # block-granular ones.  Observationally equivalent to the
+    # whole-block path (valid-prefix trajectories, reads, lengths
+    # bit-exact); pool internals differ by construction (delta blocks
+    # zero-fill non-dirty slots, and parents outliving their children
+    # shift the free-stack order, so allocated block ids diverge).  Off
+    # by default: parents stay all-NULL and every op is value-identical
+    # to the pre-delta store.
+    delta_cow: bool = False
     # Opt-in loud-OOM path (DESIGN.md §3.1): trajectory / materialize /
     # materialize_batch refuse to read from a pool whose sticky ``oom``
     # flag is set — a host-side RuntimeError when called eagerly, a
@@ -234,12 +248,27 @@ def _write_impl(
     need_copy = (~fresh) & shared & mask
     need_block = fresh | need_copy
 
+    cur_safe = jnp.where(cur_bid >= 0, cur_bid, 0)
+    if cfg.delta_cow:
+        # Captured before any refcount traffic: sub_refs below may free
+        # ``cur`` and clear its delta bookkeeping.
+        dirty_cur = pool.dirty[cur_safe]  # [n, block_size]
+        par_cur = pool.parent[cur_safe]
+        # The new delta child's backing block: cur itself when cur is
+        # full, else cur's parent (delta depth stays <= 1).
+        root = jnp.where(need_copy & (par_cur >= 0), par_cur, cur_bid)
+
     pool, new_bid = pool_lib.alloc(pool, n, commit=need_block)
     # Transient peak: COW sources and their copies coexist until the
     # writer's reference is released below (a real allocator pays this).
     store = store._replace(
         peak_blocks=jnp.maximum(store.peak_blocks, pool_lib.blocks_in_use(pool))
     )
+    if cfg.delta_cow:
+        # The child's reference on its parent — added *before* the
+        # writer's reference on cur is released, so a parent shared only
+        # through cur never dips to refcount 0 in between.
+        pool = pool_lib.add_refs(pool, jnp.where(need_copy, root, NULL_BLOCK))
     # Release the writer's reference on blocks it copied away from.
     pool = pool_lib.sub_refs(pool, jnp.where(need_copy, cur_bid, NULL_BLOCK))
 
@@ -256,10 +285,45 @@ def _write_impl(
     # gave each its own copy.
     dst = jnp.where(mask & (bid >= 0), bid, pool.num_blocks)
     src = jnp.where(need_copy, cur_bid, dst)
-    data = cow_write(
-        pool.data, src, dst, pos, values, use_kernel=cfg.use_kernels
-    )
-    pool = pool._replace(data=data)
+    if not cfg.delta_cow:
+        data = cow_write(
+            pool.data, src, dst, pos, values, use_kernel=cfg.use_kernels
+        )
+        pool = pool._replace(data=data)
+    else:
+        # Sub-block delta COW (DESIGN.md §3.2).  A copy row keeps only
+        # the slots cur had materialized (its dirty mask; all-False when
+        # cur is full — the sparse win); in-place/fresh rows keep
+        # everything, recovering the whole-block merge.  Copy rows with
+        # nothing to keep stream the dump row instead of their source —
+        # the kernel then reads one zero block, not the shared payload.
+        keep = jnp.where(need_copy[:, None], dirty_cur, True)
+        src = jnp.where(need_copy & ~jnp.any(keep, axis=1), pool.num_blocks, src)
+        data = cow_write(
+            pool.data, src, dst, pos, values, keep=keep, use_kernel=cfg.use_kernels
+        )
+        pool = pool._replace(data=data)
+        # Dirty/parent bookkeeping for rows whose final block is a delta
+        # block: fresh allocations are full (pa = NULL), COW rows attach
+        # to root, in-place rows keep their existing parent.  A mask
+        # filling up degenerates the child back to a full block: parent
+        # cleared, mask cleared, the parent reference released — the
+        # payload is complete, so nothing resolves through root anymore.
+        pa = jnp.where(need_copy, root, jnp.where(fresh, NULL_BLOCK, par_cur))
+        mark = mask & (pa >= 0)
+        new_dirty = dirty_cur | (
+            jnp.arange(cfg.block_size, dtype=jnp.int32)[None, :] == pos[:, None]
+        )
+        deg = mark & jnp.all(new_dirty, axis=1)
+        dscat = jnp.where(mark, bid, pool.num_blocks)
+        dirty = pool.dirty.at[dscat].set(
+            jnp.where(deg[:, None], False, new_dirty), mode="drop"
+        )
+        parent = pool.parent.at[dscat].set(
+            jnp.where(deg, NULL_BLOCK, pa), mode="drop"
+        )
+        pool = pool._replace(dirty=dirty, parent=parent)
+        pool = pool_lib.sub_refs(pool, jnp.where(deg, pa, NULL_BLOCK))
     lengths = store.lengths + jnp.where(mask, 1, 0) if advance else store.lengths
     return store._replace(pool=pool, tables=tables, lengths=lengths)
 
@@ -295,9 +359,15 @@ def _clone_bookkeeping(
         use_kernel=cfg.use_kernels,
     )
     stack, top = pool_lib.push_free_mask(pool.free_stack, pool.free_top, freed)
-    return pool._replace(
+    pool = pool._replace(
         refcount=refcount, frozen=frozen, free_stack=stack, free_top=top
     )
+    if cfg.delta_cow:
+        # Freed delta children release their parent reference (the
+        # mask-shaped cascade; a value-level no-op when nothing freed
+        # was a delta block).
+        pool = pool_lib.release_parents(pool, freed)
+    return pool
 
 
 def clone(cfg: StoreConfig, store: ParticleStore, ancestors: jax.Array) -> ParticleStore:
@@ -321,6 +391,49 @@ def clone(cfg: StoreConfig, store: ParticleStore, ancestors: jax.Array) -> Parti
     pool = _clone_bookkeeping(cfg, store.pool, store.tables, new_tables)
     store = store._replace(pool=pool, tables=new_tables, lengths=lengths)
     return _bump_peak(cfg, store)
+
+
+def clone_chain(
+    cfg: StoreConfig, store: ParticleStore, key: jax.Array, logw: jax.Array
+) -> Tuple[ParticleStore, jax.Array]:
+    """Fused resample -> clone: systematic resampling and the lazy deep
+    copy in one pass over the tables (:mod:`repro.kernels.clone_chain`).
+
+    Returns ``(store', ancestors)``.  Ancestor-bit-exact with
+    ``clone(cfg, store, resampling.resample_systematic(key, logw))`` —
+    the fused op replicates that weight math verbatim — and the
+    resulting store is leaf-identical to the composed path.  EAGER has
+    no tables to fuse over, so it composes.
+    """
+    if cfg.mode is CopyMode.EAGER:
+        from repro.smc import resampling
+
+        ancestors = resampling.resample_systematic(key, logw)
+        return clone(cfg, store, ancestors), ancestors
+
+    ancestors, new_tables, delta, member = clone_chain_op(
+        key,
+        logw,
+        store.tables,
+        num_blocks=store.pool.num_blocks,
+        use_kernel=cfg.use_kernels,
+    )
+    # The same bookkeeping _clone_bookkeeping applies, fed by the fused
+    # op's histogram instead of a second table pass.
+    pool = store.pool
+    refcount = pool.refcount + delta
+    freed = (pool.refcount > 0) & (refcount == 0)
+    frozen = pool.frozen | member if cfg.mode is CopyMode.LAZY else pool.frozen
+    stack, top = pool_lib.push_free_mask(pool.free_stack, pool.free_top, freed)
+    pool = pool._replace(
+        refcount=refcount, frozen=frozen, free_stack=stack, free_top=top
+    )
+    if cfg.delta_cow:
+        pool = pool_lib.release_parents(pool, freed)
+    store = store._replace(
+        pool=pool, tables=new_tables, lengths=store.lengths[ancestors]
+    )
+    return _bump_peak(cfg, store), ancestors
 
 
 def clone_partial(
@@ -431,11 +544,37 @@ def read_at(cfg: StoreConfig, store: ParticleStore, positions: jax.Array) -> jax
         return store.dense[rows, positions]
     bs = cfg.block_size
     bid = store.tables[rows, positions // bs]
-    return store.pool.data[jnp.where(bid >= 0, bid, 0), positions % bs]
+    safe = jnp.where(bid >= 0, bid, 0)
+    out = store.pool.data[safe, positions % bs]
+    if cfg.delta_cow:
+        # Non-dirty slots of a delta block resolve through the parent.
+        res = pool_lib.parent_or_self(store.pool, bid)
+        base = store.pool.data[jnp.where(res >= 0, res, 0), positions % bs]
+        d = store.pool.dirty[safe, positions % bs] & (bid >= 0)
+        out = jnp.where(_expand(d, out.ndim), out, base)
+    return out
 
 
 def read_last(cfg: StoreConfig, store: ParticleStore) -> jax.Array:
     return read_at(cfg, store, jnp.maximum(store.lengths - 1, 0))
+
+
+def _delta_resolve(
+    cfg: StoreConfig, pool: BlockPool, tab_flat: jax.Array, blocks: jax.Array
+) -> jax.Array:
+    """Merge parent payload into the non-dirty slots of gathered blocks.
+
+    ``blocks`` is ``cow_gather(pool.data, tab_flat)``; delta blocks hold
+    zeros in their non-dirty slots, which this second gather fills from
+    the parent.  Full blocks gather themselves twice (dirty all-False
+    picks the identical base), NULL entries stay zero on both sides —
+    so with ``delta_cow`` off callers skip this entirely.
+    """
+    base = cow_gather(
+        pool.data, pool_lib.parent_or_self(pool, tab_flat), use_kernel=cfg.use_kernels
+    )
+    d = pool.dirty[jnp.where(tab_flat >= 0, tab_flat, 0)] & (tab_flat >= 0)[:, None]
+    return jnp.where(d.reshape(d.shape + (1,) * (blocks.ndim - 2)), blocks, base)
 
 
 def trajectory(cfg: StoreConfig, store: ParticleStore, i: int | jax.Array) -> jax.Array:
@@ -446,6 +585,8 @@ def trajectory(cfg: StoreConfig, store: ParticleStore, i: int | jax.Array) -> ja
     _check_oom(cfg, store, "trajectory")
     tab = store.tables[i]
     blocks = cow_gather(store.pool.data, tab, use_kernel=cfg.use_kernels)
+    if cfg.delta_cow:
+        blocks = _delta_resolve(cfg, store.pool, tab, blocks)
     return blocks.reshape((cfg.capacity, *cfg.item_shape))
 
 
@@ -478,6 +619,8 @@ def materialize_batch(
     blocks = cow_gather(
         store.pool.data, tab.reshape(-1), use_kernel=cfg.use_kernels
     )
+    if cfg.delta_cow:
+        blocks = _delta_resolve(cfg, store.pool, tab.reshape(-1), blocks)
     return blocks.reshape((ids.shape[0], cfg.capacity, *cfg.item_shape))
 
 

@@ -288,7 +288,14 @@ def store_specs(axis_name: str) -> ParticleStore:
     sp = P(axis_name)
     return ParticleStore(
         pool=BlockPool(
-            data=sp, refcount=sp, frozen=sp, free_stack=sp, free_top=sp, oom=sp
+            data=sp,
+            refcount=sp,
+            frozen=sp,
+            free_stack=sp,
+            free_top=sp,
+            oom=sp,
+            parent=sp,
+            dirty=sp,
         ),
         dense=sp,
         tables=sp,

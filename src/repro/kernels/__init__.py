@@ -7,6 +7,8 @@
 #   refcount_update  — fused clone bookkeeping (refcount delta + freeze
 #                      membership + newly-freed mask in one table pass)
 #   resample         — systematic resampling (tiled inverse-CDF counts)
+#   clone_chain      — fused resample -> table gather -> clone
+#                      bookkeeping (one pass instead of three dispatches)
 #   flash_attention  — train/prefill attention (causal + window + GQA)
 #   paged_attention  — decode attention over the COW block pool
 #   ssd_scan         — Mamba2 SSD chunked scan

@@ -1,0 +1,3 @@
+from repro.kernels.clone_chain.ops import clone_chain
+
+__all__ = ["clone_chain"]

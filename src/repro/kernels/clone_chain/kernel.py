@@ -1,0 +1,134 @@
+"""Pallas kernel: fused resample -> table gather -> clone bookkeeping.
+
+A resampling step of the lazy-copy platform is three dispatches over the
+same small tables today: the inverse-CDF ancestor search
+(:mod:`repro.kernels.resample`), the block-table gather
+(``tables[ancestors]``), and the refcount histogram
+(:mod:`repro.kernels.refcount_update`).  Each re-reads the tables from
+HBM.  This kernel does all three in **one pass**: per row chunk it
+
+  * counts the systematic comb against the full weight CDF
+    (``anc[j] = #{i : cum[i] < (j + u) / n}`` — exactly
+    ``searchsorted(cum, (j + u) / n, side="left")``),
+  * gathers the ancestors' table rows with a one-hot fp32 matmul
+    (exact for the small int32 block ids, including NULL = -1),
+  * accumulates the signed refcount histogram and the freeze-membership
+    mask of ``new - old`` into revisited ``[1, nb]`` outputs
+    (:mod:`repro.kernels.refcount_update`'s accumulation template).
+
+Grid: one step per row chunk; the CDF and the full table live in VMEM
+(population tables are KB-scale).  The chunk size adapts to the table
+width so the one-hot compare stays a bounded ``[chunk * mb, nb]`` tile.
+Padded rows gather NULL rows, so they drop out of the histogram for
+free.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: target table entries (rows * width) per grid step
+_ENTRIES = 1024
+
+
+def _kernel(
+    u_ref,  # [1] f32
+    cum_ref,  # [n] f32 — full CDF every step
+    tab_ref,  # [n, mb] int32 — full tables every step (gather source)
+    old_ref,  # [chunk, mb] int32 — this chunk's rows (old histogram)
+    anc_ref,  # [chunk] int32 out
+    new_ref,  # [chunk, mb] int32 out
+    delta_ref,  # [1, nb] int32 out, revisited
+    member_ref,  # [1, nb] bool out, revisited
+    *,
+    chunk: int,
+    n: int,
+    mb: int,
+    nb: int,
+):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        delta_ref[...] = jnp.zeros_like(delta_ref)
+        member_ref[...] = jnp.zeros_like(member_ref)
+
+    u = u_ref[0]
+    rows = i * chunk + jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)
+    t = (rows.astype(jnp.float32) + u) / n  # [chunk, 1] comb positions
+    c = cum_ref[...].reshape(1, n)
+    cnt = jnp.sum((c < t).astype(jnp.int32), axis=1)  # [chunk]
+    anc = jnp.clip(cnt, 0, n - 1)
+    anc_ref[...] = anc
+
+    # Gather the ancestors' table rows: one-hot fp32 matmul — exact for
+    # block ids (small ints, NULL = -1 included).
+    oh = (
+        anc[:, None] == jax.lax.broadcasted_iota(jnp.int32, (chunk, n), 1)
+    ).astype(jnp.float32)
+    newt = jax.lax.dot_general(
+        oh,
+        tab_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(jnp.int32)  # [chunk, mb]
+    # Rows past n are grid padding: park them on NULL so the histogram
+    # and membership below never see them.
+    newt = jnp.where(rows < n, newt, -1)
+    new_ref[...] = newt
+
+    # Fused clone bookkeeping: signed histogram + membership of this
+    # chunk's new/old entries against the block-id lane.
+    lane = jax.lax.broadcasted_iota(jnp.int32, (chunk * mb, nb), 1)
+    new_hits = newt.reshape(chunk * mb, 1) == lane
+    old_hits = old_ref[...].reshape(chunk * mb, 1) == lane
+    delta_ref[...] += (
+        new_hits.astype(jnp.int32) - old_hits.astype(jnp.int32)
+    ).sum(axis=0, keepdims=True)
+    member_ref[...] |= new_hits.any(axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("num_blocks", "interpret"))
+def clone_chain_pallas(
+    cum: jax.Array,  # [n] inclusive weight CDF, cum[-1] == 1
+    u: jax.Array,  # [1] uniform in [0, 1)
+    tables: jax.Array,  # [n, mb] int32 (NULL = -1 allowed)
+    *,
+    num_blocks: int,
+    interpret: bool = False,
+):
+    """Returns ``(ancestors [n], new_tables [n, mb], delta [nb], member [nb])``."""
+    n, mb = tables.shape
+    chunk = min(max(1, _ENTRIES // max(mb, 1)), n)
+    pad = (-n) % chunk
+    steps = (n + pad) // chunk
+    old_p = jnp.pad(tables, ((0, pad), (0, 0)), constant_values=-1)
+    kernel = functools.partial(_kernel, chunk=chunk, n=n, mb=mb, nb=num_blocks)
+    anc, new_tables, delta, member = pl.pallas_call(
+        kernel,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n, mb), lambda i: (0, 0)),
+            pl.BlockSpec((chunk, mb), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((chunk, mb), lambda i: (i, 0)),
+            pl.BlockSpec((1, num_blocks), lambda i: (0, 0)),
+            pl.BlockSpec((1, num_blocks), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n + pad,), jnp.int32),
+            jax.ShapeDtypeStruct((n + pad, mb), jnp.int32),
+            jax.ShapeDtypeStruct((1, num_blocks), jnp.int32),
+            jax.ShapeDtypeStruct((1, num_blocks), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(u, cum, tables, old_p)
+    return anc[:n], new_tables[:n], delta[0], member[0]

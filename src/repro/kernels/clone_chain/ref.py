@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the fused resample->clone->refcount chain.
+
+The composed path a resampling step takes today is three ops over the
+same data: systematic resampling (inverse-CDF search over the weight
+CDF), the table gather (``tables[ancestors]``), and the clone
+bookkeeping histogram (:mod:`repro.kernels.refcount_update`).  The
+oracle chains the exact same math, so the fused kernel has a bit-exact
+target: ancestors match :func:`repro.smc.resampling.resample_systematic`
+verbatim (``searchsorted(cum, (arange(n) + u) / n, side="left")``), and
+delta/member match :func:`refcount_delta_ref` on the gathered tables.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.refcount_update.ref import refcount_delta_ref
+
+
+def clone_chain_ref(
+    cum: jax.Array,  # [n] inclusive weight CDF, cum[-1] == 1
+    u: jax.Array,  # scalar uniform in [0, 1)
+    tables: jax.Array,  # [n, mb] int32 block tables (NULL = -1 allowed)
+    num_blocks: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Returns ``(ancestors [n], new_tables [n, mb], delta [nb], member [nb])``."""
+    n = cum.shape[0]
+    positions = (jnp.arange(n) + u) / n
+    ancestors = jnp.searchsorted(cum, positions, side="left").astype(jnp.int32)
+    new_tables = tables[ancestors]
+    delta, member = refcount_delta_ref(
+        new_tables.reshape(-1), tables.reshape(-1), num_blocks
+    )
+    return ancestors, new_tables, delta, member

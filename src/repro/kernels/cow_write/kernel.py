@@ -50,6 +50,75 @@ def _kernel(src_ref, dst_ref, pos_ref, data_ref, val_ref, out_ref):
     out_ref[...] = jnp.where(item_of_lane == pos, val_tiled, block)
 
 
+def _kernel_delta(src_ref, dst_ref, pos_ref, data_ref, val_ref, keep_ref, out_ref):
+    del src_ref, dst_ref  # consumed by the index maps
+    i = pl.program_id(0)
+    pos = pos_ref[i]
+    block = data_ref[...]  # [1, block_elems] — the source block
+    val = val_ref[...]  # [1, item_elems]
+    keep = keep_ref[...]  # [1, block_size] int32
+    be = block.shape[1]
+    ie = val.shape[1]
+    bs = be // ie
+    item_of_lane = jax.lax.broadcasted_iota(jnp.int32, (1, be), 1) // ie
+    val_tiled = jnp.broadcast_to(val.reshape(1, 1, ie), (1, bs, ie)).reshape(1, be)
+    keep_tiled = jnp.broadcast_to(keep.reshape(1, bs, 1), (1, bs, ie)).reshape(1, be)
+    # Delta merge: the written item wins at `pos`, kept slots copy the
+    # source, everything else is zero-filled (the delta-COW invariant).
+    out_ref[...] = jnp.where(
+        item_of_lane == pos,
+        val_tiled,
+        jnp.where(keep_tiled != 0, block, jnp.zeros_like(block)),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cow_write_delta_pallas(
+    data: jax.Array,  # [num_blocks + 1, block_elems]; trailing dump row
+    src: jax.Array,  # [n] int32 — block to stream (dump for skipped rows)
+    dst: jax.Array,  # [n] int32 — block to emit (dump for skipped rows)
+    pos: jax.Array,  # [n] int32 — item offset within the block
+    values: jax.Array,  # [n, item_elems]
+    keep: jax.Array,  # [n, block_size] int32 — slots copied from src
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    n = src.shape[0]
+    block_elems = data.shape[1]
+    item_elems = values.shape[1]
+    block_size = keep.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec(
+                (1, block_elems),
+                lambda i, src_ref, dst_ref, pos_ref: (src_ref[i], 0),
+            ),
+            pl.BlockSpec(
+                (1, item_elems),
+                lambda i, src_ref, dst_ref, pos_ref: (i, 0),
+            ),
+            pl.BlockSpec(
+                (1, block_size),
+                lambda i, src_ref, dst_ref, pos_ref: (i, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_elems),
+            lambda i, src_ref, dst_ref, pos_ref: (dst_ref[i], 0),
+        ),
+    )
+    return pl.pallas_call(
+        _kernel_delta,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(data.shape, data.dtype),
+        input_output_aliases={3: 0},  # flat operand 3 = `data` (after 3 prefetch args)
+        interpret=interpret,
+    )(src, dst, pos, data, values, keep)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def cow_write_pallas(
     data: jax.Array,  # [num_blocks + 1, block_elems]; trailing dump row

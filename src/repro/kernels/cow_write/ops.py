@@ -10,9 +10,10 @@ every non-dump row (the dump row's content is unspecified — see
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
-from repro.kernels.cow_write.kernel import cow_write_pallas
-from repro.kernels.cow_write.ref import cow_write_ref
+from repro.kernels.cow_write.kernel import cow_write_delta_pallas, cow_write_pallas
+from repro.kernels.cow_write.ref import cow_write_delta_ref, cow_write_ref
 from repro.kernels.dispatch import resolve_kernel_mode
 
 
@@ -23,6 +24,7 @@ def cow_write(
     pos: jax.Array,
     values: jax.Array,
     *,
+    keep: jax.Array | None = None,
     use_kernel: bool | None = None,
     interpret: bool = False,
 ) -> jax.Array:
@@ -31,15 +33,33 @@ def cow_write(
     data: [num_blocks + 1, *block_shape] (trailing dump row);
     src/dst/pos: [n] int32 (dump-routed rows are skipped);
     values: [n, *item_shape].  Returns the updated data array.
+
+    ``keep`` (``[n, block_size]`` bool, optional) selects the sub-block
+    delta path: only kept slots are copied from the source block, the
+    rest of the emitted block is zero-filled, and the written item still
+    lands at ``pos``.  ``keep=None`` is the whole-block path, byte-for-
+    byte the pre-delta kernel invocation.
     """
     use_kernel, interpret = resolve_kernel_mode(use_kernel, interpret)
-    if not use_kernel:
-        out = cow_write_ref(data, src, dst, pos, values)
+    if keep is None:
+        if not use_kernel:
+            out = cow_write_ref(data, src, dst, pos, values)
+        else:
+            shape = data.shape
+            flat = data.reshape(shape[0], -1)
+            vals = values.reshape(values.shape[0], -1).astype(data.dtype)
+            out = cow_write_pallas(flat, src, dst, pos, vals, interpret=interpret)
+            out = out.reshape(shape)
+    elif not use_kernel:
+        out = cow_write_delta_ref(data, src, dst, pos, values, keep)
     else:
         shape = data.shape
         flat = data.reshape(shape[0], -1)
         vals = values.reshape(values.shape[0], -1).astype(data.dtype)
-        out = cow_write_pallas(flat, src, dst, pos, vals, interpret=interpret)
+        out = cow_write_delta_pallas(
+            flat, src, dst, pos, vals, keep.astype(jnp.int32),
+            interpret=interpret,
+        )
         out = out.reshape(shape)
     # Skipped rows self-copied the dump row in whatever order the backend
     # chose; re-zero it so pools compare leaf-for-leaf across paths.

@@ -28,3 +28,24 @@ def cow_write_ref(
     blocks = data[src]  # [n, block_size, *item]
     blocks = blocks.at[jnp.arange(n), pos].set(values.astype(data.dtype))
     return data.at[dst].set(blocks)
+
+
+def cow_write_delta_ref(
+    data: jax.Array,  # [num_blocks + 1, *block_shape]
+    src: jax.Array,  # [n] int32
+    dst: jax.Array,  # [n] int32
+    pos: jax.Array,  # [n] int32
+    values: jax.Array,  # [n, *item_shape]
+    keep: jax.Array,  # [n, block_size] bool — slots copied from src
+) -> jax.Array:
+    """Sub-block delta variant: non-kept slots of the emitted block are
+    *zeroed* rather than copied (the delta-COW zero-fill invariant — see
+    ``repro.core.pool.BlockPool.dirty``), the written item lands at
+    ``pos`` regardless of its keep bit.  ``keep`` all-True recovers
+    :func:`cow_write_ref` exactly."""
+    n = src.shape[0]
+    blocks = data[src]  # [n, block_size, *item]
+    kexp = keep.reshape(keep.shape + (1,) * (blocks.ndim - 2))
+    blocks = jnp.where(kexp, blocks, 0)
+    blocks = blocks.at[jnp.arange(n), pos].set(values.astype(data.dtype))
+    return data.at[dst].set(blocks)

@@ -9,12 +9,43 @@ between the COW kernel packages.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+import importlib
+from typing import Callable, Optional, Tuple
 
 import jax
 
 #: backends the dispatch policy knows how to route
 KNOWN_BACKENDS = ("tpu", "gpu", "cpu")
+
+#: kernel-op registry: public op name -> (subpackage, entry point).  One
+#: authoritative list of the dispatchable ops, so callers (and tests)
+#: can resolve an op by name without hard-coding package paths — and a
+#: new kernel package isn't "live" until it is registered here.
+KNOWN_OPS = {
+    "cow_gather": ("repro.kernels.cow_gather", "cow_gather"),
+    "cow_write": ("repro.kernels.cow_write", "cow_write"),
+    "refcount_update": ("repro.kernels.refcount_update", "refcount_update"),
+    "resample": ("repro.kernels.resample", "resample_systematic_kernel"),
+    "clone_chain": ("repro.kernels.clone_chain", "clone_chain"),
+    "flash_attention": ("repro.kernels.flash_attention", "flash_attention"),
+    "paged_attention": ("repro.kernels.paged_attention", "paged_attention"),
+    "ssd_scan": ("repro.kernels.ssd_scan", "ssd_scan"),
+}
+
+
+def get_op(name: str) -> Callable:
+    """Resolve a registered kernel op to its public entry point.
+
+    Imports lazily (the registry stays importable without pulling every
+    kernel package) and raises on unknown names, mirroring the
+    unknown-backend policy below.
+    """
+    if name not in KNOWN_OPS:
+        raise ValueError(
+            f"unknown kernel op {name!r}; expected one of {tuple(KNOWN_OPS)}"
+        )
+    module, attr = KNOWN_OPS[name]
+    return getattr(importlib.import_module(module), attr)
 
 
 def resolve_kernel_mode(

@@ -78,6 +78,134 @@ def _kernel(
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
+def _kernel_delta(
+    tables_ref, lens_ref, parent_ref,  # scalar prefetch: [B, nb], [B], [num_blocks]
+    q_ref,  # [1, 1, G, d]
+    k_ref, v_ref,  # [1, bs, 1, d] — the page itself
+    kp_ref, vp_ref,  # [1, bs, 1, d] — its delta parent (self for full pages)
+    dirty_ref,  # [1, bs] int32 — dirty mask row of the page
+    o_ref,  # [1, 1, G, d]
+    m_ref, l_ref, acc_ref,  # scratch [G, 128], [G, 128], [G, d]
+    *,
+    scale: float,
+    bs: int,
+    nb: int,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lens_ref[b]
+    valid_block = jnp.logical_and(j * bs < length, tables_ref[b, j] >= 0)
+
+    @pl.when(valid_block)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # [G, d]
+        drow = dirty_ref[0, :]  # [bs] int32
+        # Per-slot select: dirty slots come from the page, the rest from
+        # its parent — uniform (no branch), and a full page selects its
+        # own (identical) stream on both sides.
+        k = jnp.where(
+            drow[:, None] != 0, k_ref[0, :, 0, :], kp_ref[0, :, 0, :]
+        ).astype(jnp.float32)  # [bs, d]
+        v = jnp.where(
+            drow[:, None] != 0, v_ref[0, :, 0, :], vp_ref[0, :, 0, :]
+        ).astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [G, bs]
+        pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(j == nb - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_attention_delta_pallas(
+    q: jax.Array,  # [B, H, d]
+    k_pool: jax.Array,  # [num_blocks (+1), bs, KVH, d]
+    v_pool: jax.Array,
+    tables: jax.Array,  # [B, nb] int32
+    lengths: jax.Array,  # [B] int32
+    parent: jax.Array,  # [num_blocks] int32
+    dirty: jax.Array,  # [num_blocks, bs] int32
+    *,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, d = q.shape
+    nb = tables.shape[1]
+    bs, kvh = k_pool.shape[1], k_pool.shape[2]
+    g = h // kvh
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, kvh, g, d)
+
+    def _self_idx(bb, hh, j, tables_ref, lens_ref, parent_ref):
+        return (jnp.maximum(tables_ref[bb, j], 0), 0, hh, 0)
+
+    def _parent_idx(bb, hh, j, tables_ref, lens_ref, parent_ref):
+        t = jnp.maximum(tables_ref[bb, j], 0)
+        p = parent_ref[t]
+        return (jnp.where(p >= 0, p, t), 0, hh, 0)
+
+    kernel = functools.partial(_kernel_delta, scale=scale, bs=bs, nb=nb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, kvh, nb),
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, g, d),
+                lambda bb, hh, j, tables_ref, lens_ref, parent_ref: (bb, hh, 0, 0),
+            ),
+            pl.BlockSpec((1, bs, 1, d), _self_idx),
+            pl.BlockSpec((1, bs, 1, d), _self_idx),
+            pl.BlockSpec((1, bs, 1, d), _parent_idx),
+            pl.BlockSpec((1, bs, 1, d), _parent_idx),
+            pl.BlockSpec(
+                (1, bs),
+                lambda bb, hh, j, tables_ref, lens_ref, parent_ref: (
+                    jnp.maximum(tables_ref[bb, j], 0), 0
+                ),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, d),
+            lambda bb, hh, j, tables_ref, lens_ref, parent_ref: (bb, hh, 0, 0),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
+        interpret=interpret,
+    )(tables, lengths, parent, qg, k_pool, v_pool, k_pool, v_pool, dirty)
+    return out.reshape(b, h, d)
+
+
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
 def paged_attention_pallas(
     q: jax.Array,  # [B, H, d]

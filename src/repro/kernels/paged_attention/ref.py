@@ -15,6 +15,8 @@ def paged_attention_ref(
     tables: jax.Array,  # [B, nb]
     lengths: jax.Array,  # [B]
     *,
+    parent: jax.Array | None = None,  # [num_blocks] int32 delta parents
+    dirty: jax.Array | None = None,  # [num_blocks, bs] bool dirty mask
     scale: float | None = None,
 ) -> jax.Array:
     b, h, d = q.shape
@@ -24,8 +26,18 @@ def paged_attention_ref(
     if scale is None:
         scale = 1.0 / math.sqrt(d)
     tab = jnp.maximum(tables, 0)
-    k = k_pool[tab].reshape(b, nb * bs, kvh, d)
-    v = v_pool[tab].reshape(b, nb * bs, kvh, d)
+    if parent is None:
+        k = k_pool[tab].reshape(b, nb * bs, kvh, d)
+        v = v_pool[tab].reshape(b, nb * bs, kvh, d)
+    else:
+        # COW-native delta resolution (DESIGN.md §3.2/§7): a delta page's
+        # non-dirty token slots read through its parent — shared pages
+        # are attended in place, with no materialization pass.
+        par = parent[tab]
+        res = jnp.where(par >= 0, par, tab)  # [B, nb]
+        sel = dirty[tab][..., None, None]  # [B, nb, bs, 1, 1]
+        k = jnp.where(sel, k_pool[tab], k_pool[res]).reshape(b, nb * bs, kvh, d)
+        v = jnp.where(sel, v_pool[tab], v_pool[res]).reshape(b, nb * bs, kvh, d)
     qg = q.reshape(b, kvh, g, d).astype(jnp.float32)
     s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32)) * scale
     pos = jnp.arange(nb * bs)[None, :]

@@ -1,5 +1,11 @@
 from repro.roofline.analysis import TPU_V5E, Roofline, analyze_compiled
-from repro.roofline.write_path import WRITE_PATHS, WriteCost, append_cost, clone_cost
+from repro.roofline.write_path import (
+    WRITE_PATHS,
+    WriteCost,
+    append_cost,
+    chain_cost,
+    clone_cost,
+)
 
 __all__ = [
     "TPU_V5E",
@@ -8,5 +14,6 @@ __all__ = [
     "WRITE_PATHS",
     "WriteCost",
     "append_cost",
+    "chain_cost",
     "clone_cost",
 ]

@@ -65,6 +65,8 @@ def append_cost(
     num_blocks: int,
     block_bytes: int,
     item_bytes: int,
+    delta: bool = False,
+    dirty_items: int = 0,
 ) -> WriteCost:
     """One ``append``/``write_at`` over ``n`` rows.
 
@@ -72,6 +74,18 @@ def append_cost(
     ``copies``: the subset that COWs a shared block.  For the paper's
     motivating append-heavy pattern ``touched == n`` and ``copies`` is
     the post-resampling divergence front.
+
+    ``delta`` (kernel path only) prices the sub-block delta COW of
+    DESIGN.md §3.2: a COW moves only the ``dirty_items`` slots the
+    writer has materialized — touched-slice bytes plus the dirty-bitmask
+    and parent-pointer bookkeeping — instead of ``block_bytes``.  A
+    single-element write to a freshly shared full block has
+    ``dirty_items == 0``: the copy reads the (cache-resident, charged 0)
+    dump row and moves no payload at all.  A write that fills the mask
+    (``dirty_items == block_size - 1``) degenerates the page back to a
+    full block: it pays the near-whole-block slice but sheds the
+    mask/parent overhead, so a dense delta COW never exceeds the
+    whole-block kernel cost.
     """
     if path == "legacy":
         scan = 2 * num_blocks * _ID  # nonzero over the free mask
@@ -88,9 +102,23 @@ def append_cost(
         bookkeeping = 3 * 2 * n * _ID + 2 * n * _ID  # alloc pops + claim push
         return WriteCost(passes=3, bytes=gather + scatter + bookkeeping)
     if path == "kernel":
-        data = 2 * touched * block_bytes  # one read + one write per touched row
         scalars = 3 * n * _ID + n * item_bytes  # prefetched src/dst/pos + values
         bookkeeping = 3 * 2 * n * _ID
+        if delta:
+            block_size = max(block_bytes // max(item_bytes, 1), 1)
+            di = min(dirty_items, block_size - 1)
+            # The COW copy streams only the materialized slice.
+            data = 2 * copies * di * item_bytes
+            # Dirty-bitmask row + parent pointer, read and rewritten per
+            # touched row — unless this write fills the mask, in which
+            # case the page degenerates and the bookkeeping is cleared
+            # rather than carried.
+            mask_bytes = -(-block_size // 8)
+            overhead = (
+                0 if di + 1 >= block_size else 2 * touched * (mask_bytes + _ID)
+            )
+            return WriteCost(passes=2, bytes=data + overhead + scalars + bookkeeping)
+        data = 2 * touched * block_bytes  # one read + one write per touched row
         return WriteCost(passes=2, bytes=data + scalars + bookkeeping)
     raise ValueError(f"unknown write path {path!r}; want one of {WRITE_PATHS}")
 
@@ -146,4 +174,35 @@ def clone_cost(
         refcount = 2 * num_blocks * _ID  # one delta apply
         push = 2 * num_blocks * _ID  # newly-freed mask -> stack
         return WriteCost(passes=1, bytes=tables + refcount + push)
+    raise ValueError(f"unknown write path {path!r}; want one of {WRITE_PATHS}")
+
+
+def chain_cost(
+    path: str,
+    *,
+    n: int,
+    table_entries: int,
+    num_blocks: int,
+) -> WriteCost:
+    """One full resampling step: systematic resample -> table gather ->
+    clone bookkeeping (``table_entries = n * max_blocks``).
+
+    ``legacy``/``fused_jnp`` is the composed path — three dispatches,
+    each re-reading its operands from HBM: the inverse-CDF search (CDF
+    build + ancestor write), the ancestor-indexed table gather, and the
+    single-pass clone bookkeeping over new + old tables.  ``kernel`` is
+    the fused :mod:`repro.kernels.clone_chain` op: the tables are read
+    **once** and the ancestors never round-trip through HBM between
+    stages — one pass instead of three.
+    """
+    if path in ("legacy", "fused_jnp"):
+        resample = 3 * n * _ID  # logw/CDF read + ancestor write
+        gather = 2 * table_entries * _ID  # ancestors' rows read, new written
+        bookkeeping = 2 * table_entries * _ID + 2 * num_blocks * _ID
+        return WriteCost(passes=3, bytes=resample + gather + bookkeeping)
+    if path == "kernel":
+        resample = 2 * n * _ID  # CDF read once, ancestors written once
+        tables = 2 * table_entries * _ID  # old read once, new written once
+        refcount = 2 * num_blocks * _ID  # one delta apply
+        return WriteCost(passes=1, bytes=resample + tables + refcount)
     raise ValueError(f"unknown write path {path!r}; want one of {WRITE_PATHS}")

@@ -141,7 +141,10 @@ class ServeEngine:
 # ---------------------------------------------------------------------------
 
 
-def _attn_block(cfg: ModelConfig, p, h, cache, bid, pos, layer, mask, lengths_incl):
+def _attn_block(
+    cfg: ModelConfig, ccfg: KVCacheConfig, p, h, cache, bid, pos, layer, mask,
+    lengths_incl,
+):
     """One attention sub-block in paged-decode mode. h: [S, 1, D]."""
     hn = rms_norm(h, p["ln1"]["scale"], cfg.norm_eps)
     q, k_new, v_new = attn_lib.qkv_proj(p["attn"], hn, cfg)
@@ -149,26 +152,19 @@ def _attn_block(cfg: ModelConfig, p, h, cache, bid, pos, layer, mask, lengths_in
     q = attn_lib.apply_rope(q, position[:, None], cfg.rope_theta)
     k_new = attn_lib.apply_rope(k_new, position[:, None], cfg.rope_theta)
     cache = kvc.write_kv(
-        cfg_kv(cfg, cache), cache, bid, pos, layer, k_new[:, 0], v_new[:, 0], mask
+        ccfg, cache, bid, pos, layer, k_new[:, 0], v_new[:, 0], mask
     )
     k_pool, v_pool = kvc.layer_views(cache, layer)
+    # COW-native decode: under delta COW the attention gather resolves
+    # delta pages through parent/dirty in place — no materialize pass.
+    delta = dict(
+        parent=cache.pool.parent, dirty=cache.pool.dirty
+    ) if ccfg.delta_cow else {}
     out = paged_attention(
-        q[:, 0], k_pool, v_pool, cache.tables, lengths_incl
+        q[:, 0], k_pool, v_pool, cache.tables, lengths_incl, **delta
     )
     h = h + attn_lib.out_proj(p["attn"], out[:, None])
     return h, cache
-
-
-def cfg_kv(cfg: ModelConfig, cache: PagedKVCache) -> KVCacheConfig:
-    # lightweight reconstruction (only fields used by write paths)
-    return KVCacheConfig(
-        n_layers=cfg.n_layers,
-        n_kv_heads=cfg.n_kv_heads,
-        head_dim=cfg.hd,
-        block_size=cache.pool.data.shape[3],
-        max_seqs=cache.tables.shape[0],
-        max_blocks_per_seq=cache.tables.shape[1],
-    )
 
 
 def _decode_step(
@@ -189,7 +185,9 @@ def _decode_step(
 
     if cfg.family == "moe" and cfg.first_layer_dense:
         p0 = params["block0"]
-        x, cache = _attn_block(cfg, p0, x, cache, bid, pos, 0, mask, lengths_incl)
+        x, cache = _attn_block(
+            cfg, ccfg, p0, x, cache, bid, pos, 0, mask, lengths_incl
+        )
         x = x + mlp(p0["mlp"], rms_norm(x, p0["ln2"]["scale"], cfg.norm_eps), cfg.act)
 
     # scan over layers with the cache data threaded through the carry
@@ -198,7 +196,7 @@ def _decode_step(
         p, layer_idx = inp
         cache_l = cache._replace(pool=cache.pool._replace(data=data))
         h, cache_l = _attn_block(
-            cfg, p, h, cache_l, bid, pos, layer_idx, mask, lengths_incl
+            cfg, ccfg, p, h, cache_l, bid, pos, layer_idx, mask, lengths_incl
         )
         hn = rms_norm(h, p["ln2"]["scale"], cfg.norm_eps)
         if cfg.family == "moe":

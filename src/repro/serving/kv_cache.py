@@ -47,6 +47,14 @@ class KVCacheConfig:
     max_blocks_per_seq: int = 64
     num_blocks: int = 0  # 0 = auto (sparse-bound sized)
     dtype: str = "float32"
+    # Sub-block delta COW (DESIGN.md §3.2): a mid-page fork's COW copy
+    # moves only the token slots the tail block has materialized (plus
+    # bookkeeping) instead of the whole ``[L, 2, bs, KVH, hd]`` page;
+    # the untouched prefix resolves through the parent page.  Paged
+    # attention reads through ``pool.parent``/``pool.dirty`` directly
+    # (COW-native decode), so no materialization is ever needed.  Off by
+    # default — parents stay all-NULL and behavior is value-identical.
+    delta_cow: bool = False
 
     @property
     def pool_blocks(self) -> int:
@@ -78,6 +86,7 @@ def create(cfg: KVCacheConfig) -> PagedKVCache:
         cfg.pool_blocks,
         (cfg.n_layers, 2, cfg.block_size, cfg.n_kv_heads, cfg.head_dim),
         jnp.dtype(cfg.dtype),
+        npos=cfg.block_size,  # dirty mask tracks the token-position axis
     )
     return PagedKVCache(
         pool=pool,
@@ -124,16 +133,61 @@ def ensure_writable(
     # request in a high slot could spuriously OOM while blocks are free.
     # ``alloc_compact`` succeeds whenever ``sum(need_block)`` blocks are
     # free, and is bit-identical to ``alloc`` for dense-prefix masks.
+    cur_safe = jnp.where(cur >= 0, cur, 0)
+    if cfg.delta_cow:
+        # Captured before refcount traffic: sub_refs below may free cur
+        # and clear its delta bookkeeping.
+        dirty_cur = cache.pool.dirty[cur_safe]  # [S, bs]
+        par_cur = cache.pool.parent[cur_safe]
+        root = jnp.where(need_copy & (par_cur >= 0), par_cur, cur)
+
     pool, new_bid = pool_lib.alloc_compact(cache.pool, n, commit=need_block)
-    # Rows that don't COW read the dump row instead of materializing a
-    # live block's copy (same masked-gather fix as store._write_impl).
-    src = jnp.where(need_copy, cur, pool.num_blocks)
-    pool = pool_lib.write_blocks(pool, new_bid, pool.data[src], mask=need_copy)
+    if cfg.delta_cow:
+        # The child's reference on its parent, added before the writer's
+        # reference on cur is released (no transient zero on the parent).
+        pool = pool_lib.add_refs(pool, jnp.where(need_copy, root, NULL_BLOCK))
+        # Delta copy: move only the token slots cur materialized; rows
+        # with nothing to keep read the dump row (a zero page) instead
+        # of the shared payload.
+        src = jnp.where(
+            need_copy & jnp.any(dirty_cur, axis=1), cur, pool.num_blocks
+        )
+        payload = jnp.where(
+            dirty_cur[:, None, None, :, None, None], pool.data[src], 0
+        )
+        pool = pool_lib.write_blocks(pool, new_bid, payload, mask=need_copy)
+    else:
+        # Rows that don't COW read the dump row instead of materializing a
+        # live block's copy (same masked-gather fix as store._write_impl).
+        src = jnp.where(need_copy, cur, pool.num_blocks)
+        pool = pool_lib.write_blocks(pool, new_bid, pool.data[src], mask=need_copy)
     pool = pool_lib.sub_refs(pool, jnp.where(need_copy, cur, NULL_BLOCK))
     bid = jnp.where(need_block, new_bid, cur)
     tables = cache.tables.at[rows, idx].set(
         jnp.where(mask, bid, cache.tables[rows, idx])
     )
+    if cfg.delta_cow:
+        # Delta bookkeeping for rows whose resolved block is a delta
+        # page: fresh pages are full, COW rows attach to root, in-place
+        # rows keep their parent.  The incoming token's slot is marked
+        # dirty *here* — every layer's write_kv then lands in a slot the
+        # read path already resolves locally, so write_kv is unchanged.
+        # A mask filling up degenerates the page back to a full block.
+        pa = jnp.where(need_copy, root, jnp.where(fresh, NULL_BLOCK, par_cur))
+        mark = mask & (pa >= 0)
+        new_dirty = dirty_cur | (
+            jnp.arange(bs, dtype=jnp.int32)[None, :] == pos[:, None]
+        )
+        deg = mark & jnp.all(new_dirty, axis=1)
+        dscat = jnp.where(mark, bid, pool.num_blocks)
+        dirty = pool.dirty.at[dscat].set(
+            jnp.where(deg[:, None], False, new_dirty), mode="drop"
+        )
+        parent = pool.parent.at[dscat].set(
+            jnp.where(deg, NULL_BLOCK, pa), mode="drop"
+        )
+        pool = pool._replace(dirty=dirty, parent=parent)
+        pool = pool_lib.sub_refs(pool, jnp.where(deg, pa, NULL_BLOCK))
     return PagedKVCache(pool=pool, tables=tables, lengths=cache.lengths), bid, pos
 
 

@@ -1237,7 +1237,7 @@ class Scheduler:
         mask = jnp.zeros((S,), jnp.bool_)
         pending: List[tuple] = []
         for s in self._active:
-            s.key, token, s.logw, s.logz, ess, do_res, anc = smc_token_update(
+            s.key, token, s.logw, s.logz, ess, do_res, anc, k_res = smc_token_update(
                 s.key,
                 s.logits,
                 s.logw,
@@ -1259,7 +1259,10 @@ class Scheduler:
                         extra=s.trace.append_need,
                     )
                 eng.fork_slots(s.lo, anc)  # zero-copy clone of KV lineages
-                s.trace.clone(anc)  # refcount bump, not an O(N·T) gather
+                # Fused resample->clone of the token histories: the
+                # chain op re-derives the identical ancestors from
+                # (k_res, logw) inside one pass over the tables.
+                s.trace.clone_chain(k_res, s.logw)
                 token = token[anc]
                 s.logw = jnp.full((s.n,), -math.log(s.n))
                 s.forks[s.t_done] = np.asarray(anc)

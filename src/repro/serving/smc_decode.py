@@ -96,6 +96,24 @@ class _TokenTrace:
         else:
             self.store = store_lib.clone(self.cfg, self.store, ancestors)
 
+    def clone_chain(self, key: jax.Array, logw: jax.Array) -> jax.Array:
+        """Fused resample->clone (kernels/clone_chain): draw the
+        systematic ancestors and clone the histories in one pass over
+        the tables; returns the ancestor vector — bit-exact with
+        ``resample_systematic(key, logw)`` followed by :meth:`clone`.
+        A sharded trace composes (its clone is the cross-shard
+        exchange, not a table pass); so does EAGER, inside the store
+        wrapper.
+        """
+        if self.mesh is not None:
+            ancestors = resampling.resample_systematic(key, logw)
+            self.clone(ancestors)
+            return ancestors
+        self.store, ancestors = store_lib.clone_chain(
+            self.cfg, self.store, key, logw
+        )
+        return ancestors
+
     def oom(self) -> bool:
         return bool(store_lib.oom_flag(self.cfg, self.store))
 
@@ -245,9 +263,13 @@ def smc_token_update(
     loop and the continuous-batching scheduler (DESIGN.md §8), so a
     scheduled request is token-bit-exact with a standalone run.
 
-    Returns ``(key, token, logw, logz, ess, do_resample, ancestors)``;
-    ``ancestors`` is ``None`` unless ``do_resample``.  The caller owns
-    the side effects (KV fork, trace clone, token reindex).
+    Returns ``(key, token, logw, logz, ess, do_resample, ancestors,
+    k_res)``; ``ancestors`` is ``None`` unless ``do_resample``.  The
+    caller owns the side effects (KV fork, trace clone, token reindex);
+    ``k_res`` is the key ``ancestors`` was drawn with, so a caller can
+    hand it to the fused :meth:`_TokenTrace.clone_chain` (which
+    re-derives the identical ancestors inside the one-pass
+    resample->clone kernel).
     """
     key, k_samp, k_res = jax.random.split(key, 3)
     logp_prop = jax.nn.log_softmax(logits / proposal_temp, axis=-1)
@@ -263,7 +285,7 @@ def smc_token_update(
     ess = resampling.ess(logw)
     do_resample = bool(ess < ess_threshold * n)
     ancestors = resampling.resample_systematic(k_res, logw) if do_resample else None
-    return key, token, logw, logz, ess, do_resample, ancestors
+    return key, token, logw, logz, ess, do_resample, ancestors, k_res
 
 
 class SMCDecoder:
@@ -285,6 +307,7 @@ class SMCDecoder:
         kv_num_blocks: int = 0,
         grow_stores: bool = True,
         grow_factor: float = 2.0,
+        kv_delta_cow: bool = False,
     ):
         from repro.serving.kv_cache import KVCacheConfig
 
@@ -298,6 +321,7 @@ class SMCDecoder:
             max_blocks_per_seq=-(-max_len // block_size),
             num_blocks=kv_num_blocks,
             dtype=cfg.dtype,
+            delta_cow=kv_delta_cow,
         )
         self.engine = ServeEngine(lm, params, cache_cfg)
         self.n = n_particles

@@ -334,6 +334,15 @@ class ParticleFilter:
         cfg, ssm, scfg = self.config, self.ssm, self.store_cfg
         n = cfg.n_particles
         clone_state = ssm.clone_state or _default_clone
+        # Fused resample->clone (kernels/clone_chain): one pass over the
+        # tables instead of three dispatches.  Only the plain systematic
+        # path fuses — cSMC rewrites the ancestor vector between the
+        # resample and the clone, and EAGER has no tables to fuse over.
+        fuse_chain = (
+            cfg.resampler == "systematic"
+            and csmc is None
+            and scfg.mode is not CopyMode.EAGER
+        )
 
         def maybe_resample(key, t, state, store, logw):
             if simulate:
@@ -351,15 +360,19 @@ class ParticleFilter:
                     lw = resampling.normalize(
                         logw + ssm.lookahead(state, t, obs_t, params)
                     )
-                ancestors = self._resample(key, lw)
-                if csmc is not None:
-                    # Conditional SMC: particle 0 keeps the reference lineage.
-                    _, use_ref = csmc
-                    ancestors = jnp.where(
-                        use_ref, ancestors.at[0].set(0), ancestors
-                    )
+                if fuse_chain:
+                    store, ancestors = store_lib.clone_chain(scfg, store, key, lw)
+                else:
+                    ancestors = self._resample(key, lw)
+                    if csmc is not None:
+                        # Conditional SMC: particle 0 keeps the
+                        # reference lineage.
+                        _, use_ref = csmc
+                        ancestors = jnp.where(
+                            use_ref, ancestors.at[0].set(0), ancestors
+                        )
+                    store = store_lib.clone(scfg, store, ancestors)
                 state = clone_state(state, ancestors)
-                store = store_lib.clone(scfg, store, ancestors)
                 # APF correction: carried weight becomes w/mu of ancestor.
                 new_logw = jnp.full((n,), -math.log(n))
                 if ssm.lookahead is not None:

@@ -1,0 +1,22 @@
+"""GOOD: the sanctioned delta-COW write idiom — thread the cache through
+``ensure_writable`` before any ``write_kv``, once per token for all
+layers."""
+
+from repro.serving import kv_cache as kvc
+
+
+def token_write(cfg, cache, ks, vs, mask):
+    cache, bid, pos = kvc.ensure_writable(cfg, cache, mask)
+    for layer in range(cfg.n_layers):
+        cache = kvc.write_kv(cfg, cache, bid, pos, layer, ks[layer], vs[layer], mask)
+    return kvc.advance(cache, mask)
+
+
+def checkpoint_is_fine(cfg, cache, mask):
+    # Holding an old state for rollback is sanctioned as long as the old
+    # binding is never passed back into the API.
+    saved = cache
+    cache, bid, pos = kvc.ensure_writable(cfg, cache, mask)
+    if bid is None:
+        return saved
+    return cache

@@ -90,3 +90,86 @@ class TestRouting:
         out = ops.cow_gather(pool, table, use_kernel=True, interpret=True)
         np.testing.assert_allclose(np.asarray(out), np.asarray(pool)[[1, 2]])
         assert calls["pallas"] == 1 and calls["ref"] == 0
+
+
+class TestOpRegistry:
+    """KNOWN_OPS names every kernel entry point and resolves lazily."""
+
+    def test_registry_resolves_every_op(self):
+        from repro.kernels.dispatch import KNOWN_OPS, get_op
+
+        assert set(KNOWN_OPS) == {
+            "cow_gather",
+            "cow_write",
+            "refcount_update",
+            "resample",
+            "clone_chain",
+            "flash_attention",
+            "paged_attention",
+            "ssd_scan",
+        }
+        for name in KNOWN_OPS:
+            assert callable(get_op(name)), name
+
+    def test_get_op_returns_public_entry_point(self):
+        from repro.kernels.clone_chain import clone_chain
+        from repro.kernels.dispatch import get_op
+
+        assert get_op("clone_chain") is clone_chain
+
+    def test_unknown_op_raises(self):
+        from repro.kernels.dispatch import get_op
+
+        with pytest.raises(ValueError, match="unknown kernel op 'fft'"):
+            get_op("fft")
+
+
+class TestCloneChainRouting:
+    """use_kernel routes clone_chain between the Pallas body and the
+    composed jnp fallback (same spy pattern as TestRouting)."""
+
+    def _spy(self, monkeypatch):
+        from repro.kernels.clone_chain import ops
+
+        calls = {"pallas": 0, "ref": 0}
+        real_ref = ops.clone_chain_ref
+
+        def fake_pallas(cum, u, tables, *, num_blocks, interpret=False):
+            calls["pallas"] += 1
+            return real_ref(cum, u[0], tables, num_blocks)
+
+        def spy_ref(cum, u, tables, num_blocks):
+            calls["ref"] += 1
+            return real_ref(cum, u, tables, num_blocks)
+
+        monkeypatch.setattr(ops, "clone_chain_pallas", fake_pallas)
+        monkeypatch.setattr(ops, "clone_chain_ref", spy_ref)
+        return ops, calls
+
+    def _args(self):
+        import jax
+
+        key = jax.random.PRNGKey(0)
+        logw = jnp.zeros((4,))
+        tables = jnp.asarray(
+            [[0, 1], [2, -1], [3, 4], [5, -1]], jnp.int32
+        )
+        return key, logw, tables
+
+    def test_oracle_route(self, monkeypatch):
+        ops, calls = self._spy(monkeypatch)
+        key, logw, tables = self._args()
+        anc, new, delta, member = ops.clone_chain(
+            key, logw, tables, num_blocks=8, use_kernel=False
+        )
+        assert anc.shape == (4,) and new.shape == tables.shape
+        assert delta.shape == (8,) and member.shape == (8,)
+        assert calls == {"pallas": 0, "ref": 1}
+
+    def test_kernel_route(self, monkeypatch):
+        ops, calls = self._spy(monkeypatch)
+        key, logw, tables = self._args()
+        ops.clone_chain(
+            key, logw, tables, num_blocks=8, use_kernel=True, interpret=True
+        )
+        assert calls["pallas"] == 1 and calls["ref"] == 0

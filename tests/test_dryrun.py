@@ -123,7 +123,12 @@ def test_loop_aware_costs_on_real_module(tmp_path):
         # REPRO_SLOW_HOST scales the budget on slow (e.g. 2-core CI) hosts
         # where the probe's compile alone can eat the default 300s.
         timeout=300 * float(os.environ.get("REPRO_SLOW_HOST", "1")),
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        # The scrubbed env must keep the host's backend pin: without it
+        # jax probes for accelerator runtimes and can block past the
+        # budget on hosts whose image bakes in a TPU toolchain.
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+             **{k: os.environ[k] for k in ("JAX_PLATFORMS",)
+                if k in os.environ}},
         cwd=str(Path(__file__).resolve().parents[1]),
     )
     assert "HLO_PROBE_OK" in out.stdout, out.stderr[-2000:]

@@ -29,7 +29,7 @@ from repro.kernels.cow_write.ops import cow_write
 from repro.kernels.cow_write.ref import cow_write_ref
 from repro.kernels.refcount_update.ops import refcount_update
 from repro.kernels.refcount_update.ref import refcount_delta_ref
-from repro.roofline.write_path import append_cost, clone_cost
+from repro.roofline.write_path import append_cost, chain_cost, clone_cost
 
 KEY = jax.random.PRNGKey(0)
 
@@ -234,3 +234,47 @@ class TestRooflineAcceptance:
         assert sparse.bytes < dense.bytes
         jnp_sparse = append_cost("fused_jnp", touched=32, **kw)
         assert sparse.bytes < jnp_sparse.bytes
+
+    @pytest.mark.parametrize("bs", [8, 16, 32])
+    def test_delta_cow_sparse_write_wins(self, bs):
+        """The tentpole gate (DESIGN.md §3.2): a single-element write to
+        a freshly shared block moves >= 2x fewer bytes under delta COW
+        at block_size >= 8, and grows with the block size."""
+        kw = dict(
+            n=1024,
+            touched=1024,
+            copies=1024,
+            num_blocks=4096,
+            block_bytes=4 * bs,
+            item_bytes=4,
+        )
+        whole = append_cost("kernel", **kw)
+        sparse = append_cost("kernel", delta=True, dirty_items=0, **kw)
+        assert whole.bytes >= 2 * sparse.bytes, (bs, whole, sparse)
+
+    def test_delta_cow_dense_never_loses(self):
+        """A mask-filling write degenerates the page (sheds the
+        bookkeeping), so dense delta COW never exceeds whole-block."""
+        for bs in (8, 16, 32):
+            kw = dict(
+                n=1024,
+                touched=1024,
+                copies=1024,
+                num_blocks=4096,
+                block_bytes=4 * bs,
+                item_bytes=4,
+            )
+            whole = append_cost("kernel", **kw)
+            dense = append_cost("kernel", delta=True, dirty_items=bs - 1, **kw)
+            assert dense.bytes <= whole.bytes, (bs, dense, whole)
+
+    def test_chain_fusion_passes_and_bytes(self):
+        """Fused resample->gather->refcount: 3 dispatches -> 1 pass and
+        >= 1.3x fewer bytes (the tables are read once, the ancestors
+        never round-trip through HBM)."""
+        kw = dict(n=1024, table_entries=1024 * 16, num_blocks=4096)
+        composed = chain_cost("fused_jnp", **kw)
+        fused = chain_cost("kernel", **kw)
+        assert composed.passes == 3 and fused.passes == 1
+        assert composed.bytes >= 1.3 * fused.bytes
+        assert chain_cost("legacy", **kw) == composed
