@@ -86,9 +86,7 @@ def run(n_reqs: int = 3, n_particles: int = 6, steps: int = 16, plen: int = 6):
     clean_res = None
     clean_secs = None
     for rate in (0.0, 0.05, 0.20):
-        schedule = chaos_schedule(
-            17, steps, rate=rate, kinds=FAILING, max_repeats=2
-        )
+        schedule = chaos_schedule(17, steps, rate=rate, kinds=FAILING, max_repeats=2)
         res, sched, secs = _run_schedule(cfg, lm, params, reqs, mbs, schedule)
         if rate == 0.0:
             clean_res, clean_secs = res, secs

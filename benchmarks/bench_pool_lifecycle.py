@@ -59,9 +59,7 @@ def _time(fn, reps: int) -> float:
 def run(n: int = 128, t: int = 48, reps: int = 3):
     rows = []
     ys = jax.random.normal(KEY, (t,))
-    base = dict(
-        n_particles=n, n_steps=t, mode=CopyMode.LAZY_SR, block_size=4
-    )
+    base = dict(n_particles=n, n_steps=t, mode=CopyMode.LAZY_SR, block_size=4)
 
     # -- grow: tiny seed pool + lifecycle loop vs oversized fixed pool ------
     seed_blocks = max(2 * n // 4, 16)  # way under the sparse bound
@@ -111,9 +109,7 @@ def run(n: int = 128, t: int = 48, reps: int = 3):
         store = res.store
         live = int(pool_lib.blocks_in_use(store.pool))
         cap_before = store.pool.num_blocks
-        before = np.asarray(
-            store_lib.materialize_batch(scfg, store, jnp.arange(n))
-        )
+        before = np.asarray(store_lib.materialize_batch(scfg, store, jnp.arange(n)))
         # Shrink to exactly the live set — only possible because the
         # relocation densifies it (free and live ids interleave after
         # COW churn, so a slice could never do this).  Warm once so the

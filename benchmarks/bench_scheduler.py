@@ -1,37 +1,62 @@
-"""Continuous-batching SMC serving scheduler (DESIGN.md §8).
+"""Continuous-batching SMC serving scheduler (DESIGN.md §8, §12).
 
 Measures aggregate decode throughput (tokens/sec) and peak shared-pool
 blocks against request arrival rate: a burst of simultaneous requests
 vs the same requests arriving staggered at token-boundary intervals,
-all multiplexed over ONE COW page pool and one jitted decode step.
+all multiplexed over ONE COW page pool and one jitted decode step —
+plus the replicated-fleet rows: the same requests routed across two
+scheduler replicas, and an SLA scenario comparing preemption policies.
 
-Gates (the PR's acceptance criteria):
+Every row also reports deterministic p50/p99 queue and completion
+latency **in ticks** (from the event log — machine-independent, so the
+baseline gates them tightly; wall times gate host-normalized as usual).
+
+Gates (the PRs' acceptance criteria):
 
   * single-request parity — a scheduler run of one request is
     token-bit-exact with the private :class:`SMCDecoder` run;
   * sharing across requests — peak pool blocks stay *below* the sum of
-    the requests' dense-equivalent per-sequence caches.
+    the requests' dense-equivalent per-sequence caches;
+  * replication invisibility — the 2-replica router run is per-request
+    token-bit-exact with the single-replica run of the same requests,
+    and the simulator mirrors the router's placement decisions exactly
+    (``first_divergence`` on the fleet event logs);
+  * SLA-aware preemption beats newest-first on miss-penalized p99
+    completion latency at the bursty deadline trace, and both policy
+    runs replay decision-exact through the simulator.
 """
 
 from __future__ import annotations
 
+import math
 import time
 
 import numpy as np
 
-from benchmarks.common import KEY, emit
+from benchmarks.common import KEY, emit, write_artifact
 from repro.configs import smoke_config
 from repro.models.model import LanguageModel
 from repro.serving import traces as traces_lib
 from repro.serving.engine import ServeEngine
 from repro.serving.kv_cache import KVCacheConfig
+from repro.serving.router import Router, RouterEventLog
+from repro.serving.scheduler import Scheduler, SchedulerEventLog
+from repro.serving.sim import CostModel, SimScheduler, first_divergence, simulate
 from repro.serving.smc_decode import SMCDecoder
-from repro.serving.scheduler import Scheduler
 
 BS = 4  # KV page size
 
+# Placeholder cost model for the decision-exactness mirrors (decisions
+# are tick-driven; the cost constants never influence them).
+SIM_COST = CostModel(
+    step_s=1e-3, prefill_s=2e-3, grow_s_per_block=1e-5, compact_s_per_block=1e-5
+)
 
-def _engine(cfg, lm, params, max_seqs, max_blocks_per_seq):
+# Terminal event kinds, in the event log's vocabulary.
+_TERMINAL = ("complete", "cancel", "expired", "shed", "poisoned")
+
+
+def _engine(cfg, lm, params, max_seqs, max_blocks_per_seq, num_blocks=0):
     ccfg = KVCacheConfig(
         n_layers=cfg.n_layers,
         n_kv_heads=cfg.n_kv_heads,
@@ -39,18 +64,22 @@ def _engine(cfg, lm, params, max_seqs, max_blocks_per_seq):
         block_size=BS,
         max_seqs=max_seqs,
         max_blocks_per_seq=max_blocks_per_seq,
+        num_blocks=num_blocks,
         dtype=cfg.dtype,
     )
     return ServeEngine(lm, params, ccfg)
 
 
-def _requests(cfg, n_reqs, n_particles, steps, plen, interval=0):
+def _trace(n_reqs, n_particles, steps, plen, interval=0):
+    return traces_lib.staggered(
+        n_reqs, interval, n_particles=n_particles, steps=steps, plen=plen
+    )
+
+
+def _requests(cfg, trace):
     """The bench's arrival patterns come from the shared seeded trace
     generator (``repro.serving.traces``) — the same bytes the simulator
     and tests replay (tests/test_traces.py gates reproducibility)."""
-    trace = traces_lib.staggered(
-        n_reqs, interval, n_particles=n_particles, steps=steps, plen=plen
-    )
     return traces_lib.to_decode_requests(
         trace, cfg.vocab_size, target_temp=0.5, token_block_size=BS
     )
@@ -63,16 +92,26 @@ def _dense_equiv(reqs):
     )
 
 
-def _run_schedule(cfg, lm, params, reqs, max_blocks_per_seq):
+def _lat_str(lat) -> str:
+    """Deterministic tick-latency metrics for a row's derived string."""
+    return (
+        f"queue_p50={lat['queue_p50']:g};queue_p99={lat['queue_p99']:g};"
+        f"completion_p50={lat['completion_p50']:g};"
+        f"completion_p99={lat['completion_p99']:g}"
+    )
+
+
+def _run_schedule(cfg, lm, params, reqs, max_blocks_per_seq, **sched_kw):
     """Run the schedule twice on one engine: the cold pass compiles (and
     grows the pool — recorded as ``cold_grew``), the warm pass is what
     the timing row reports, so the baseline gate tracks steady-state
-    serving throughput rather than compile noise."""
+    serving throughput rather than compile noise.  The warm pass records
+    an event log (tick latency metrics + the simulator mirror)."""
     slots = sum(r.n_particles for r in reqs)
     eng = _engine(cfg, lm, params, slots, max_blocks_per_seq)
 
-    def once():
-        sched = Scheduler(eng)
+    def once(log=None):
+        sched = Scheduler(eng, event_log=log, **sched_kw)
         for r in reqs:
             sched.submit(r)
         t0 = time.time()
@@ -80,10 +119,187 @@ def _run_schedule(cfg, lm, params, reqs, max_blocks_per_seq):
         return res, sched, time.time() - t0
 
     _, cold, _ = once()
-    res, sched, secs = once()
+    log = SchedulerEventLog()
+    res, sched, secs = once(log)
     peak = max(int(np.max(np.asarray(res[r.rid].used_blocks_trace))) for r in reqs)
     tokens = sum(r.n_particles * r.steps for r in reqs)
-    return res, sched, secs, peak, tokens, cold
+    return res, sched, secs, peak, tokens, cold, log
+
+
+def _terminal_ticks(log):
+    """rid -> (tick, kind) of each request's first terminal event."""
+    out = {}
+    for e in log.decisions:
+        if e[0] in _TERMINAL and e[1] not in out:
+            out[e[1]] = (e[2], e[0])
+    return out
+
+
+def _sla_row(cfg, lm, params, n_reqs, n_particles, steps, plen):
+    """The SLA scenario: a bursty deadline trace on a fixed pool sized
+    to force preemption (45% of the dense-equivalent demand).  Every
+    third request carries a tight deadline (1.5x its steps); the rest
+    are loose.  Newest-first keeps victimizing the latest admission —
+    the tight request — and misses its SLA; the SLA-aware policy evicts
+    a loose incumbent instead and makes every deadline.  Gated on
+    miss-penalized p99 completion latency (a miss costs ``deadline +
+    2*steps`` ticks — deterministic, so the baseline pins it exactly)
+    and on decision-exact simulator replay of both policy runs."""
+    trace = traces_lib.with_deadlines(
+        _trace(n_reqs, n_particles, steps, plen),
+        slack_x=12.0,
+        floor=4,
+        tight_every=3,
+        tight_slack_x=1.5,
+    )
+    reqs = _requests(cfg, trace)
+    nb = math.ceil(0.45 * _dense_equiv(reqs))
+    slots = sum(r.n_particles for r in reqs)
+    mbs = -(-(plen + steps) // BS) + 2
+    deadlines = {r.rid: r.deadline for r in trace.requests}
+    arrive = {r.rid: r.arrive_at for r in trace.requests}
+    stats = {}
+    for policy in ("newest", "sla"):
+        eng = _engine(cfg, lm, params, slots, mbs, num_blocks=nb)
+        log = SchedulerEventLog()
+        sched = Scheduler(eng, grow=False, preempt_policy=policy, event_log=log)
+        for r in reqs:
+            sched.submit(r)
+        t0 = time.time()
+        sched.run()
+        secs = time.time() - t0
+        lats, misses = [], 0
+        for rid, (tick, kind) in _terminal_ticks(log).items():
+            if kind == "complete":
+                lats.append(tick - arrive[rid])
+            else:
+                misses += 1
+                lats.append(deadlines[rid] - arrive[rid] + 2 * steps)
+        # decision-exactness: the recorded run replays through the
+        # simulator with the same policy, divergence-free.
+        sim_res = simulate(
+            log.to_trace(f"sla_{policy}"),
+            eng.cache_cfg,
+            SIM_COST,
+            grow=False,
+            preempt_policy=policy,
+        )
+        div = first_divergence(log.decisions, sim_res.decisions)
+        assert div is None, f"sla_{policy}: simulator diverged: {div}"
+        stats[policy] = {
+            "p99": float(np.percentile(lats, 99)),
+            "p50": float(np.percentile(lats, 50)),
+            "misses": misses,
+            "preempt": sched.stats.preemptions,
+            "secs": secs,
+        }
+    # gate: the SLA-aware policy beats newest-first where it matters.
+    assert stats["sla"]["p99"] < stats["newest"]["p99"], stats
+    assert stats["sla"]["misses"] <= stats["newest"]["misses"], stats
+    return emit(
+        "sched",
+        f"sched_sla_bursty_R{n_reqs}xN{n_particles}",
+        stats["sla"]["secs"] / (steps * n_reqs),
+        f"p99_sla={stats['sla']['p99']:g};p99_newest={stats['newest']['p99']:g};"
+        f"miss_sla={stats['sla']['misses']};miss_newest={stats['newest']['misses']};"
+        f"preempt_sla={stats['sla']['preempt']};"
+        f"preempt_newest={stats['newest']['preempt']}",
+        n_reqs=n_reqs,
+        n_particles=n_particles,
+        steps=steps,
+        pool_blocks=nb,
+        deadlines={k: v for k, v in deadlines.items()},
+    )
+
+
+def _router_row(cfg, lm, params, reqs, single_res, mbs, n_reqs, n_particles, steps):
+    """The replicated-fleet row: the stagger2 requests routed across two
+    scheduler replicas.  Gates (1) per-request token-bit-exactness
+    against the single-replica run of the same requests and (2) a
+    decision-exact fleet mirror — the *same* ``Router`` class drives two
+    ``SimScheduler`` replicas over the recorded trace, and the fleet
+    event logs must agree event-for-event (placement included)."""
+    slots = sum(r.n_particles for r in reqs)
+    engines = [_engine(cfg, lm, params, slots, mbs) for _ in range(2)]
+
+    def once(with_logs):
+        logs = [SchedulerEventLog() if with_logs else None for _ in engines]
+        router = Router(
+            [Scheduler(e, event_log=lg) for e, lg in zip(engines, logs)],
+            placement="least_loaded",
+            event_log=RouterEventLog(),
+        )
+        for r in reqs:
+            router.submit(r)
+        t0 = time.time()
+        res = router.run()
+        return router, res, logs, time.time() - t0
+
+    once(False)  # cold: compile both replicas
+    router, res, logs, secs = once(True)
+
+    # gate 1: replication is invisible to results.
+    for r in reqs:
+        assert np.array_equal(
+            np.asarray(res[r.rid].tokens), np.asarray(single_res[r.rid].tokens)
+        ), f"router: {r.rid} tokens != single-replica run"
+
+    # gate 2: the simulated fleet mirrors the real fleet's placement.
+    spec_by_rid = {}
+    for lg in logs:
+        spec_by_rid.update(lg.requests)
+    merged = traces_lib.Trace(
+        name="router_recorded",
+        requests=tuple(
+            traces_lib.TraceRequest(
+                rid=r.rid,
+                arrive_at=spec_by_rid[r.rid]["arrive_at"],
+                n_particles=spec_by_rid[r.rid]["n_particles"],
+                steps=spec_by_rid[r.rid]["steps"],
+                plen=spec_by_rid[r.rid]["plen"],
+                deadline=spec_by_rid[r.rid]["deadline"],
+                forks=dict(spec_by_rid[r.rid]["forks"]),
+            )
+            for r in reqs  # original submission order
+        ),
+    )
+    sim_router = Router(
+        [SimScheduler(engines[0].cache_cfg, SIM_COST) for _ in range(2)],
+        placement="least_loaded",
+        event_log=RouterEventLog(),
+    )
+    for r in merged.requests:
+        sim_router.submit(r)
+    sim_router.run()
+    div = first_divergence(router.event_log.events, sim_router.event_log.events)
+    assert div is None, f"router: simulated fleet diverged: {div}"
+
+    lat = router.event_log.latency_rounds()
+    util = router.utilization()
+    write_artifact(
+        "router_utilization.json",
+        {
+            "rounds": router.round,
+            "placement": router.placement_name,
+            "latency_rounds": lat,
+            "replicas": util,
+        },
+    )
+    tokens = sum(r.n_particles * r.steps for r in reqs)
+    return emit(
+        "sched",
+        f"sched_router2_R{n_reqs}xN{n_particles}",
+        secs / (steps * n_reqs),
+        f"tokens_per_sec={tokens / secs:.1f};rounds={router.round};"
+        f"placed0={util[0]['placed']};placed1={util[1]['placed']};"
+        f"rq_p99={lat['queue_p99']:g};rc_p99={lat['completion_p99']:g};"
+        f"parity=exact",
+        n_reqs=n_reqs,
+        n_particles=n_particles,
+        steps=steps,
+        replicas=2,
+        placement="least_loaded",
+    )
 
 
 def run(n_reqs: int = 4, n_particles: int = 8, steps: int = 16, plen: int = 6):
@@ -92,7 +308,7 @@ def run(n_reqs: int = 4, n_particles: int = 8, steps: int = 16, plen: int = 6):
     lm = LanguageModel(cfg)
     params, _ = lm.init(KEY)
     mbs = -(-(plen + steps) // BS) + 2
-    reqs = _requests(cfg, n_reqs, n_particles, steps, plen)
+    reqs = _requests(cfg, _trace(n_reqs, n_particles, steps, plen))
 
     # -- gate 1: single-request parity (scheduler == private decoder) --------
     dec = SMCDecoder(
@@ -104,7 +320,7 @@ def run(n_reqs: int = 4, n_particles: int = 8, steps: int = 16, plen: int = 6):
         block_size=BS,
     )
     ref = dec.run(reqs[0].key, reqs[0].prompt, steps)
-    solo, _, solo_secs, solo_peak, solo_tokens, _ = _run_schedule(
+    solo, _, solo_secs, solo_peak, solo_tokens, _, solo_log = _run_schedule(
         cfg, lm, params, reqs[:1], mbs
     )
     assert np.array_equal(
@@ -116,7 +332,8 @@ def run(n_reqs: int = 4, n_particles: int = 8, steps: int = 16, plen: int = 6):
             f"sched_solo_N{n_particles}",
             solo_secs / steps,
             f"tokens_per_sec={solo_tokens / solo_secs:.1f};"
-            f"peak_blocks={solo_peak};parity=exact",
+            f"peak_blocks={solo_peak};parity=exact;"
+            + _lat_str(solo_log.latency_ticks()),
             n_reqs=1,
             n_particles=n_particles,
             steps=steps,
@@ -125,9 +342,14 @@ def run(n_reqs: int = 4, n_particles: int = 8, steps: int = 16, plen: int = 6):
 
     # -- arrival-rate sweep over one shared pool -----------------------------
     dense = _dense_equiv(reqs)
+    stagger2 = None  # (requests, results) — reused by the router row
     for label, interval in (("burst", 0), ("stagger2", 2), ("stagger6", 6)):
-        arr = _requests(cfg, n_reqs, n_particles, steps, plen, interval=interval)
-        res, sched, secs, peak, tokens, cold = _run_schedule(cfg, lm, params, arr, mbs)
+        arr = _requests(cfg, _trace(n_reqs, n_particles, steps, plen, interval))
+        res, sched, secs, peak, tokens, cold, log = _run_schedule(
+            cfg, lm, params, arr, mbs
+        )
+        if label == "stagger2":
+            stagger2 = (arr, res)
         for r in arr:
             assert not bool(res[r.rid].oom), (label, r.rid)
         # gate 2: COW sharing across the population of populations —
@@ -143,7 +365,8 @@ def run(n_reqs: int = 4, n_particles: int = 8, steps: int = 16, plen: int = 6):
                 f"tokens_per_sec={tokens / secs:.1f};peak_blocks={peak};"
                 f"dense_equiv={dense};saving={dense / max(peak, 1):.2f}x;"
                 f"preempt={sched.stats.preemptions};"
-                f"ticks={sched.stats.ticks}",
+                f"ticks={sched.stats.ticks};"
+                + _lat_str(log.latency_ticks()),
                 n_reqs=n_reqs,
                 n_particles=n_particles,
                 steps=steps,
@@ -152,6 +375,17 @@ def run(n_reqs: int = 4, n_particles: int = 8, steps: int = 16, plen: int = 6):
                 scheduler=sched.stats.as_dict(),
             )
         )
+
+    # -- replicated fleet (DESIGN.md §12) ------------------------------------
+    rows.append(
+        _router_row(
+            cfg, lm, params, stagger2[0], stagger2[1], mbs,
+            n_reqs, n_particles, steps,
+        )
+    )
+
+    # -- SLA-aware preemption vs newest-first --------------------------------
+    rows.append(_sla_row(cfg, lm, params, n_reqs, n_particles, steps, plen))
     return rows
 
 

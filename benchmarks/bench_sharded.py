@@ -115,12 +115,8 @@ def run(n: int = 256, t: int = 48, reps: int = 3, tol: float = 3.0):
             )
             secs, res = _time(pf.jitted(), KEY, obs, reps)
             shcfg = pf.sharded_cfg
-            used = np.asarray(
-                sharded_lib.used_blocks_per_shard(shcfg, res.store)
-            )
-            peak = np.asarray(
-                sharded_lib.peak_blocks_per_shard(shcfg, res.store)
-            )
+            used = np.asarray(sharded_lib.used_blocks_per_shard(shcfg, res.store))
+            peak = np.asarray(sharded_lib.peak_blocks_per_shard(shcfg, res.store))
             oom = bool(np.asarray(res.store.pool.oom).any())
             logz = float(res.log_evidence)
             logz_by_cfg[(s, mode)] = logz

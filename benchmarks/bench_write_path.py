@@ -218,7 +218,9 @@ def run(quick: bool = False, reps: int = 3, t: int = 32):
         grows, costs, clones = _model_rows(gate, f"gate_N1024_bs{bs}")
         rows += grows
         assert costs["legacy"].passes >= 2 * costs["kernel"].passes, costs
-        assert costs["kernel"].bytes < costs["fused_jnp"].bytes < costs["legacy"].bytes, costs
+        assert (
+            costs["kernel"].bytes < costs["fused_jnp"].bytes < costs["legacy"].bytes
+        ), costs
         if bs == 4:
             assert costs["kernel"].speedup_over(costs["legacy"]) >= 2.0, costs
         assert clones["kernel"].bytes < clones["legacy"].bytes, clones

@@ -32,9 +32,7 @@ def lgssm_def():
 
     def step(key, x, t, y_t, params):
         x = LGSSM_A * x + math.sqrt(LGSSM_Q) * jax.random.normal(key, x.shape)
-        logw = -0.5 * (
-            (y_t - x) ** 2 / LGSSM_R + math.log(2 * math.pi * LGSSM_R)
-        )
+        logw = -0.5 * ((y_t - x) ** 2 / LGSSM_R + math.log(2 * math.pi * LGSSM_R))
         return x, logw, x[:, None]
 
     def set_reference(state, ref_t):
@@ -123,6 +121,17 @@ def emit(suite: str, name: str, seconds: float, derived: str, **config) -> str:
             }
         )
     return row
+
+
+def write_artifact(name: str, obj) -> None:
+    """Write a free-form JSON artifact next to the BENCH_*.json files
+    (no-op without ``--json``).  Used for telemetry CI uploads but does
+    not gate — e.g. the router's per-replica utilization snapshot."""
+    if _json_dir is None:
+        return
+    out = _json_dir / name
+    out.write_text(json.dumps(obj, indent=2, sort_keys=True))
+    print(f"wrote {out}", flush=True)
 
 
 def flush_json() -> None:

@@ -35,5 +35,4 @@ print(f"peak store blocks: {int(out.peak_blocks)} "
       f"(dense equivalent {N * T // 4})")
 ref = np.asarray(out.reference)
 print(f"retained trajectory (eagerly copied): shape {ref.shape}")
-print(f"final infected (Ih) along the reference: "
-      f"{ref[:: T // 6, 2].round(1)}")
+print(f"final infected (Ih) along the reference: " f"{ref[:: T // 6, 2].round(1)}")

@@ -5,7 +5,9 @@ arithmetic device-free, so knob tuning and capacity planning become a
 seeded sweep instead of a hardware campaign.  This script:
 
 1. sweeps ``block_size``, ``grow_factor``, growth ``watermark``,
-   ``admission_margin``, and ``preempt_margin`` over seeded Poisson /
+   ``admission_margin``, ``preempt_margin``, and the eviction
+   ``preempt_policy`` (``newest`` / ``sla`` / ``longest_wait`` — see
+   ``repro.serving.scheduler.PREEMPT_POLICIES``) over seeded Poisson /
    bursty / diurnal traces (synthetic fork schedules) priced by the
    roofline cost model of a target arch;
 2. ranks configurations by delivered tokens/sec subject to an SLA —
@@ -13,7 +15,11 @@ seeded sweep instead of a hardware campaign.  This script:
    (prefill + steps decode ticks);
 3. scans arrival rate for the winning configuration to find the
    max req/s one device sustains at the SLA, and prints the capacity
-   table ("N devices serve X req/s at SLA Y");
+   table ("N devices serve X req/s at SLA Y") — the N-device rows are
+   what ``repro.serving.router.Router`` realizes with N data-parallel
+   scheduler replicas (placement policies: ``least_loaded`` /
+   ``round_robin`` / ``affinity``; per-request results are placement-
+   independent, so capacity scales linearly until arrival skew);
 4. prints the tuned defaults block (landed as
    ``repro.serving.scheduler.TUNED_DEFAULTS``; runtime defaults stay at
    the provably-safe 1.0 margins, which recorded-trace replay depends
@@ -140,7 +146,13 @@ def capacity_scan(model_cfg, best, *, n_reqs, sizes, max_seqs, max_len, sla_x):
     cost_cache: dict = {}
     knobs = {
         k: best[k]
-        for k in ("grow_factor", "watermark", "admission_margin", "preempt_margin")
+        for k in (
+            "grow_factor",
+            "watermark",
+            "admission_margin",
+            "preempt_margin",
+            "preempt_policy",
+        )
     }
     step_s = CostModel.from_roofline(
         model_cfg, _cache_cfg(model_cfg, best["block_size"], max_seqs, max_len)
@@ -164,7 +176,20 @@ def capacity_scan(model_cfg, best, *, n_reqs, sizes, max_seqs, max_len, sla_x):
 
 
 def main() -> int:
-    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        epilog=(
+            "Swept preempt policies (Scheduler(preempt_policy=...)): "
+            "'newest' evicts the latest admission (LIFO), 'sla' evicts "
+            "by deadline slack (loosest first, never a request about to "
+            "make its deadline), 'longest_wait' protects the "
+            "longest-queued request.  Fleet placement policies "
+            "(Router(placement=...)): 'least_loaded' (fewest active+"
+            "queued particles, most free blocks), 'round_robin', "
+            "'affinity' (session-sticky by rid prefix).  The capacity "
+            "table's N-device rows assume N router replicas."
+        ),
+    )
     ap.add_argument("--arch", default="qwen2.5-32b")
     ap.add_argument("--quick", action="store_true", help="small sweep for CI")
     ap.add_argument("--n-reqs", type=int, default=0, help="0 -> 64 quick / 256")
@@ -185,6 +210,9 @@ def main() -> int:
         "watermark": [1.0, 2.0] if args.quick else [1.0, 2.0, 4.0],
         "admission_margin": [1.0, 2.0],
         "preempt_margin": [1.0, 2.0],
+        "preempt_policy": (
+            ["newest", "sla"] if args.quick else ["newest", "sla", "longest_wait"]
+        ),
     }
     traces = _traces(n_reqs, args.rate, sizes)
     rows = sweep(
@@ -210,7 +238,8 @@ def main() -> int:
         "requests.  Scores are worst-case across the three traces.\n"
     )
     hdr = ("block_size", "grow_factor", "watermark", "admission_margin",
-           "preempt_margin", "tokens_per_sec", "sla_attain", "peak_blocks")
+           "preempt_margin", "preempt_policy", "tokens_per_sec", "sla_attain",
+           "peak_blocks")
     lines.append("| " + " | ".join(hdr) + " |")
     lines.append("|" + "---|" * len(hdr))
     for r in rows[:10]:
@@ -227,6 +256,7 @@ def main() -> int:
         lines.append(f"    {k!r}: {best[k]:g},")
     lines.append("}")
     lines.append(f"# block_size = {best['block_size']}")
+    lines.append(f"# preempt_policy = {best['preempt_policy']!r}")
     lines.append("```\n")
     lines.append("## Capacity\n")
     if rate is None:

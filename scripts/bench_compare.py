@@ -50,6 +50,8 @@ METRIC_TOL = {
     "iters_per_s": None,
     "fixed_us": None,
     "legacy_us": None,
+    "whole_us": None,
+    "composed_us": None,
     # sim suite: the predicted/measured wall ratio is host+jax-version
     # noise; the in-bench assertion gates it, the decision-exactness
     # bits are what the baseline remembers.
@@ -59,6 +61,24 @@ METRIC_TOL = {
     # bit-exact recovery assertion and the fault/retry counts are the
     # gated facts.
     "overhead": None,
+    # sched suite: tick latencies, policy miss/preempt counts, and
+    # router placement counts are event-log driven — fully
+    # deterministic, no wall clock — so the baseline pins them tight.
+    "queue_p50": 0.01,
+    "queue_p99": 0.01,
+    "completion_p50": 0.01,
+    "completion_p99": 0.01,
+    "p99_sla": 0.01,
+    "p99_newest": 0.01,
+    "miss_sla": 0.01,
+    "miss_newest": 0.01,
+    "preempt_sla": 0.01,
+    "preempt_newest": 0.01,
+    "rounds": 0.01,
+    "placed0": 0.01,
+    "placed1": 0.01,
+    "rq_p99": 0.01,
+    "rc_p99": 0.01,
 }
 _NUM = re.compile(r"^-?\d+(\.\d+)?([eE][+-]?\d+)?x?$")
 

@@ -26,7 +26,8 @@ def main():
 
     mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
     cell = build_cell(arch, shape, mesh)
-    with mesh, shd.activation_sharding(mesh, mode=("decode" if cell.shape.kind == "decode" else "train")):
+    mode = "decode" if cell.shape.kind == "decode" else "train"
+    with mesh, shd.activation_sharding(mesh, mode=mode):
         compiled = jax.jit(
             cell.step_fn,
             in_shardings=cell.in_shardings,

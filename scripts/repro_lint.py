@@ -37,9 +37,7 @@ def main(argv=None) -> int:
         metavar="RULES",
         help="comma-separated rule names to run (default: all)",
     )
-    ap.add_argument(
-        "--list-rules", action="store_true", help="list rules and exit"
-    )
+    ap.add_argument("--list-rules", action="store_true", help="list rules and exit")
     ap.add_argument(
         "--show-suppressed",
         action="store_true",

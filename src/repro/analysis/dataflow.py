@@ -272,7 +272,8 @@ def visit_header(stmt: ast.stmt, state: State, visit: Visit) -> None:
     node passed in is a *simple* statement, so we synthesize per-header
     visits here."""
     if isinstance(
-        stmt, (ast.If, ast.While, ast.For, ast.AsyncFor, ast.With, ast.AsyncWith, ast.Try)
+        stmt,
+        (ast.If, ast.While, ast.For, ast.AsyncFor, ast.With, ast.AsyncWith, ast.Try),
     ):
         headers: List[ast.AST] = []
         if isinstance(stmt, (ast.If, ast.While)):

@@ -26,9 +26,7 @@ class Rule:
     def check(self, tree: ast.Module, ctx: "FileContext") -> Iterator[Finding]:
         raise NotImplementedError
 
-    def finding(
-        self, ctx: "FileContext", node: ast.AST, message: str
-    ) -> Finding:
+    def finding(self, ctx: "FileContext", node: ast.AST, message: str) -> Finding:
         return Finding(
             path=ctx.path,
             line=getattr(node, "lineno", 1),

@@ -133,9 +133,7 @@ class IdIntoValues(Rule):
                         if term in _CONCAT_TERMS and node.args:
                             seq = node.args[0]
                             if isinstance(seq, (ast.List, ast.Tuple)):
-                                flags = [
-                                    tainted_expr(e, taint) for e in seq.elts
-                                ]
+                                flags = [tainted_expr(e, taint) for e in seq.elts]
                                 if any(flags) and not all(flags):
                                     found.append(
                                         self.finding(

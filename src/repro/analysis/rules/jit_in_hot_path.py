@@ -87,10 +87,7 @@ class JitInHotPath(Rule):
 
             # deliberate AOT pipeline: jax.jit(f).lower(...) etc.
             parent = parents.get(node)
-            if (
-                isinstance(parent, ast.Attribute)
-                and parent.attr in _AOT_METHODS
-            ):
+            if (isinstance(parent, ast.Attribute) and parent.attr in _AOT_METHODS):
                 continue
 
             enclosing: Optional[ast.AST] = next(
@@ -126,9 +123,7 @@ class JitInHotPath(Rule):
             if any(_decorator_exempts(d) for d in enclosing.decorator_list):
                 continue
 
-            stmt = next(
-                (a for a in [node] + chain if isinstance(a, ast.stmt)), None
-            )
+            stmt = next((a for a in [node] + chain if isinstance(a, ast.stmt)), None)
             if in_loop:
                 yield self.finding(
                     ctx,
@@ -157,9 +152,7 @@ class JitInHotPath(Rule):
                 if all(_is_instance_cache(t) for t in stmt.targets):
                     continue  # self._fn = jax.jit(...) / self._cache[k] = ...
                 local = _sole_name_target(stmt)
-                if local is not None and _invoked_later(
-                    enclosing, stmt, local
-                ):
+                if local is not None and _invoked_later(enclosing, stmt, local):
                     yield self.finding(
                         ctx,
                         node,

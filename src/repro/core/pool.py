@@ -180,7 +180,9 @@ def init(
     )
 
 
-def _scatter_ids(num_blocks: int, ids: jax.Array, mask: jax.Array | None = None) -> jax.Array:
+def _scatter_ids(
+    num_blocks: int, ids: jax.Array, mask: jax.Array | None = None
+) -> jax.Array:
     """Route NULL/masked entries to the dump index so scatters skip them.
 
     Bookkeeping arrays (refcount/frozen/claim) are exactly
@@ -227,7 +229,9 @@ def push_free_mask(
     return stack, top + jnp.sum(freed, dtype=jnp.int32)
 
 
-def alloc(pool: BlockPool, n: int, commit: jax.Array | None = None) -> Tuple[BlockPool, jax.Array]:
+def alloc(
+    pool: BlockPool, n: int, commit: jax.Array | None = None
+) -> Tuple[BlockPool, jax.Array]:
     """Allocate up to ``n`` blocks (static ``n``) by popping the free stack.
 
     Returns the top ``n`` free block ids.  ``commit`` (``[n] bool``,
@@ -521,9 +525,7 @@ def grow(pool: BlockPool, new_num_blocks: int) -> BlockPool:
     if new_num_blocks == nb:
         return pool
     g = new_num_blocks - nb
-    data = jnp.zeros(
-        (new_num_blocks + 1, *pool.block_shape), dtype=pool.data.dtype
-    )
+    data = jnp.zeros((new_num_blocks + 1, *pool.block_shape), dtype=pool.data.dtype)
     data = data.at[:nb].set(pool.data[:nb])
     refcount = jnp.zeros((new_num_blocks,), jnp.int32).at[:nb].set(pool.refcount)
     frozen = jnp.zeros((new_num_blocks,), jnp.bool_).at[:nb].set(pool.frozen)
@@ -670,11 +672,7 @@ def free_stack_consistent(pool: BlockPool) -> jax.Array:
     sids = _scatter_ids(nb, jnp.where(live, ids, NULL_BLOCK))
     counts = jnp.zeros((nb,), jnp.int32).at[sids].add(1, mode="drop")
     free = (pool.refcount == 0).astype(jnp.int32)
-    return (
-        valid
-        & (pool.free_top == jnp.sum(free))
-        & jnp.all(counts == free)
-    )
+    return (valid & (pool.free_top == jnp.sum(free)) & jnp.all(counts == free))
 
 
 def refcount_matches_tables(pool: BlockPool, tables: jax.Array) -> jax.Array:

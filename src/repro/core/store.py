@@ -133,7 +133,9 @@ class StoreConfig:
             return self.num_blocks
         # Generous default: the sparse bound T/B + c·N·log N blocks, padded.
         t_term = self.max_blocks
-        n_term = int(10 * self.n * max(1.0, math.log(max(self.n, 2)))) // self.block_size
+        n_term = (
+            int(10 * self.n * max(1.0, math.log(max(self.n, 2)))) // self.block_size
+        )
         return min(self.n * self.max_blocks, max(t_term + n_term + 2 * self.n, 64))
 
     @property
@@ -370,7 +372,9 @@ def _clone_bookkeeping(
     return pool
 
 
-def clone(cfg: StoreConfig, store: ParticleStore, ancestors: jax.Array) -> ParticleStore:
+def clone(
+    cfg: StoreConfig, store: ParticleStore, ancestors: jax.Array
+) -> ParticleStore:
     """Replace the population by copies of ``ancestors`` (``[N] int32``).
 
     EAGER: physical gather of whole trajectories (O(N·T·D)).
@@ -457,9 +461,7 @@ def clone_partial(
         store = store._replace(dense=dense, lengths=lengths)
         return _bump_peak(cfg, store)
 
-    new_tables = jnp.where(
-        valid[:, None], store.tables[ancestors], NULL_BLOCK
-    )
+    new_tables = jnp.where(valid[:, None], store.tables[ancestors], NULL_BLOCK)
     pool = _clone_bookkeeping(cfg, store.pool, store.tables, new_tables)
     store = store._replace(pool=pool, tables=new_tables, lengths=lengths)
     return _bump_peak(cfg, store)
@@ -590,7 +592,9 @@ def trajectory(cfg: StoreConfig, store: ParticleStore, i: int | jax.Array) -> ja
     return blocks.reshape((cfg.capacity, *cfg.item_shape))
 
 
-def materialize(cfg: StoreConfig, store: ParticleStore, i: int | jax.Array) -> jax.Array:
+def materialize(
+    cfg: StoreConfig, store: ParticleStore, i: int | jax.Array
+) -> jax.Array:
     """Eager deep copy of one particle's trajectory, outside the pool.
 
     This is the escape hatch the paper uses for the particle-Gibbs
@@ -616,9 +620,7 @@ def materialize_batch(
     tab = store.tables[ids]  # [k, max_blocks]
     # cow_gather: NULL entries yield zero blocks; kernel path streams one
     # pool block per table entry via scalar prefetch.
-    blocks = cow_gather(
-        store.pool.data, tab.reshape(-1), use_kernel=cfg.use_kernels
-    )
+    blocks = cow_gather(store.pool.data, tab.reshape(-1), use_kernel=cfg.use_kernels)
     if cfg.delta_cow:
         blocks = _delta_resolve(cfg, store.pool, tab.reshape(-1), blocks)
     return blocks.reshape((ids.shape[0], cfg.capacity, *cfg.item_shape))

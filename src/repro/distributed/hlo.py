@@ -551,7 +551,9 @@ def loop_aware_costs(hlo_text: str, native: bool = True) -> Dict[str, object]:
     layout accounting (both variants documented in EXPERIMENTS.md)."""
     mod = Module(hlo_text)
     out = mod.analyze(native=native)
-    out["bytes_as_compiled"] = mod.analyze(native=False)["bytes"] if native else out["bytes"]
+    out["bytes_as_compiled"] = (
+        mod.analyze(native=False)["bytes"] if native else out["bytes"]
+    )
     return out
 
 

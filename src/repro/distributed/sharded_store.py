@@ -150,7 +150,9 @@ class ShardedStoreConfig:
             # coexist within a write step.
             dense = nl * b.max_blocks + nl
             blocks = min(dense, auto + (nl * b.max_blocks) // 4 + nl)
-        return dataclasses.replace(b, n=self.base.n // self.num_shards, num_blocks=blocks)
+        return dataclasses.replace(
+            b, n=self.base.n // self.num_shards, num_blocks=blocks
+        )
 
 
 # ---------------------------------------------------------------------------

@@ -210,9 +210,7 @@ def constrain(x: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
         return x
     mode = getattr(_TLS, "mode", "train")
     assert len(names) == x.ndim, (names, x.shape)
-    names = [
-        None if (n in _DECODE_ONLY and mode != "decode") else n for n in names
-    ]
+    names = [None if (n in _DECODE_ONLY and mode != "decode") else n for n in names]
     order = sorted(
         (i for i, n in enumerate(names) if n is not None),
         key=lambda i: ACT_RULES.get(names[i], ((), 99))[1],

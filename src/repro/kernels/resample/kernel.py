@@ -33,9 +33,7 @@ def _kernel(u_ref, cum_ref, out_ref, cnt_ref, *, bo, bw, n, nw):
     u = u_ref[0]
     t = (i * bo + jax.lax.broadcasted_iota(jnp.float32, (bo, 1), 0) + u) / n
     c = cum_ref[...].reshape(1, bw)  # [1, bw]
-    cnt_ref[...] += jnp.sum(
-        (c < t).astype(jnp.int32), axis=1, keepdims=True
-    )
+    cnt_ref[...] += jnp.sum((c < t).astype(jnp.int32), axis=1, keepdims=True)
 
     @pl.when(j == nw - 1)
     def _final():

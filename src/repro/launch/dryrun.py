@@ -53,7 +53,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
         "sharding_fallbacks": sorted(set(cell.fallbacks)),
     }
     with mesh:
-        with shd.activation_sharding(mesh, mode=("decode" if cell.shape.kind == "decode" else "train")):
+        mode = "decode" if cell.shape.kind == "decode" else "train"
+        with shd.activation_sharding(mesh, mode=mode):
             jitted = jax.jit(
                 cell.step_fn,
                 in_shardings=cell.in_shardings,

@@ -98,9 +98,7 @@ def build(arch: str, multi_pod: bool, batch: int = 128, seq: int = 32768,
             pool = pool.at[bid, li, 1, slot].set(v_new[:, 0].astype(dt))
             k_pool = pool[:, li, 0]
             v_pool = pool[:, li, 1]
-            out = paged_attention_ref(
-                q[:, 0], k_pool, v_pool, tables, lengths_incl
-            )
+            out = paged_attention_ref(q[:, 0], k_pool, v_pool, tables, lengths_incl)
             h = h + attn_lib.out_proj(p["attn"], out[:, None])
             h = h + mlp(p["mlp"], rms_norm(h, p["ln2"]["scale"], cfg.norm_eps), cfg.act)
             return (h, pool), None

@@ -152,13 +152,13 @@ def abstract_cache(lm: LanguageModel, batch: int, max_len: int) -> DecodeCache:
     """ShapeDtypeStruct version of init_cache (no allocation)."""
     cfg = lm.cfg
     img = (
-        jax.ShapeDtypeStruct((batch, cfg.n_img_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+        jax.ShapeDtypeStruct(
+            (batch, cfg.n_img_tokens, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
         if cfg.family == "vlm"
         else None
     )
-    shapes = jax.eval_shape(
-        lambda: lm.init_cache(batch, max_len, img_feats=None)
-    )
+    shapes = jax.eval_shape(lambda: lm.init_cache(batch, max_len, img_feats=None))
     if img is not None:
         shapes = shapes._replace(img_feats=img)
     return shapes
@@ -245,9 +245,7 @@ def make_train_step(
                 )
                 return grads_acc, loss
 
-            zero = pin(jax.tree.map(
-                lambda p: jnp.zeros(p.shape, comm_dt), params
-            ))
+            zero = pin(jax.tree.map(lambda p: jnp.zeros(p.shape, comm_dt), params))
             xs = (tok_m, lab_m, img_m) if img is not None else (
                 tok_m, lab_m, jnp.zeros((n_micro, 0)),
             )
@@ -258,9 +256,7 @@ def make_train_step(
                 grads, losses = jax.lax.scan(acc_fn2, zero, xs)
             else:
                 grads, losses = jax.lax.scan(acc_fn, zero, xs)
-            grads = jax.tree.map(
-                lambda g: g.astype(jnp.float32) / n_micro, grads
-            )
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32) / n_micro, grads)
             loss = jnp.mean(losses)
         else:
             (loss, _), grads = jax.value_and_grad(loss_of, has_aux=True)(
@@ -327,9 +323,7 @@ def build_cell(arch: str, shape_name: str, mesh: Mesh) -> Cell:
         for a in shd.data_axes(mesh):
             dp *= mesh.shape[a]
         param_gb = cfg.param_count() * 2 / tp / 1e9
-        kv_per_seq = (
-            cfg.n_layers * shape.seq_len * cfg.n_kv_heads * cfg.hd * 2 * 2
-        )
+        kv_per_seq = (cfg.n_layers * shape.seq_len * cfg.n_kv_heads * cfg.hd * 2 * 2)
         seqs_per_chip = max(shape.global_batch // dp, 1)
         kv_gb = kv_per_seq * seqs_per_chip / min(tp, max(cfg.n_kv_heads, 1)) / 1e9
         if param_gb + kv_gb <= 14.0:

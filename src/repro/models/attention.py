@@ -43,9 +43,7 @@ def qkv_proj(
     from repro.distributed.sharding import gather_weight
 
     dt = x.dtype
-    wq = gather_weight(
-        params["wq"].astype(dt), (None, "act_heads", "act_head_dim")
-    )
+    wq = gather_weight(params["wq"].astype(dt), (None, "act_heads", "act_head_dim"))
     wk = gather_weight(
         params["wk"].astype(dt), (None, "act_kv_heads", "act_head_dim")
     )
@@ -87,9 +85,7 @@ def _grouped_out(scores: jax.Array, v: jax.Array) -> jax.Array:
     return out.reshape(b, sq, kvh * g, v.shape[-1])
 
 
-def causal_mask(
-    q_pos: jax.Array, k_pos: jax.Array, window: int = 0
-) -> jax.Array:
+def causal_mask(q_pos: jax.Array, k_pos: jax.Array, window: int = 0) -> jax.Array:
     """[...,Sq,Sk] bool mask: causal, optionally sliding-window."""
     ok = q_pos[..., :, None] >= k_pos[..., None, :]
     if window:
@@ -121,12 +117,7 @@ def attention_chunked(
 
     tp = tp_size()
     kvh = k.shape[2]
-    if (
-        tp > 1
-        and sharding_mode() == "train"
-        and h % tp == 0
-        and kvh % tp != 0
-    ):
+    if (tp > 1 and sharding_mode() == "train" and h % tp == 0 and kvh % tp != 0):
         # GQA with KV heads that don't divide the TP axis: repeating KV to
         # full heads keeps *every* attention tensor head-sharded.  The
         # alternative (context-parallel KV sequence) leaves Q replicated
@@ -224,9 +215,7 @@ def attention_decode(
     scores = _grouped_scores(q, k_cache).astype(jnp.float32)  # [B,KVH,G,1,S]
     ok = k_pos < position[:, None]  # written entries only
     window = jnp.asarray(window, jnp.int32)
-    ok = ok & jnp.where(
-        window > 0, position[:, None] - k_pos < window, True
-    )
+    ok = ok & jnp.where(window > 0, position[:, None] - k_pos < window, True)
     scores = jnp.where(ok[:, None, None, None, :], scores, NEG_INF)
     # score the new token against itself (appended at `position`)
     self_score = jnp.einsum(

@@ -29,7 +29,10 @@ class ParamBuilder:
     """
 
     def __init__(
-        self, key: jax.Array | None, param_dtype: str = "float32", abstract: bool = False
+        self,
+        key: jax.Array | None,
+        param_dtype: str = "float32",
+        abstract: bool = False,
     ):
         self._key = key
         self.dtype = jnp.dtype(param_dtype)
@@ -162,9 +165,7 @@ def mlp(params: Params, x: jax.Array, act: str = "silu") -> jax.Array:
     w_up = gather_weight(params["w_up"].astype(x.dtype), (None, "act_mlp"))
     up = x @ w_up
     if "w_gate" in params:
-        w_gate = gather_weight(
-            params["w_gate"].astype(x.dtype), (None, "act_mlp")
-        )
+        w_gate = gather_weight(params["w_gate"].astype(x.dtype), (None, "act_mlp"))
         hidden = act_fn(act)(x @ w_gate) * up
     else:
         hidden = act_fn(act)(up)
@@ -197,9 +198,7 @@ def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
     return theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
 
 
-def apply_rope(
-    x: jax.Array, positions: jax.Array, theta: float
-) -> jax.Array:
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
     """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
     freqs = rope_frequencies(x.shape[-1], theta)  # [hd/2]
     angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]

@@ -96,9 +96,7 @@ class LanguageModel:
         init_embedding(b, "embed", cfg.padded_vocab, cfg.d_model)
         init_rms_norm(b, "final_norm", cfg.d_model)
         if not cfg.tie_embeddings:
-            b.param(
-                "unembed", (cfg.padded_vocab, cfg.d_model), ("vocab", "embed")
-            )
+            b.param("unembed", (cfg.padded_vocab, cfg.d_model), ("vocab", "embed"))
         params, axes = b.params, b.axes
 
         blocks, blocks_axes = stack_layer_params(
@@ -238,11 +236,15 @@ class LanguageModel:
             h = h + attn_lib.attention_train(
                 p["attn"], rms_norm(h, p["ln1"]["scale"], cfg.norm_eps), cfg, positions
             )
-            h = h + moe_lib.moe_layer(p["moe"], rms_norm(h, p["ln2"]["scale"], cfg.norm_eps), cfg)
+            h = h + moe_lib.moe_layer(
+                p["moe"], rms_norm(h, p["ln2"]["scale"], cfg.norm_eps), cfg
+            )
             return h
 
         def ssm_block(p, h):
-            return h + ssm_lib.ssm_layer(p["ssm"], rms_norm(h, p["ln"]["scale"], cfg.norm_eps), cfg)
+            return h + ssm_lib.ssm_layer(
+                p["ssm"], rms_norm(h, p["ln"]["scale"], cfg.norm_eps), cfg
+            )
 
         def shared_attn(h):
             p = params["shared_attn"]
@@ -658,7 +660,9 @@ class LanguageModel:
             _, k_new, v_new = attn_lib.qkv_proj(p["attn"], hn, cfg)
             k_new = attn_lib.apply_rope(k_new, positions, cfg.rope_theta)
             h2 = h + attn_lib.attention_train(p["attn"], hn, cfg, positions, window)
-            h2 = h2 + mlp(p["mlp"], rms_norm(h2, p["ln2"]["scale"], cfg.norm_eps), cfg.act)
+            h2 = h2 + mlp(
+                p["mlp"], rms_norm(h2, p["ln2"]["scale"], cfg.norm_eps), cfg.act
+            )
             return h2, k_new, v_new
 
         def pad_to(a, n):
@@ -747,7 +751,9 @@ class LanguageModel:
                     k_new = attn_lib.apply_rope(k_new, positions, cfg.rope_theta)
                     h = h + attn_lib.attention_train(sp["attn"], hh, cfg, positions)
                     h = h + mlp(
-                        sp["mlp"], rms_norm(h, sp["mid"]["scale"], cfg.norm_eps), cfg.act
+                        sp["mlp"],
+                        rms_norm(h, sp["mid"]["scale"], cfg.norm_eps),
+                        cfg.act,
                     )
                     sk = sk.at[inv, :, :s].set(k_new)
                     sv = sv.at[inv, :, :s].set(v_new)
@@ -786,9 +792,7 @@ class LanguageModel:
             k_pad = jax.vmap(lambda a: pad_to(a, max_len))(k_g)
             v_pad = jax.vmap(lambda a: pad_to(a, max_len))(v_g)
             cache = cache._replace(k=k_pad, v=v_pad, k_loc=k_l, v_loc=v_l)
-        cache = cache._replace(
-            position=jnp.full((b,), s, jnp.int32)
-        )
+        cache = cache._replace(position=jnp.full((b,), s, jnp.int32))
         return cache
 
 

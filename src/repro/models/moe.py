@@ -124,9 +124,7 @@ def moe_layer(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
                 params["router"], we_gate, we_up, we_down, tc, cfg
             )
 
-        _, outs = jax.lax.scan(
-            one, None, tokens.reshape(n_tok // chunk, chunk, d)
-        )
+        _, outs = jax.lax.scan(one, None, tokens.reshape(n_tok // chunk, chunk, d))
         combined = outs.reshape(n_tok, d)
     else:
         combined = _routed_tokens(
@@ -147,7 +145,5 @@ def load_balance_loss(logits: jax.Array, top_e: jax.Array, n_experts: int) -> ja
     """Switch-style auxiliary loss (exported for the training loop)."""
     gates = jax.nn.softmax(logits, axis=-1)
     me = jnp.mean(gates, axis=0)
-    ce = jnp.mean(
-        jax.nn.one_hot(top_e[:, 0], n_experts, dtype=jnp.float32), axis=0
-    )
+    ce = jnp.mean(jax.nn.one_hot(top_e[:, 0], n_experts, dtype=jnp.float32), axis=0)
     return n_experts * jnp.sum(me * ce)

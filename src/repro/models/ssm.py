@@ -103,9 +103,7 @@ def ssd_chunked(
     )
     h_in = h_in.swapaxes(0, 1)  # [b,nc,h,p,n]
 
-    y_off = jnp.einsum(
-        "bcign,bchpn,bcih->bcihp", cc, h_in, jnp.exp(da_cs)
-    )
+    y_off = jnp.einsum("bcign,bchpn,bcih->bcihp", cc, h_in, jnp.exp(da_cs))
     y = (y_diag + y_off).reshape(b, s, h, p)
     return y, h_last
 
@@ -138,7 +136,9 @@ def ssm_layer(
         + params["dt_bias"].astype(jnp.float32)
     )
     a = -jnp.exp(params["a_log"].astype(jnp.float32))
-    y, _ = ssd_chunked(xs, dt, a, bmat.astype(jnp.float32), cmat.astype(jnp.float32), chunk)
+    y, _ = ssd_chunked(
+        xs, dt, a, bmat.astype(jnp.float32), cmat.astype(jnp.float32), chunk
+    )
     y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * xs.astype(
         jnp.float32
     )

@@ -62,7 +62,9 @@ def roofline_table(mesh: str = "single") -> str:
     ]
     for d in rows:
         if not d.get("ok"):
-            lines.append(f"| {d['arch']} | {d['shape']} | FAILED: {d.get('error','')} |")
+            lines.append(
+                f"| {d['arch']} | {d['shape']} | FAILED: {d.get('error','')} |"
+            )
             continue
         rf = d["roofline"]
         lines.append(

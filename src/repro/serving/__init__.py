@@ -1,12 +1,14 @@
 # Serving runtime: COW-paged KV cache (the paper's platform applied to
 # inference), batched decode engine, population-based SMC decoding, the
-# device-free scheduler simulator (DESIGN.md §9), and the fault
-# injection / recovery layer (DESIGN.md §10).
+# device-free scheduler simulator (DESIGN.md §9), the fault injection /
+# recovery layer (DESIGN.md §10), and the replicated-fleet router with
+# per-token streaming (DESIGN.md §12).
 
 from repro.serving.kv_cache import KVCacheConfig, PagedKVCache
 from repro.serving.engine import ServeEngine
 from repro.serving.smc_decode import SMCDecoder
 from repro.serving.faults import (
+    AllReplicasSaturated,
     DeviceLost,
     FaultEvent,
     FaultInjector,
@@ -18,21 +20,42 @@ from repro.serving.faults import (
     TransientStepFailure,
     chaos_schedule,
 )
+from repro.serving.router import (
+    PLACEMENT_POLICIES,
+    Replica,
+    Router,
+    RouterEventLog,
+    make_replicas,
+)
 from repro.serving.scheduler import (
+    PREEMPT_POLICIES,
     TUNED_DEFAULTS,
     AdmissionRefused,
     DecodeRequest,
+    LongestWait,
+    NewestFirst,
+    PreemptPolicy,
     Scheduler,
     SchedulerEventLog,
+    SlaAware,
     SlotTable,
+    TokenEvent,
     load_checkpoint,
+    resolve_preempt_policy,
     save_checkpoint,
+    stream_tokens,
 )
-from repro.serving.sim import CostModel, SimScheduler, simulate
+from repro.serving.sim import (
+    CostModel,
+    SimScheduler,
+    simulate,
+    simulate_router,
+)
 from repro.serving.traces import Trace, TraceRequest
 
 __all__ = [
     "AdmissionRefused",
+    "AllReplicasSaturated",
     "CostModel",
     "DecodeRequest",
     "DeviceLost",
@@ -42,21 +65,35 @@ __all__ = [
     "FaultRetriesExhausted",
     "InvariantViolation",
     "KVCacheConfig",
+    "LongestWait",
+    "NewestFirst",
+    "PLACEMENT_POLICIES",
+    "PREEMPT_POLICIES",
     "PagedKVCache",
+    "PreemptPolicy",
+    "Replica",
     "RequestStatus",
     "RetryPolicy",
+    "Router",
+    "RouterEventLog",
     "Scheduler",
     "SchedulerEventLog",
     "ServeEngine",
     "SimScheduler",
+    "SlaAware",
     "SlotTable",
     "SMCDecoder",
+    "TokenEvent",
     "TUNED_DEFAULTS",
     "Trace",
     "TraceRequest",
     "TransientStepFailure",
     "chaos_schedule",
     "load_checkpoint",
+    "make_replicas",
+    "resolve_preempt_policy",
     "save_checkpoint",
     "simulate",
+    "simulate_router",
+    "stream_tokens",
 ]

@@ -180,7 +180,9 @@ def _decode_step(
     cache, bid, pos = kvc.ensure_writable(ccfg, cache, mask)
     lengths_incl = cache.lengths + jnp.where(mask, 1, 0)  # include new token
 
-    n_scan = cfg.n_layers - (1 if (cfg.family == "moe" and cfg.first_layer_dense) else 0)
+    n_scan = cfg.n_layers - (
+        1 if (cfg.family == "moe" and cfg.first_layer_dense) else 0
+    )
     layer_offset = cfg.n_layers - n_scan
 
     if cfg.family == "moe" and cfg.first_layer_dense:
@@ -206,7 +208,9 @@ def _decode_step(
         return (h, cache_l.pool.data), None
 
     layer_ids = jnp.arange(n_scan, dtype=jnp.int32) + layer_offset
-    (x, data), _ = jax.lax.scan(body, (x, cache.pool.data), (params["blocks"], layer_ids))
+    (x, data), _ = jax.lax.scan(
+        body, (x, cache.pool.data), (params["blocks"], layer_ids)
+    )
     cache = cache._replace(pool=cache.pool._replace(data=data))
 
     x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)

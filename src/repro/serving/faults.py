@@ -49,6 +49,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 __all__ = [
+    "AllReplicasSaturated",
     "DeviceLost",
     "FaultEvent",
     "FaultInjector",
@@ -115,6 +116,21 @@ class FaultRetriesExhausted(RuntimeError):
 class DeviceLost(RuntimeError):
     """Unrecoverable device loss.  Raised before any state mutation:
     recovery is a fresh process restoring the last checkpoint."""
+
+
+class AllReplicasSaturated(RuntimeError):
+    """Requests are waiting but no scheduler (replica) can ever admit
+    them and no active work remains to free capacity.  Without this, the
+    loop would burn ticks forever — a decode tick per round with an
+    empty batch — while the wait queue never drains.  Raised (after a
+    ``("saturated", tick, rids)`` event) instead of the silent spin;
+    the simulator raises at the identical decision point so the surface
+    is differentially testable."""
+
+    def __init__(self, msg: str, *, tick: int, rids: Sequence[str] = ()):
+        super().__init__(msg)
+        self.tick = tick
+        self.rids = tuple(rids)
 
 
 class InvariantViolation(AssertionError):

@@ -149,9 +149,7 @@ def ensure_writable(
         # Delta copy: move only the token slots cur materialized; rows
         # with nothing to keep read the dump row (a zero page) instead
         # of the shared payload.
-        src = jnp.where(
-            need_copy & jnp.any(dirty_cur, axis=1), cur, pool.num_blocks
-        )
+        src = jnp.where(need_copy & jnp.any(dirty_cur, axis=1), cur, pool.num_blocks)
         payload = jnp.where(
             dirty_cur[:, None, None, :, None, None], pool.data[src], 0
         )

@@ -62,7 +62,7 @@ import dataclasses
 import math
 import pickle
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -74,6 +74,7 @@ from repro.core.config import CopyMode
 from repro.serving import faults as faults_lib
 from repro.serving.engine import ServeEngine
 from repro.serving.faults import (
+    AllReplicasSaturated,
     DeviceLost,
     FaultInjector,
     FaultKind,
@@ -91,16 +92,25 @@ from repro.smc import executor as executor_lib
 
 __all__ = [
     "AdmissionRefused",
+    "AllReplicasSaturated",
     "DecodeRequest",
+    "LongestWait",
+    "NewestFirst",
+    "PREEMPT_POLICIES",
+    "PreemptPolicy",
     "RequestStatus",
     "RetryPolicy",
     "Scheduler",
     "SchedulerEventLog",
     "SchedulerStats",
+    "SlaAware",
     "SlotTable",
+    "TokenEvent",
     "TUNED_DEFAULTS",
     "load_checkpoint",
+    "resolve_preempt_policy",
     "save_checkpoint",
+    "stream_tokens",
 ]
 
 # Knob values from the simulator sweep (``scripts/autotune.py``,
@@ -148,6 +158,155 @@ class AdmissionRefused(RuntimeError):
         if self.needed is None or self.available is None:
             return None
         return self.needed - self.available
+
+
+# -- pluggable preemption policy (DESIGN.md §12) ------------------------------
+
+
+class PreemptPolicy:
+    """Chooses the victim when the pressure backstop must evict.
+
+    A policy reads only the fields the real scheduler's ``_ReqState``
+    and the simulator's ``_SimReq`` share — ``req.deadline``,
+    ``req.arrive_at``, ``req.steps``, ``t_done``, ``n`` — so the same
+    policy object drives both and preemption decisions stay
+    decision-exact under the differential tests.  ``select`` must be
+    deterministic (ties broken by batch position) and must return one
+    of ``active``; the backstop re-evaluates after each eviction, so a
+    policy never plans more than one victim at a time.
+    """
+
+    name = "base"
+
+    def select(self, active: Sequence, tick: int):
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # knob dumps in bench configs / autotuner
+        return f"{type(self).__name__}()"
+
+
+class NewestFirst(PreemptPolicy):
+    """The historical backstop: evict the most recently admitted
+    request.  The oldest requests keep finishing, and a resume goes to
+    the queue front ahead of fresh admissions, so there is no thrash."""
+
+    name = "newest"
+
+    def select(self, active: Sequence, tick: int):
+        return active[-1]
+
+
+class SlaAware(PreemptPolicy):
+    """Deadline-aware backstop: evict the request with the most
+    deadline *slack* — ``deadline - tick - remaining_steps`` — because
+    it can best absorb a preempt/replay round-trip and still meet its
+    SLA.  Requests with no deadline have infinite slack and are
+    evicted first (there is no SLA to bust); ties break newest-first,
+    degenerating to :class:`NewestFirst` when nothing carries a
+    deadline."""
+
+    name = "sla"
+
+    def select(self, active: Sequence, tick: int):
+        def slack(item):
+            i, s = item
+            d = s.req.deadline
+            left = s.req.steps - s.t_done
+            return (math.inf if d is None else d - tick - left, i)
+
+        return max(enumerate(active), key=slack)[1]
+
+
+class LongestWait(PreemptPolicy):
+    """Fairness backstop: protect the request that has waited longest.
+    The victim is the latest arrival (largest ``arrive_at``; ties break
+    newest-first), so a request that already queued through a busy
+    period is not also the one repeatedly evicted."""
+
+    name = "longest_wait"
+
+    def select(self, active: Sequence, tick: int):
+        return max(enumerate(active), key=lambda it: (it[1].req.arrive_at, it[0]))[1]
+
+
+PREEMPT_POLICIES = {
+    "newest": NewestFirst,
+    "sla": SlaAware,
+    "longest_wait": LongestWait,
+}
+
+
+def resolve_preempt_policy(
+    policy: Union[str, PreemptPolicy, None],
+) -> PreemptPolicy:
+    """Accepts a registry name, a policy instance, or None (→ the
+    newest-first default); rejects unknown names loudly."""
+    if policy is None:
+        return NewestFirst()
+    if isinstance(policy, str):
+        cls = PREEMPT_POLICIES.get(policy)
+        if cls is None:
+            raise ValueError(
+                f"unknown preempt policy {policy!r} "
+                f"(known: {sorted(PREEMPT_POLICIES)})"
+            )
+        return cls()
+    return policy
+
+
+# -- per-token streaming (DESIGN.md §12) --------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEvent:
+    """One committed decode step of one request, as seen by a streaming
+    consumer (``Scheduler(on_token=...)`` / :meth:`Scheduler.stream`).
+
+    ``token`` is the post-resample token vector actually fed to the
+    decode step (``[n] int32``) and ``ancestors`` the resampling
+    ancestor vector applied immediately before it (None when the step
+    did not resample) — together they are exactly the request's replay
+    log, so :func:`stream_tokens` can reassemble the lineage-rewritten
+    token matrix ``run()`` returns, bit for bit.  Events are emitted
+    only for *committed* ticks (the executor's trailing-edge ``after``
+    hook): a rolled-back fault attempt never leaks tokens, and a
+    preempted request's replay re-derives pages without re-emitting.
+
+    The last event of a request has ``final=True``, ``token=None``, and
+    carries the terminal :class:`~repro.serving.faults.RequestStatus`
+    value in ``status`` (``"ok"``, ``"expired"``, ...)."""
+
+    rid: str
+    t: int  # step index within the request (== t_done on the final marker)
+    token: Optional[np.ndarray]  # [n] int32; None on the final marker
+    ancestors: Optional[np.ndarray]  # resample ancestors before this token
+    tick: int  # scheduler tick at emission
+    final: bool = False
+    status: str = "ok"
+
+
+def stream_tokens(events: Sequence[TokenEvent], *, n: int, steps: int) -> np.ndarray:
+    """Reassemble one request's streamed events into the ``[n, steps]``
+    token matrix its batch result carries (``SMCDecodeResult.tokens``).
+
+    Gather-then-append mirrors the token-trace store's lineage
+    semantics: each resampling event rewrites the attribution of every
+    earlier column, which is why a streaming consumer receives
+    ``(token, ancestors)`` pairs rather than final rows.  Terminated
+    requests zero-pad past their streamed prefix, exactly like the
+    scheduler's finalization."""
+    hist = np.zeros((n, 0), np.int32)
+    for ev in events:
+        if ev.token is None:
+            continue
+        if ev.ancestors is not None:
+            hist = hist[np.asarray(ev.ancestors)]
+        tok = np.asarray(ev.token, np.int32).reshape(n, 1)
+        hist = np.concatenate([hist, tok], axis=1)
+    if hist.shape[1] < steps:
+        pad = np.zeros((n, steps - hist.shape[1]), np.int32)
+        hist = np.concatenate([hist, pad], axis=1)
+    return hist[:, :steps]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -317,6 +476,35 @@ class SchedulerEventLog:
             + sum(self.grow_wall_s)
         )
 
+    def latency_ticks(self) -> Dict[str, float]:
+        """p50/p99 of queueing (arrival → first admission) and
+        completion (arrival → terminal event) latency, in scheduler
+        *ticks* — the deterministic counterpart of the simulator's
+        modeled-seconds ``latency_percentiles()``.  Every quantity here
+        is a function of the decision sequence alone (no clock, no
+        host), so the bench can gate these exactly across machines.
+        Resumes don't re-stamp admission; every typed termination
+        (complete/cancel/expired/shed/poisoned) stamps completion."""
+        admit: Dict[str, int] = {}
+        done: Dict[str, int] = {}
+        for e in self.events:
+            if e[0] == "admit":
+                admit.setdefault(e[1], e[2])
+            elif e[0] in ("complete", "cancel", "expired", "shed", "poisoned"):
+                done.setdefault(e[1], e[2])
+        out: Dict[str, float] = {}
+        for label, stamps in (("queue", admit), ("completion", done)):
+            lat = [
+                t - self.requests[rid]["arrive_at"]
+                for rid, t in stamps.items()
+                if rid in self.requests
+            ]
+            for p in (50, 99):
+                out[f"{label}_p{p}"] = (
+                    float(np.percentile(lat, p)) if lat else float("nan")
+                )
+        return out
+
     def record_request(self, req: "DecodeRequest") -> None:
         self.requests[req.rid] = {
             "arrive_at": req.arrive_at,
@@ -381,6 +569,10 @@ class _ReqState:
         # both the KV values and the COW sharing structure.
         self.fed: List[np.ndarray] = []
         self.forks: Dict[int, np.ndarray] = {}
+        # Streaming cursor: fed[t] for t < emitted_t has been delivered
+        # to the on_token consumer.  Survives preemption (replay never
+        # appends to fed, so a resume cannot double-emit).
+        self.emitted_t = 0
         self.grew0 = 0
         self.oom0 = False
         self.preemptions = 0
@@ -447,6 +639,19 @@ class Scheduler:
     * ``watchdog`` — run :meth:`check_invariants` at every boundary and
       raise :class:`~repro.serving.faults.InvariantViolation` at the
       first corrupted block (debug; each check is a device sync).
+
+    The serving-surface knobs (DESIGN.md §12):
+
+    * ``preempt_policy`` — who the pressure backstop evicts: a
+      :data:`PREEMPT_POLICIES` name (``"newest"`` — the historical
+      default, ``"sla"``, ``"longest_wait"``) or a
+      :class:`PreemptPolicy` instance.  The same object drives the
+      simulator, so recorded traces stay decision-exact per policy.
+    * ``on_token`` — per-token streaming callback, invoked with
+      :class:`TokenEvent`\\ s from the executor's trailing edge as each
+      tick *commits* (so callers see tokens before :meth:`run` returns,
+      and a rolled-back fault attempt or a preemption replay never
+      re-emits).  :meth:`stream` wraps the same surface as a generator.
     """
 
     def __init__(
@@ -469,6 +674,8 @@ class Scheduler:
         admission: str = "fifo",
         queue_limit: Optional[int] = None,
         watchdog: bool = False,
+        preempt_policy: Union[str, PreemptPolicy, None] = "newest",
+        on_token: Optional[Callable[[TokenEvent], None]] = None,
     ):
         if admission not in ("fifo", "shed"):
             raise ValueError(f"unknown admission policy {admission!r}")
@@ -487,18 +694,27 @@ class Scheduler:
         self.admission = admission
         self.queue_limit = queue_limit
         self.watchdog = watchdog
+        self.preempt_policy = resolve_preempt_policy(preempt_policy)
+        self.on_token = on_token
         # Observation/intervention hook at the leading edge of every
         # token boundary (tests force preemption; benches sample pool
         # occupancy) — runs before admission/growth/preemption.
         self.on_boundary = on_boundary
         self.slots = SlotTable(engine.cache_cfg.max_seqs)
         self.stats = SchedulerStats()
+        # Residual device-sync stall inside committed token steps (wall
+        # seconds; not in SchedulerStats — the sim has no clock and the
+        # stats dicts are compared verbatim in the differential tests).
+        self.sync_wait_s = 0.0
         if executor is None:
             executor = executor_lib.PopulationExecutor()
         self._exec = executor
         self._queue: List[_ReqState] = []  # FIFO; resumes go to the front
         self._active: List[_ReqState] = []  # admission order
         self._results: Dict[str, SMCDecodeResult] = {}
+        # Requests finalized since the last streaming flush, with their
+        # terminal status — the trailing-edge flush drains this.
+        self._pending_final: List[tuple] = []
         self.tick = 0
 
     # -- public API ----------------------------------------------------------
@@ -518,31 +734,160 @@ class Scheduler:
         admission / growth / preemption, the chunk is one jitted decode
         over the active batch, departures finalize on the trailing edge
         (DESIGN.md §4/§8)."""
-        carry = None
-        while self._queue or self._active:
-            carry, _, _ = self._exec.run(
-                carry,
-                n_steps=1,
-                chunk_fn=self._token_step,
-                policy=executor_lib.GrowthPolicy(
-                    # Growth is driven from the boundary hook (several
-                    # pools); the engine is host-mutable, so there is no
-                    # checkpoint to retry from.
-                    grow=self.grow,
-                    chunk=1,
-                    factor=self.grow_factor,
-                    retry=False,
-                ),
-                boundary=self._boundary,
-                traced=False,
-            )
+        while self.step():
+            pass
         if self.watchdog:
             self._run_watchdog()
+        return self._results
+
+    def step(self) -> bool:
+        """One token boundary plus one decode tick — the unit a
+        :class:`~repro.serving.router.Router` interleaves across
+        replicas.  Returns True while submitted work remains (so
+        ``while sched.step(): ...`` is exactly :meth:`run`'s loop)."""
+        if not (self._queue or self._active):
+            return False
+        self._exec.run(
+            None,
+            n_steps=1,
+            chunk_fn=self._token_step,
+            policy=executor_lib.GrowthPolicy(
+                # Growth is driven from the boundary hook (several
+                # pools); the engine is host-mutable, so there is no
+                # checkpoint to retry from.
+                grow=self.grow,
+                chunk=1,
+                factor=self.grow_factor,
+                retry=False,
+            ),
+            boundary=self._boundary,
+            after=self._after_chunk,
+            traced=False,
+        )
+        return bool(self._queue or self._active)
+
+    def stream(self) -> Iterator[TokenEvent]:
+        """Drive the schedule like :meth:`run`, yielding
+        :class:`TokenEvent`\\ s as each tick commits — tokens are
+        observable *during* the run, including across preemptions,
+        retries, and typed terminations.  Completed results are in
+        :attr:`results` once the iterator is exhausted.  An ``on_token``
+        callback installed at construction keeps firing (the stream
+        tees, it does not steal)."""
+        buf: List[TokenEvent] = []
+        prev = self.on_token
+
+        def tee(ev: TokenEvent) -> None:
+            if prev is not None:
+                prev(ev)
+            buf.append(ev)
+
+        self.on_token = tee
+        try:
+            while self.step():
+                while buf:
+                    yield buf.pop(0)
+            while buf:
+                yield buf.pop(0)
+        finally:
+            self.on_token = prev
+        if self.watchdog:
+            self._run_watchdog()
+
+    @property
+    def results(self) -> Dict[str, SMCDecodeResult]:
+        """Results finalized so far (complete once :meth:`run` returns
+        or :meth:`stream` is exhausted)."""
         return self._results
 
     @property
     def executor(self) -> executor_lib.PopulationExecutor:
         return self._exec
+
+    # -- the router's placement protocol (shared with SimScheduler) ----------
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._queue or self._active)
+
+    @property
+    def free_slots(self) -> int:
+        return self.slots.free_slots
+
+    @property
+    def max_seqs(self) -> int:
+        return self.engine.cache_cfg.max_seqs
+
+    @property
+    def block_size(self) -> int:
+        return self.engine.cache_cfg.block_size
+
+    @property
+    def free_blocks(self) -> int:
+        return int(self.engine.free_blocks)
+
+    @property
+    def num_blocks(self) -> int:
+        return int(self.engine.num_blocks)
+
+    @property
+    def blocks_cap(self) -> int:
+        return self.engine.cache_cfg.pool_blocks_cap
+
+    @property
+    def active_particles(self) -> int:
+        return sum(s.n for s in self._active)
+
+    @property
+    def load_particles(self) -> int:
+        """Active *plus queued* particles — the router's load metric.
+        Queued demand must count: during a burst round the router
+        places several requests before any replica steps, and a metric
+        of admitted work alone would call every replica empty."""
+        return self.active_particles + sum(s.n for s in self._queue)
+
+    # -- streaming emission (trailing edge) ----------------------------------
+
+    def _after_chunk(self, carry, ts) -> None:
+        """The executor's trailing edge: the tick's effects are
+        committed (a rolled-back attempt never reaches here), so flush
+        streaming events now."""
+        self._flush_streams()
+
+    def _flush_streams(self) -> None:
+        if self.on_token is None:
+            self._pending_final.clear()
+            return
+        for s in self._active:
+            self._emit_committed(s)
+        for s, status in self._pending_final:
+            self._emit_committed(s)
+            self.on_token(
+                TokenEvent(
+                    rid=s.req.rid,
+                    t=s.t_done,
+                    token=None,
+                    ancestors=None,
+                    tick=self.tick,
+                    final=True,
+                    status=status.value,
+                )
+            )
+        self._pending_final.clear()
+
+    def _emit_committed(self, s: _ReqState) -> None:
+        while s.emitted_t < s.t_done:
+            t = s.emitted_t
+            self.on_token(
+                TokenEvent(
+                    rid=s.req.rid,
+                    t=t,
+                    token=s.fed[t],
+                    ancestors=s.forks.get(t),
+                    tick=self.tick,
+                )
+            )
+            s.emitted_t += 1
 
     def preempt(self, rid: str) -> None:
         """Force-preempt an active request (callable from the
@@ -587,9 +932,7 @@ class Scheduler:
         bit-exactly.  Mesh-sharded traces are not supported."""
         for s in self._active + self._queue:
             if s.req.mesh is not None:
-                raise NotImplementedError(
-                    "checkpoint of mesh-sharded token traces"
-                )
+                raise NotImplementedError("checkpoint of mesh-sharded token traces")
         cfg = self.engine.cache_cfg
         self.stats.checkpoints += 1
         return {
@@ -618,9 +961,7 @@ class Scheduler:
         }
 
     @classmethod
-    def restore(
-        cls, engine: ServeEngine, state: dict, **knobs
-    ) -> "Scheduler":
+    def restore(cls, engine: ServeEngine, state: dict, **knobs) -> "Scheduler":
         """Rebuild a mid-run scheduler from a :meth:`checkpoint` dict,
         possibly in a fresh process: the pool, slot table, per-request
         SMC state + replay logs, and RNG keys come back bit-exactly, so
@@ -1018,9 +1359,7 @@ class Scheduler:
         for s in waiting[self.queue_limit :]:
             self._terminate(s, RequestStatus.SHED, "shed")
 
-    def _terminate(
-        self, s: _ReqState, status: RequestStatus, event: str
-    ) -> None:
+    def _terminate(self, s: _ReqState, status: RequestStatus, event: str) -> None:
         """Typed early termination (cancel / expire / poison / shed):
         emit the decision, bump the matching stat, and finalize with the
         partial result — pages freed, batch unperturbed."""
@@ -1059,14 +1398,16 @@ class Scheduler:
                 self.grow_factor,
             )
         # ...preemption second: capacity is exhausted (cap reached or
-        # growth off) and headroom still short of the worst case.
-        # Newest-first keeps the oldest requests finishing (no thrash:
-        # a resume goes to the queue front, ahead of fresh admissions).
+        # growth off) and headroom still short of the worst case.  The
+        # victim choice is the pluggable policy's (newest-first by
+        # default — the oldest requests keep finishing, and a resume
+        # goes to the queue front, ahead of fresh admissions, so there
+        # is no thrash); re-evaluated after every eviction.
         while (
             self.engine.free_blocks < math.ceil(self.preempt_margin * need)
             and len(self._active) > 1
         ):
-            victim = self._active[-1]
+            victim = self.preempt_policy.select(self._active, self.tick)
             self._preempt(victim)
             need = sum(s.n for s in self._active)
         for s in self._active:
@@ -1181,6 +1522,24 @@ class Scheduler:
         tick — same RNG keys, same pool state — which is the chaos
         harness's differential gate."""
         if not self._active:
+            if self._queue:
+                # The boundary placed nothing and nothing is running:
+                # this tick would be pure spin (burn a tick, change no
+                # state, retry the same refused admissions forever).
+                # Surface it as a typed event + exception instead —
+                # reachable when an ``on_boundary`` hook drains the
+                # batch, and the seam the router's saturation check
+                # mirrors (the simulator raises at the same point).
+                rids = tuple(s.req.rid for s in self._queue)
+                if self.event_log is not None:
+                    self.event_log.emit("saturated", self.tick, rids)
+                raise AllReplicasSaturated(
+                    f"tick {self.tick}: {len(rids)} request(s) waiting "
+                    f"({', '.join(map(repr, rids))}) but none admitted "
+                    "and no active request remains to free capacity",
+                    tick=self.tick,
+                    rids=rids,
+                )
             self.tick += 1
             return carry, ()
         snap = self._snapshot()
@@ -1292,25 +1651,34 @@ class Scheduler:
                 # rows go non-finite, exactly like a numerically
                 # diverged model output would.
                 logits = logits.at[s.lo : s.lo + s.n].set(jnp.nan)
-        finite = None
+        # Double-buffered tail: dispatch the device->host transfer the
+        # quarantine scan needs, then run the per-request bookkeeping
+        # that does NOT read sync values (logits slices, trace appends,
+        # replay-log appends) while the decode + transfer drain.  Only
+        # then force the values — the residual stall is telemetered.
+        finite_dev = None
         if self.quarantine:
-            finite = np.asarray(jnp.all(jnp.isfinite(logits), axis=-1))
+            finite_dev = jnp.all(jnp.isfinite(logits), axis=-1)
+            if hasattr(finite_dev, "copy_to_host_async"):
+                finite_dev.copy_to_host_async()
+        for s, token in pending:
+            s.logits = logits[s.lo : s.lo + s.n]
+            s.trace.append(token.astype(jnp.int32))
+            s.fed.append(np.asarray(token, dtype=np.int32))
+        t_sync = time.perf_counter()
+        finite = None if finite_dev is None else np.asarray(finite_dev)
         used = eng.used_blocks  # one device sync, shared by all requests
+        self.sync_wait_s += time.perf_counter() - t_sync
         if self.event_log is not None:
             self.event_log.step_wall_s.append(time.perf_counter() - t0)
             self.event_log.emit(
                 "step", self.tick, tuple(s.req.rid for s in self._active), used
             )
         poisoned: List[_ReqState] = []
-        for s, token in pending:
-            s.logits = logits[s.lo : s.lo + s.n]
-            s.trace.append(token.astype(jnp.int32))
-            s.fed.append(np.asarray(token, dtype=np.int32))
+        for s, _ in pending:
             s.used.append(used)
             s.t_done += 1
-            if finite is not None and not bool(
-                finite[s.lo : s.lo + s.n].all()
-            ):
+            if finite is not None and not bool(finite[s.lo : s.lo + s.n].all()):
                 poisoned.append(s)
         self.tick += 1
         self.stats.ticks += 1
@@ -1383,6 +1751,11 @@ class Scheduler:
         if s in self._queue:
             self._queue.remove(s)
         s.lo = None
+        if self.on_token is not None:
+            # Departed requests leave _active before the trailing-edge
+            # flush runs — park them so their last committed tokens and
+            # the final status marker still stream out.
+            self._pending_final.append((s, status))
         if ok:
             self.stats.completed += 1
         if self.shrink_on_complete and self._active:

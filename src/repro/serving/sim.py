@@ -48,6 +48,7 @@ import numpy as np
 from repro.core import pool as pool_lib
 from repro.serving import faults as faults_lib
 from repro.serving.faults import (
+    AllReplicasSaturated,
     DeviceLost,
     FaultInjector,
     FaultKind,
@@ -66,9 +67,11 @@ from repro.roofline.write_path import compact_cost, grow_cost
 from repro.serving.kv_cache import KVCacheConfig
 from repro.serving.scheduler import (
     AdmissionRefused,
+    PreemptPolicy,
     SchedulerEventLog,
     SchedulerStats,
     SlotTable,
+    resolve_preempt_policy,
 )
 from repro.serving.traces import Trace, TraceRequest
 
@@ -79,6 +82,7 @@ __all__ = [
     "SimScheduler",
     "first_divergence",
     "simulate",
+    "simulate_router",
 ]
 
 
@@ -161,9 +165,7 @@ class CostModel:
             statistics.fmean(log.prefill_wall_s) if log.prefill_wall_s else step
         )
         relocated = sum(log.grow_old_blocks)
-        grow_b = (
-            sum(log.grow_wall_s) / relocated if relocated else 0.01 * step
-        )
+        grow_b = (sum(log.grow_wall_s) / relocated if relocated else 0.01 * step)
         return cls(
             step_s=step,
             prefill_s=prefill,
@@ -281,6 +283,7 @@ class _SimReq:
         self.arrival_s: Optional[float] = None
         self.arrival_tick: Optional[int] = None
         self.admit_s: Optional[float] = None
+        self.admit_tick: Optional[int] = None
         self.done_s: Optional[float] = None
         self.done_tick: Optional[int] = None
 
@@ -338,6 +341,25 @@ class SimResult:
                 )
         return out
 
+    def latency_ticks(self) -> Dict[str, float]:
+        """Tick-based p50/p99 latencies, measured from the request's
+        *declared* arrival (``arrive_at``) like the real scheduler's
+        :meth:`SchedulerEventLog.latency_ticks` — the two must agree
+        exactly on a decision-exact replay, which is what lets the
+        bench gate latency deterministically across machines."""
+        out: Dict[str, float] = {}
+        for label, key in (("queue", "admit_tick"), ("completion", "done_tick")):
+            lat = [
+                spec[key] - spec["arrive_at"]
+                for spec in self.requests.values()
+                if spec.get(key) is not None
+            ]
+            for p in (50, 99):
+                out[f"{label}_p{p}"] = (
+                    float(np.percentile(lat, p)) if lat else float("nan")
+                )
+        return out
+
 
 class SimScheduler:
     """The model of :class:`~repro.serving.scheduler.Scheduler`: same
@@ -369,6 +391,7 @@ class SimScheduler:
         retry_policy: Optional[RetryPolicy] = None,
         admission: str = "fifo",
         queue_limit: Optional[int] = None,
+        preempt_policy=None,
     ):
         if admission not in ("fifo", "shed"):
             raise ValueError(f"unknown admission policy {admission!r}")
@@ -390,6 +413,10 @@ class SimScheduler:
         self.retry_policy = retry_policy or RetryPolicy()
         self.admission = admission
         self.queue_limit = queue_limit
+        # The same policy object (or registry name) the real scheduler
+        # takes — `_SimReq` exposes the same fields `select` reads, so
+        # preemption decisions mirror per policy.
+        self.preempt_policy: PreemptPolicy = resolve_preempt_policy(preempt_policy)
         self.slots = SlotTable(cache_cfg.max_seqs)
         # initial_blocks overrides the config's fresh-pool size — replay
         # against an engine whose pool already grew (a warm recording).
@@ -415,14 +442,26 @@ class SimScheduler:
         self._queue.append(_SimReq(req))
 
     def run(self) -> SimResult:
-        while self._queue or self._active:
-            self._boundary()
-            self._token_step()
+        while self.step():
+            pass
+        return self.result()
+
+    def step(self) -> bool:
+        """One boundary + one modeled decode tick; mirrors
+        :meth:`Scheduler.step` so a router can interleave simulated
+        replicas exactly like real ones."""
+        if not (self._queue or self._active):
+            return False
+        self._boundary()
+        self._token_step()
+        return bool(self._queue or self._active)
+
+    def result(self) -> SimResult:
+        """The schedule's outcome so far (complete once :meth:`run`
+        returns or :meth:`step` goes False)."""
         # t_done == steps for completed requests; terminated ones
         # contribute their completed prefix.
-        tokens = sum(
-            s.req.n_particles * s.t_done for s in self._done.values()
-        )
+        tokens = sum(s.req.n_particles * s.t_done for s in self._done.values())
         return SimResult(
             trace_name="",
             decisions=self.decisions,
@@ -442,7 +481,9 @@ class SimScheduler:
                     "arrival_s": s.arrival_s,
                     "admit_s": s.admit_s,
                     "done_s": s.done_s,
+                    "arrive_at": s.req.arrive_at,
                     "arrival_tick": s.arrival_tick,
+                    "admit_tick": s.admit_tick,
                     "done_tick": s.done_tick,
                     "preemptions": s.preemptions,
                     "status": s.status,
@@ -450,6 +491,52 @@ class SimScheduler:
                 for rid, s in self._done.items()
             },
         )
+
+    # -- the router's placement protocol (mirrors Scheduler's) ---------------
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._queue or self._active)
+
+    @property
+    def free_slots(self) -> int:
+        return self.slots.free_slots
+
+    @property
+    def max_seqs(self) -> int:
+        return self.cache_cfg.max_seqs
+
+    @property
+    def block_size(self) -> int:
+        return self.cache_cfg.block_size
+
+    @property
+    def free_blocks(self) -> int:
+        return self.pool.free
+
+    @property
+    def num_blocks(self) -> int:
+        return self.pool.num_blocks
+
+    @property
+    def blocks_cap(self) -> int:
+        return self.cap
+
+    @property
+    def active_particles(self) -> int:
+        return sum(s.n for s in self._active)
+
+    @property
+    def load_particles(self) -> int:
+        """Active plus queued particles (the router's load metric —
+        mirrors ``Scheduler.load_particles``)."""
+        return self.active_particles + sum(s.n for s in self._queue)
+
+    @property
+    def results(self) -> Dict[str, "_SimReq"]:
+        """Finalized requests in completion order (the router collects
+        per-replica completions from here, like `Scheduler.results`)."""
+        return self._done
 
     def preempt(self, rid: str) -> None:
         for s in self._active:
@@ -642,6 +729,7 @@ class SimScheduler:
             s.started = True
             self.stats.admitted += 1
             s.admit_s = self.time
+            s.admit_tick = self.tick
         else:
             self.stats.resumes += 1
         # prefill once, then fork across the range: nb blocks, each
@@ -703,9 +791,7 @@ class SimScheduler:
         for s in waiting[self.queue_limit :]:
             self._terminate(s, RequestStatus.SHED, "shed")
 
-    def _terminate(
-        self, s: _SimReq, status: RequestStatus, event: str
-    ) -> None:
+    def _terminate(self, s: _SimReq, status: RequestStatus, event: str) -> None:
         self.decisions.append((event, s.req.rid, self.tick))
         setattr(self.stats, status.value, getattr(self.stats, status.value) + 1)
         self._finalize(s, status=status)
@@ -730,11 +816,23 @@ class SimScheduler:
             self.pool.free < math.ceil(self.preempt_margin * need)
             and len(self._active) > 1
         ):
-            self._preempt(self._active[-1])
+            self._preempt(self.preempt_policy.select(self._active, self.tick))
             need = sum(s.n for s in self._active)
 
     def _token_step(self) -> None:
         if not self._active:
+            if self._queue:
+                # Mirror of the real scheduler's anti-spin surface: a
+                # tick with waiters and no admitted work would change
+                # nothing, forever.
+                rids = tuple(s.req.rid for s in self._queue)
+                self.decisions.append(("saturated", self.tick, rids))
+                raise AllReplicasSaturated(
+                    f"tick {self.tick}: {len(rids)} request(s) waiting "
+                    "but none admitted and no active request remains",
+                    tick=self.tick,
+                    rids=rids,
+                )
             self.tick += 1
             return
         # Fault-model mirror (DESIGN.md §10): consume the schedule per
@@ -837,9 +935,35 @@ def simulate(
     return res
 
 
-def first_divergence(
-    real: List[tuple], sim: List[tuple]
-) -> Optional[str]:
+def simulate_router(
+    trace: Trace,
+    cache_cfg: KVCacheConfig,
+    cost: CostModel,
+    *,
+    n_replicas: int = 2,
+    placement="least_loaded",
+    **knobs,
+):
+    """Run a trace through a fleet of ``n_replicas`` fresh
+    :class:`SimScheduler`\\ s behind the *same*
+    :class:`~repro.serving.router.Router` class that drives real
+    schedulers (it only speaks the shared placement protocol), and
+    return the router.  Callers inspect ``router.event_log`` (fleet
+    placement decisions, compared tuple-for-tuple against a real
+    fleet's), ``router.results``, and each
+    ``router.replicas[i].scheduler`` for per-replica decision logs and
+    stats — the replicated-serving differential oracle."""
+    from repro.serving.router import Router, RouterEventLog
+
+    scheds = [SimScheduler(cache_cfg, cost, **knobs) for _ in range(n_replicas)]
+    router = Router(scheds, placement=placement, event_log=RouterEventLog())
+    for r in trace.requests:
+        router.submit(r)
+    router.run()
+    return router
+
+
+def first_divergence(real: List[tuple], sim: List[tuple]) -> Optional[str]:
     """First index where two decision sequences disagree (None when
     decision-exact) — the differential test's error message."""
     for i, (a, b) in enumerate(zip(real, sim, strict=False)):

@@ -47,6 +47,7 @@ __all__ = [
     "staggered",
     "to_decode_requests",
     "to_json",
+    "with_deadlines",
     "with_synthetic_forks",
 ]
 
@@ -218,6 +219,29 @@ def diurnal(
     return _build(
         name or f"diurnal{period}", arrivals, n_particles, steps, plen, seed, rng
     )
+
+
+def with_deadlines(
+    trace: Trace,
+    slack_x: float = 2.0,
+    floor: int = 4,
+    tight_every: int = 0,
+    tight_slack_x: float = 1.1,
+) -> Trace:
+    """Attach SLA deadlines to a trace: each request's deadline is
+    ``arrive_at + max(floor, ceil(slack_x * steps))`` ticks — a service
+    level proportional to the work requested.  With ``tight_every = k >
+    0``, every ``k``-th request gets the tighter ``tight_slack_x``
+    multiplier instead: the mixed loose/tight population the SLA-aware
+    preemption policy is measured on (bench_scheduler's ``sla_bursty``
+    scenario).  Deterministic — no rng draw — so the same trace gets
+    the same deadlines in every process."""
+    reqs: List[TraceRequest] = []
+    for i, r in enumerate(trace.requests):
+        x = tight_slack_x if tight_every and (i + 1) % tight_every == 0 else slack_x
+        deadline = r.arrive_at + max(floor, int(np.ceil(x * r.steps)))
+        reqs.append(dataclasses.replace(r, deadline=deadline))
+    return dataclasses.replace(trace, requests=tuple(reqs))
 
 
 def with_synthetic_forks(trace: Trace, p_resample: float = 0.5) -> Trace:

@@ -211,6 +211,7 @@ class PopulationExecutor:
         need_per_step: int = 0,
         pool: Optional[PoolView] = None,
         boundary: Optional[Callable[[Any, jax.Array], Any]] = None,
+        after: Optional[Callable[[Any, jax.Array], None]] = None,
         traced: Optional[bool] = None,
     ) -> Tuple[Any, List[Any], int]:
         """Drive ``chunk_fn`` over ``n_steps`` generations.
@@ -240,6 +241,13 @@ class PopulationExecutor:
           export-slot overflow, which capacity cannot fix) falls
           through and stays surfaced.
 
+        The optional ``after`` hook is the boundary's trailing edge: it
+        runs once per *committed* chunk — after the chunk's outputs are
+        accepted, never for a rolled-back attempt — which makes it the
+        safe emission point for incremental consumers (the serving
+        scheduler flushes per-token streaming events from here, so a
+        retried tick can never leak tokens that were later discarded).
+
         Returns ``(carry, outs, grew)`` where ``grew`` counts every
         growth event during this call (watermark, retry, and ``ensure``
         calls made by ``boundary``/``chunk_fn`` on this executor).
@@ -247,7 +255,10 @@ class PopulationExecutor:
         if traced is None:
             traced = not policy.grow
         if traced:
-            carry, out = chunk_fn(carry, jnp.arange(n_steps))
+            ts = jnp.arange(n_steps)
+            carry, out = chunk_fn(carry, ts)
+            if after is not None:
+                after(carry, ts)
             return carry, [out], 0
         start_grew = self.stats.grow_events
         chunk = max(1, policy.chunk)
@@ -283,4 +294,6 @@ class PopulationExecutor:
                     continue  # retry the same chunk from the clean checkpoint
             carry, t = new_carry, t + g
             outs.append(out)
+            if after is not None:
+                after(carry, ts)
         return carry, outs, self.stats.grow_events - start_grew

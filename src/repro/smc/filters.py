@@ -196,7 +196,9 @@ class ParticleFilter:
         """Inference task: filter against observations ``[T, ...]``."""
         return self._run(key, params, observations, simulate=False)
 
-    def simulate(self, key: jax.Array, params: Any, dummy_obs: jax.Array) -> FilterResult:
+    def simulate(
+        self, key: jax.Array, params: Any, dummy_obs: jax.Array
+    ) -> FilterResult:
         """Simulation task: run the model forward with no conditioning.
 
         No resampling occurs, hence no copies — the paper's second task,
@@ -376,18 +378,14 @@ class ParticleFilter:
                 # APF correction: carried weight becomes w/mu of ancestor.
                 new_logw = jnp.full((n,), -math.log(n))
                 if ssm.lookahead is not None:
-                    new_logw = resampling.normalize(
-                        logw[ancestors] - lw[ancestors]
-                    )
+                    new_logw = resampling.normalize(logw[ancestors] - lw[ancestors])
                 return state, store, new_logw
 
             def no(operand):
                 _, state, store, logw = operand
                 return state, store, logw
 
-            state, store, logw = jax.lax.cond(
-                do, yes, no, (key, state, store, logw)
-            )
+            state, store, logw = jax.lax.cond(do, yes, no, (key, state, store, logw))
             return state, store, logw, do
 
         def propagate(key, state, t, logw):
@@ -531,7 +529,9 @@ class ParticleFilter:
         n_extras = 2 if csmc is not None else 0
 
         def build_chunk():
-            def chunk_body(key, state, store, logw, logz, ts, params, observations, *extras):
+            def chunk_body(
+                key, state, store, logw, logz, ts, params, observations, *extras
+            ):
                 scan_step, _ = self._make_sharded_step(
                     params, observations, simulate, extras if csmc is not None else None
                 )
@@ -632,9 +632,7 @@ class ParticleFilter:
                 do = t > 0
             else:
                 glogw = sharded_lib.gather_global(logw, axis)
-                do = (t > 0) & resampling.should_resample(
-                    glogw, cfg.ess_threshold
-                )
+                do = (t > 0) & resampling.should_resample(glogw, cfg.ess_threshold)
 
             def yes(operand):
                 key, state, store, logw = operand
@@ -647,9 +645,7 @@ class ParticleFilter:
                     # Conditional SMC: global particle 0 keeps the
                     # reference lineage (same pin on every shard).
                     _, use_ref = csmc
-                    ancestors = jnp.where(
-                        use_ref, ancestors.at[0].set(0), ancestors
-                    )
+                    ancestors = jnp.where(use_ref, ancestors.at[0].set(0), ancestors)
                 full_state = jax.tree.map(
                     lambda x: sharded_lib.gather_global(x, axis), state
                 )
@@ -665,9 +661,7 @@ class ParticleFilter:
                 _, state, store, logw = operand
                 return state, store, logw
 
-            state, store, logw = jax.lax.cond(
-                do, yes, no, (key, state, store, logw)
-            )
+            state, store, logw = jax.lax.cond(do, yes, no, (key, state, store, logw))
             return state, store, logw, do
 
         def propagate(key, state, t, logw, s):

@@ -76,7 +76,10 @@ def build() -> Tuple[SSMDef, None]:
         logw = jnp.where(survived, -jnp.inf, logw)
         hidden_total = hidden_total + n_hidden
         record = jnp.stack(
-            [hidden_total.astype(jnp.float32), jnp.broadcast_to(t, (n,)).astype(jnp.float32)],
+            [
+                hidden_total.astype(jnp.float32),
+                jnp.broadcast_to(t, (n,)).astype(jnp.float32),
+            ],
             axis=1,
         )
         return hidden_total, logw, record

@@ -74,9 +74,7 @@ def build() -> Tuple[SSMDef, None]:
         state = state.at[rows, first_free].set(
             jnp.where(do_birth[:, None], born_state, state[rows, first_free])
         )
-        exists = exists.at[rows, first_free].set(
-            exists[rows, first_free] | do_birth
-        )
+        exists = exists.at[rows, first_free].set(exists[rows, first_free] | do_birth)
         # --- weight: greedy nearest-detection association -----------------
         dets, det_mask = obs_t  # [M, 2], [M]
         d2 = jnp.sum(

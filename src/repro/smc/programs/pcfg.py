@@ -82,7 +82,9 @@ def _stack_cfg(n: int, mode: CopyMode) -> StoreConfig:
     )
 
 
-def build(mode: CopyMode = CopyMode.LAZY_SR, n_particles: int = 0) -> Tuple[SSMDef, PCFGParams]:
+def build(
+    mode: CopyMode = CopyMode.LAZY_SR, n_particles: int = 0
+) -> Tuple[SSMDef, PCFGParams]:
     params = default_params()
 
     def init(key, n, params):

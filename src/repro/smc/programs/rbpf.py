@@ -80,9 +80,7 @@ def build() -> Tuple[SSMDef, None]:
         # --- weight by exact predictive likelihood of y_t ---------------
         y_mean = 0.05 * xi_new * xi_new + m @ _B
         y_var = R_Y + jnp.einsum("i,nij,j->n", _B, p, _B)
-        logw = -0.5 * (
-            (y_t - y_mean) ** 2 / y_var + jnp.log(2 * math.pi * y_var)
-        )
+        logw = -0.5 * ((y_t - y_mean) ** 2 / y_var + jnp.log(2 * math.pi * y_var))
         # --- Kalman measurement update from y_t --------------------------
         k_gain = jnp.einsum("nij,j->ni", p, _B) / y_var[:, None]
         m = m + k_gain * (y_t - y_mean)[:, None]
@@ -130,7 +128,5 @@ def gen_data(key: jax.Array, t_steps: int) -> jax.Array:
 
     key, k0 = jax.random.split(key)
     xi0 = jax.random.normal(k0)
-    _, ys = jax.lax.scan(
-        body, (key, xi0, jnp.zeros(2)), jnp.arange(t_steps)
-    )
+    _, ys = jax.lax.scan(body, (key, xi0, jnp.zeros(2)), jnp.arange(t_steps))
     return ys

@@ -61,7 +61,9 @@ class Trainer:
         self.data = TokenPipeline(data_cfg)
         self.opt_cfg = opt_cfg
         self.cfg = train_cfg
-        self.ckpt = Checkpointer(train_cfg.checkpoint_dir, keep=train_cfg.keep_checkpoints)
+        self.ckpt = Checkpointer(
+            train_cfg.checkpoint_dir, keep=train_cfg.keep_checkpoints
+        )
         self._step_fn = jax.jit(self._train_step)
 
     def _train_step(self, params, opt_state, batch):

@@ -60,9 +60,7 @@ class TestTimeNormalization:
     def test_uniform_slowdown_is_host_factor_not_failure(self, tmp_path):
         """Every row 2x slower = a slower host, not a regression."""
         write_suite(tmp_path / "b", "s", {f"r{i}": (100.0, "") for i in range(5)})
-        write_suite(
-            tmp_path / "f", "s", {f"r{i}": (200.0, "") for i in range(5)}
-        )
+        write_suite(tmp_path / "f", "s", {f"r{i}": (200.0, "") for i in range(5)})
         assert run_compare(tmp_path / "b", tmp_path / "f") == 0
 
     def test_single_row_slowdown_fails(self, tmp_path):

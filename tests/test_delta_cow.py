@@ -70,9 +70,7 @@ def _delta_program(cfg: StoreConfig):
 
 def _valid_prefix(cfg: StoreConfig, s) -> np.ndarray:
     """Batch trajectories with positions past each length zeroed."""
-    mats = store_lib.materialize_batch(
-        cfg, s, jnp.arange(cfg.n, dtype=jnp.int32)
-    )
+    mats = store_lib.materialize_batch(cfg, s, jnp.arange(cfg.n, dtype=jnp.int32))
     valid = np.arange(cfg.capacity)[None, :] < np.asarray(s.lengths)[:, None]
     out = np.asarray(mats).copy()
     out[~valid] = 0
@@ -232,9 +230,7 @@ class TestKVCacheDelta:
         )
         assert int((np.asarray(cache_on.pool.parent) >= 0).sum()) > 0
         assert bool(pool_lib.free_stack_consistent(cache_on.pool))
-        assert bool(
-            pool_lib.refcount_matches_tables(cache_on.pool, cache_on.tables)
-        )
+        assert bool(pool_lib.refcount_matches_tables(cache_on.pool, cache_on.tables))
 
     def test_boundary_straddle_and_dump_row(self):
         """Regression: a step whose dirty slice straddles the last valid
@@ -317,9 +313,7 @@ class TestCloneChainParity:
             ).astype(jnp.int32)
             anc0 = resampling.resample_systematic(key, logw)
             new0 = tables[anc0]
-            d0, m0 = refcount_delta_ref(
-                new0.reshape(-1), tables.reshape(-1), nb
-            )
+            d0, m0 = refcount_delta_ref(new0.reshape(-1), tables.reshape(-1), nb)
             anc, new, d, m = clone_chain(
                 key, logw, tables, num_blocks=nb,
                 use_kernel=use_kernel, interpret=use_kernel,

@@ -151,9 +151,7 @@ class TestCloneChainRouting:
 
         key = jax.random.PRNGKey(0)
         logw = jnp.zeros((4,))
-        tables = jnp.asarray(
-            [[0, 1], [2, -1], [3, 4], [5, -1]], jnp.int32
-        )
+        tables = jnp.asarray([[0, 1], [2, -1], [3, 4], [5, -1]], jnp.int32)
         return key, logw, tables
 
     def test_oracle_route(self, monkeypatch):

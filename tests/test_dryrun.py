@@ -61,9 +61,7 @@ class TestShardingRules:
     def test_axis_used_once(self):
         rules = default_rules(self.mesh())
         # both dims want "model": only the first (in priority order) gets it
-        spec = spec_for(
-            self.mesh(), rules, (64, 6400), ("experts", "mlp")
-        )
+        spec = spec_for(self.mesh(), rules, (64, 6400), ("experts", "mlp"))
         assert spec == P("model")
 
     def test_vocab_padding_divisible(self):

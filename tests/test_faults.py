@@ -222,9 +222,7 @@ class TestRecovery:
                 FaultEvent(FaultKind.STEP_FAILURE, tick=7),
             ]
         )
-        sched, results = run_sched(
-            model, reqs(), dict(max_seqs=10), faults=inj
-        )
+        sched, results = run_sched(model, reqs(), dict(max_seqs=10), faults=inj)
         for rid in ("a", "b"):
             assert results[rid].status == "ok"
             assert_bit_exact(results[rid], ref[rid])
@@ -256,9 +254,7 @@ class TestRecovery:
             dict(max_seqs=6),
         )
         log = SchedulerEventLog()
-        inj = FaultInjector(
-            [FaultEvent(FaultKind.LATENCY, tick=2, delay_s=0.05)]
-        )
+        inj = FaultInjector([FaultEvent(FaultKind.LATENCY, tick=2, delay_s=0.05)])
         sched, results = run_sched(
             model, [req], dict(max_seqs=6), faults=inj, event_log=log
         )
@@ -268,13 +264,9 @@ class TestRecovery:
 
     def test_retries_exhausted_surfaces_typed(self, model):
         req = make_request(model, "a", 5, n=4, steps=6, plen=4)
-        inj = FaultInjector(
-            [FaultEvent(FaultKind.STEP_FAILURE, tick=1, repeats=5)]
-        )
+        inj = FaultInjector([FaultEvent(FaultKind.STEP_FAILURE, tick=1, repeats=5)])
         eng = make_engine(model, max_seqs=6)
-        sched = Scheduler(
-            eng, faults=inj, retry_policy=RetryPolicy(max_retries=2)
-        )
+        sched = Scheduler(eng, faults=inj, retry_policy=RetryPolicy(max_retries=2))
         sched.submit(req)
         with pytest.raises(FaultRetriesExhausted) as exc:
             sched.run()
@@ -306,9 +298,7 @@ class TestTypedTerminations:
             make_request(model, "b", 2, n=4, steps=10, plen=9),
         ]
         ref = dict(run_sched(model, reqs(), dict(max_seqs=10))[1])
-        inj = FaultInjector(
-            [FaultEvent(FaultKind.NAN_LOGITS, tick=3, rid="a")]
-        )
+        inj = FaultInjector([FaultEvent(FaultKind.NAN_LOGITS, tick=3, rid="a")])
         sched, results = run_sched(
             model, reqs(), dict(max_seqs=10), faults=inj, watchdog=True
         )
@@ -482,9 +472,7 @@ class TestCheckpointRestore:
 def record_and_replay_chaos(model, reqs, engine_kw, schedule, **sched_kw):
     eng = make_engine(model, **engine_kw)
     log = SchedulerEventLog()
-    sched = Scheduler(
-        eng, event_log=log, faults=FaultInjector(schedule), **sched_kw
-    )
+    sched = Scheduler(eng, event_log=log, faults=FaultInjector(schedule), **sched_kw)
     for r in reqs:
         sched.submit(r)
     sched.run()

@@ -82,7 +82,9 @@ class TestStatisticalCorrectness:
             zs.append(float(res.log_evidence))
         assert abs(np.mean(zs) - exact) < 1.0, (np.mean(zs), exact)
 
-    @pytest.mark.parametrize("resampler", ["multinomial", "systematic", "stratified", "residual"])
+    @pytest.mark.parametrize(
+        "resampler", ["multinomial", "systematic", "stratified", "residual"]
+    )
     def test_all_resamplers_consistent(self, data, resampler):
         exact = kalman_log_evidence(data)
         cfg = FilterConfig(n_particles=512, n_steps=len(data), resampler=resampler)
@@ -137,7 +139,9 @@ class TestModeEquivalence:
         """Lazy memory stays near the sparse bound; eager pays N*T."""
         used = {}
         for mode in (CopyMode.EAGER, CopyMode.LAZY_SR):
-            cfg = FilterConfig(n_particles=128, n_steps=len(data), mode=mode, block_size=1)
+            cfg = FilterConfig(
+                n_particles=128, n_steps=len(data), mode=mode, block_size=1
+            )
             pf = ParticleFilter(lgssm_def(), cfg)
             res = pf.jitted()(jax.random.PRNGKey(3), None, jnp.asarray(data))
             used[mode] = int(res.store.peak_blocks)

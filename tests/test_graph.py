@@ -193,9 +193,7 @@ class TestSingleReference:
             rt.write(x2, "value", 10)
             y2 = rt.read(x2, "next")
             rt.write(y2, "value", 20)
-            outs[mode] = [
-                rt.read(v, "value") for v in (x1, y1, z1, x2, y2)
-            ]
+            outs[mode] = [rt.read(v, "value") for v in (x1, y1, z1, x2, y2)]
         assert outs[CopyMode.LAZY] == outs[CopyMode.LAZY_SR]
 
 

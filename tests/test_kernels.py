@@ -36,7 +36,9 @@ def tol(dtype):
 
 
 class TestCowGather:
-    @pytest.mark.parametrize("num_blocks,block", [(8, (16,)), (64, (8, 32)), (16, (4, 4, 8))])
+    @pytest.mark.parametrize(
+        "num_blocks,block", [(8, (16,)), (64, (8, 32)), (16, (4, 4, 8))]
+    )
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
     def test_sweep(self, num_blocks, block, dtype):
         if dtype == jnp.int32:
@@ -164,7 +166,12 @@ class TestPagedAttention:
 class TestSSDScan:
     @pytest.mark.parametrize(
         "s,q,h,p,n",
-        [(64, 16, 2, 8, 16), (64, 64, 3, 8, 16), (128, 32, 2, 16, 32), (32, 8, 1, 4, 8)],
+        [
+            (64, 16, 2, 8, 16),
+            (64, 64, 3, 8, 16),
+            (128, 32, 2, 16, 32),
+            (32, 8, 1, 4, 8),
+        ],
     )
     def test_sweep(self, s, q, h, p, n):
         ks = jax.random.split(KEY, 5)

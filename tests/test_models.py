@@ -115,7 +115,14 @@ def test_full_config_dimensions(arch):
         "musicgen_large": (48, 2048, 32, 32, 8192, 2048),
         "mamba2_130m": (24, 768, 12, 12, 0, 50280),
     }[arch]
-    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.vocab_size)
+    got = (
+        cfg.n_layers,
+        cfg.d_model,
+        cfg.n_heads,
+        cfg.n_kv_heads,
+        cfg.d_ff,
+        cfg.vocab_size,
+    )
     assert got == expected, (arch, got, expected)
 
 
@@ -163,8 +170,12 @@ class TestSSD:
         cm = jax.random.normal(k5, (b, s, 1, n))
         y8, h8 = ssm_lib.ssd_chunked(xh, dt, a, bm, cm, chunk=8)
         y32, h32 = ssm_lib.ssd_chunked(xh, dt, a, bm, cm, chunk=32)
-        np.testing.assert_allclose(np.asarray(y8), np.asarray(y32), rtol=2e-4, atol=2e-4)
-        np.testing.assert_allclose(np.asarray(h8), np.asarray(h32), rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(
+            np.asarray(y8), np.asarray(y32), rtol=2e-4, atol=2e-4
+        )
+        np.testing.assert_allclose(
+            np.asarray(h8), np.asarray(h32), rtol=2e-4, atol=2e-4
+        )
 
     def test_matches_naive_recurrence(self):
         b, s, h, p, n = 1, 16, 2, 4, 8

@@ -103,9 +103,7 @@ class TestPGibbsLifecycle:
 
         key, ys = data
         mesh = Mesh(np.array(jax.devices()[:1]), ("shards",))
-        pg = ParticleGibbs(
-            lgssm_def(), FilterConfig(**self._base(mesh=mesh))
-        )
+        pg = ParticleGibbs(lgssm_def(), FilterConfig(**self._base(mesh=mesh)))
         out = pg.run(key, None, ys, n_iters=self.ITERS)
         assert not bool(out.oom)
         np.testing.assert_array_equal(
@@ -151,9 +149,7 @@ class TestSweepCompileCache:
     def test_repeated_run_triggers_zero_recompiles(self):
         key = jax.random.PRNGKey(3)
         ys = jax.random.normal(key, (12,))
-        pg = ParticleGibbs(
-            lgssm_def(), FilterConfig(n_particles=16, n_steps=12)
-        )
+        pg = ParticleGibbs(lgssm_def(), FilterConfig(n_particles=16, n_steps=12))
         pg.run(key, None, ys, n_iters=2)  # warm: traces the sweep once
         warm = pg.executor.stats.compiles
         assert warm >= 1
@@ -169,9 +165,7 @@ class TestSweepCompileCache:
         data, not a trace constant."""
         key = jax.random.PRNGKey(5)
         ys = jax.random.normal(key, (10,))
-        pg = ParticleGibbs(
-            lgssm_def(), FilterConfig(n_particles=8, n_steps=10)
-        )
+        pg = ParticleGibbs(lgssm_def(), FilterConfig(n_particles=8, n_steps=10))
         pg.run(key, None, ys, n_iters=4)
         assert pg.executor.stats.compiles == 1
 

@@ -70,9 +70,7 @@ class TestFreeStackInvariants:
                 granted = int((ids >= 0).sum())
                 # candidate i exists iff i < free_before
                 expect_oom |= bool((commit & (np.arange(k) >= free_before)).any())
-                assert granted == int(
-                    (commit & (np.arange(k) < free_before)).sum()
-                )
+                assert granted == int((commit & (np.arange(k) < free_before)).sum())
                 for b in ids[ids >= 0]:
                     assert int(b) not in live
                     live[int(b)] = 1
@@ -279,9 +277,7 @@ class TestNoScanOnHotPath:
             use_kernels=use_kernels,
         )
         s = store_lib.create(cfg)
-        jax.make_jaxpr(lambda st, v: store_lib.append(cfg, st, v))(
-            s, jnp.ones((8,))
-        )
+        jax.make_jaxpr(lambda st, v: store_lib.append(cfg, st, v))(s, jnp.ones((8,)))
         jax.make_jaxpr(
             lambda st, p, v: store_lib.write_at(cfg, st, p, v)
         )(s, jnp.zeros((8,), jnp.int32), jnp.ones((8,)))

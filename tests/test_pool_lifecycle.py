@@ -105,9 +105,7 @@ class TestGrowProperties:
         # pop order: the old free set pops first, in its old order, then
         # the fresh ids ascending
         old_top = int(pool.free_top)
-        old_order = [
-            int(pool.free_stack[i]) for i in range(old_top - 1, -1, -1)
-        ]
+        old_order = [int(pool.free_stack[i]) for i in range(old_top - 1, -1, -1)]
         expect = old_order + list(range(nb, new_nb))
         g2, got = pool_lib.alloc(g, len(expect))
         assert list(np.asarray(got)) == expect, seed
@@ -195,9 +193,7 @@ class TestCompactProperties:
         from repro.distributed import sharded_store as sharded_lib
 
         mesh = Mesh(np.array(jax.devices()[:1]), ("shards",))
-        base = StoreConfig(
-            mode=mode, n=8, block_size=2, max_blocks=4, item_shape=()
-        )
+        base = StoreConfig(mode=mode, n=8, block_size=2, max_blocks=4, item_shape=())
         shcfg = sharded_lib.ShardedStoreConfig(base=base, num_shards=1)
         st = sharded_lib.create(shcfg, mesh)
         for t in range(5):
@@ -247,9 +243,7 @@ class TestLifecycleFilter:
         )
         return res, trajs
 
-    def test_overflow_without_lifecycle_sets_oom_and_corrupts(
-        self, data, reference
-    ):
+    def test_overflow_without_lifecycle_sets_oom_and_corrupts(self, data, reference):
         """The bug on main: a full pool silently dropped appends to the
         dump row and returned garbage trajectories.  The flag is at
         least *surfaced* now — and the output is demonstrably corrupt."""

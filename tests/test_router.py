@@ -1,0 +1,416 @@
+"""Replicated-serving router tests (DESIGN.md §12).
+
+The contract under test:
+
+  * **replication is invisible to results**: requests routed across two
+    scheduler replicas produce tokens, log-weights, and log-evidence
+    **bit-identical** to the same requests on a single replica (and to
+    standalone decodes) — placement can change *when* a request runs,
+    never *what* it computes;
+  * **placement is deterministic and policy-pluggable**: least-loaded,
+    round-robin, and session-affinity place by the same slot/block
+    accounting the schedulers' own admission uses, and the same
+    ``Router`` class drives real and simulated fleets decision-exactly
+    (the differential oracle extends to the fleet level);
+  * **saturation surfaces typed**: a fleet that can never place its
+    waiters raises :class:`AllReplicasSaturated` after a recorded
+    ``("saturated", ...)`` event instead of spinning — identically in
+    real and simulated fleets;
+  * **preemption policies** pick the victim the SLA says they should.
+
+Runs single-device by default; under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the CI
+tests-multidevice job) the replicas land on distinct faked host
+devices via :func:`make_replicas`.
+"""
+
+from __future__ import annotations
+
+import types
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models.model import LanguageModel
+from repro.serving.engine import ServeEngine
+from repro.serving.faults import AllReplicasSaturated
+from repro.serving.kv_cache import KVCacheConfig
+from repro.serving.router import (
+    PLACEMENT_POLICIES,
+    Router,
+    RouterEventLog,
+    make_replicas,
+)
+from repro.serving.scheduler import (
+    DecodeRequest,
+    LongestWait,
+    NewestFirst,
+    Scheduler,
+    SlaAware,
+    resolve_preempt_policy,
+    stream_tokens,
+)
+from repro.serving.sim import CostModel, SimScheduler, simulate_router
+from repro.serving.traces import staggered
+
+KEY = jax.random.PRNGKey(0)
+BS = 4
+
+COST = CostModel(
+    step_s=1e-3, prefill_s=2e-3, grow_s_per_block=1e-5, compact_s_per_block=1e-5
+)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = smoke_config("musicgen_large")
+    lm = LanguageModel(cfg)
+    params, _ = lm.init(KEY)
+    return cfg, lm, params
+
+
+def make_cache_cfg(model, max_seqs, num_blocks=0, max_blocks_per_seq=24):
+    cfg, _, _ = model
+    return KVCacheConfig(
+        n_layers=cfg.n_layers,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.hd,
+        block_size=BS,
+        max_seqs=max_seqs,
+        max_blocks_per_seq=max_blocks_per_seq,
+        num_blocks=num_blocks,
+        dtype=cfg.dtype,
+    )
+
+
+def make_request(model, rid, seed, n, steps, plen, arrive_at=0, deadline=None):
+    cfg, _, _ = model
+    return DecodeRequest(
+        rid=rid,
+        prompt=jax.random.randint(
+            jax.random.PRNGKey(seed), (plen,), 0, cfg.vocab_size
+        ),
+        n_particles=n,
+        steps=steps,
+        key=jax.random.PRNGKey(100 + seed),
+        target_temp=0.5,
+        token_block_size=BS,
+        arrive_at=arrive_at,
+        deadline=deadline,
+    )
+
+
+def real_fleet(model, n_replicas, max_seqs, placement="least_loaded", **sched_kw):
+    cfg, lm, params = model
+    ccfg = make_cache_cfg(model, max_seqs=max_seqs)
+
+    def build(i, dev):
+        return Scheduler(ServeEngine(lm, params, ccfg), **sched_kw)
+
+    scheds, devs = make_replicas(build, n=n_replicas)
+    return Router(
+        scheds, placement=placement, event_log=RouterEventLog(), devices=devs
+    )
+
+
+def assert_results_bit_exact(res_a, res_b, rids):
+    assert set(res_a) >= set(rids) and set(res_b) >= set(rids)
+    for rid in rids:
+        a, b = res_a[rid], res_b[rid]
+        np.testing.assert_array_equal(np.asarray(a.tokens), np.asarray(b.tokens))
+        np.testing.assert_array_equal(
+            np.asarray(a.log_weights), np.asarray(b.log_weights)
+        )
+        assert float(a.log_evidence) == float(b.log_evidence)
+
+
+# -- the acceptance gate ------------------------------------------------------
+
+
+class TestReplicationBitExact:
+    def test_two_replicas_bit_exact_with_one(self, model):
+        """Four requests through a 2-replica fleet == the same four
+        through a 1-replica fleet, token for token (and weight, and
+        logZ) — routing changes placement, never results."""
+        reqs = [
+            make_request(model, f"r{i}", 20 + i, n=4, steps=8 + i, plen=4 + i)
+            for i in range(4)
+        ]
+        two = real_fleet(model, 2, max_seqs=8)
+        one = real_fleet(model, 1, max_seqs=8)
+        for r in reqs:
+            two.submit(r)
+            one.submit(r)
+        res2, res1 = two.run(), one.run()
+        assert_results_bit_exact(res2, res1, [r.rid for r in reqs])
+        # both replicas actually served work
+        placed = {e[3] for e in two.event_log.events if e[0] == "place"}
+        assert placed == {0, 1}
+
+    def test_fleet_streaming_parity(self, model):
+        """Router.stream() delivers every replica's committed tokens;
+        reconstruction is bit-exact with the collected results."""
+        reqs = [
+            make_request(model, "a", 1, n=4, steps=8, plen=4),
+            make_request(model, "b", 2, n=4, steps=10, plen=6),
+        ]
+        fleet = real_fleet(model, 2, max_seqs=4)
+        for r in reqs:
+            fleet.submit(r)
+        events = list(fleet.stream())
+        res = fleet.results
+        for r in reqs:
+            evs = [ev for ev in events if ev.rid == r.rid]
+            assert evs[-1].final and evs[-1].status == res[r.rid].status
+            rec = stream_tokens(evs, n=r.n_particles, steps=r.steps)
+            np.testing.assert_array_equal(rec, np.asarray(res[r.rid].tokens))
+
+
+# -- placement ----------------------------------------------------------------
+
+
+def sim_fleet(model, n_replicas, max_seqs, placement="least_loaded", **knobs):
+    ccfg = make_cache_cfg(model, max_seqs=max_seqs)
+    scheds = [SimScheduler(ccfg, COST, **knobs) for _ in range(n_replicas)]
+    return Router(scheds, placement=placement, event_log=RouterEventLog())
+
+
+class TestPlacement:
+    def run_trace(self, model, placement, trace):
+        fleet = sim_fleet(model, 2, max_seqs=8, placement=placement)
+        for r in trace.requests:
+            fleet.submit(r)
+        fleet.run()
+        return fleet
+
+    def test_round_robin_alternates(self, model):
+        trace = staggered(4, 6, n_particles=4, steps=4, plen=4, seed=0)
+        fleet = self.run_trace(model, "round_robin", trace)
+        places = [e[3] for e in fleet.event_log.events if e[0] == "place"]
+        assert places == [0, 1, 0, 1]
+
+    def test_least_loaded_spreads_a_burst(self, model):
+        trace = staggered(4, 0, n_particles=4, steps=6, plen=4, seed=0)
+        fleet = self.run_trace(model, "least_loaded", trace)
+        places = [e[3] for e in fleet.event_log.events if e[0] == "place"]
+        assert sorted(places) == [0, 0, 1, 1]
+
+    def test_affinity_keeps_sessions_together(self, model):
+        """rids sharing a ``"sess/"`` prefix land on one replica even
+        when load would spread them."""
+        ccfg = make_cache_cfg(model, max_seqs=8)
+        fleet = Router(
+            [SimScheduler(ccfg, COST) for _ in range(2)],
+            placement="affinity",
+            event_log=RouterEventLog(),
+        )
+        from repro.serving.traces import TraceRequest
+
+        for i, rid in enumerate(["s0/a", "s1/a", "s0/b", "s1/b", "s0/c"]):
+            fleet.submit(
+                TraceRequest(
+                    rid=rid,
+                    arrive_at=i * 3,
+                    n_particles=4,
+                    steps=6,
+                    plen=4,
+                    seed=i,
+                )
+            )
+        fleet.run()
+        by_session = {}
+        for e in fleet.event_log.events:
+            if e[0] == "place":
+                by_session.setdefault(e[1].split("/")[0], set()).add(e[3])
+        assert all(len(v) == 1 for v in by_session.values()), by_session
+        assert by_session["s0"] != by_session["s1"]  # spread across the fleet
+
+    def test_unknown_placement_rejected(self, model):
+        ccfg = make_cache_cfg(model, max_seqs=4)
+        with pytest.raises(ValueError, match="unknown placement"):
+            Router([SimScheduler(ccfg, COST)], placement="nope")
+        assert set(PLACEMENT_POLICIES) == {
+            "least_loaded",
+            "round_robin",
+            "affinity",
+        }
+
+    def test_placement_respects_capacity(self, model):
+        """A request wider than one replica's slot table goes to the
+        replica that fits it, regardless of load order."""
+        ccfg_small = make_cache_cfg(model, max_seqs=4)
+        ccfg_big = make_cache_cfg(model, max_seqs=12)
+        fleet = Router(
+            [SimScheduler(ccfg_small, COST), SimScheduler(ccfg_big, COST)],
+            event_log=RouterEventLog(),
+        )
+        from repro.serving.traces import TraceRequest
+
+        fleet.submit(
+            TraceRequest(rid="wide", arrive_at=0, n_particles=8, steps=4, plen=4, seed=0)
+        )
+        fleet.run()
+        assert fleet.event_log.events[0] == ("place", "wide", 0, 1)
+
+
+# -- saturation ---------------------------------------------------------------
+
+
+class TestSaturation:
+    def test_fleet_saturation_raises_typed_and_differential(self, model):
+        """A request no replica can ever hold: the real fleet and the
+        simulated fleet emit the same ("saturated", ...) event and
+        raise the same typed error."""
+        reqs = [make_request(model, "huge", 1, n=12, steps=4, plen=4)]
+        logs = []
+        for fleet in (
+            real_fleet(model, 2, max_seqs=4),
+            sim_fleet(model, 2, max_seqs=4),
+        ):
+            for r in reqs:
+                fleet.submit(r)
+            with pytest.raises(AllReplicasSaturated) as exc:
+                fleet.run()
+            assert exc.value.rids == ("huge",)
+            logs.append(fleet.event_log.events)
+        assert logs[0] == logs[1] == [("saturated", 0, ("huge",))]
+
+    def test_scheduler_no_progress_guard_differential(self, model):
+        """The scheduler-level guard behind the router's saturation
+        surface: if a tick starts with waiters but nothing active (only
+        reachable through a pathological admission hook — normal
+        admission either admits, raises AdmissionRefused, or
+        fast-forwards), the tick must raise typed instead of burning an
+        empty decode forever.  Real and sim agree event-for-event."""
+        from repro.serving.scheduler import SchedulerEventLog
+        from repro.serving.traces import Trace, TraceRequest
+
+        cfg, lm, params = model
+        ccfg = make_cache_cfg(model, max_seqs=8)
+        log = SchedulerEventLog()
+        sched = Scheduler(ServeEngine(lm, params, ccfg), event_log=log)
+        sched._admit_ready = lambda: None  # the pathological hook
+        sched.submit(make_request(model, "stuck", 1, n=4, steps=4, plen=4))
+        with pytest.raises(AllReplicasSaturated) as exc:
+            sched.run()
+        assert exc.value.tick == 0 and exc.value.rids == ("stuck",)
+
+        sim = SimScheduler(ccfg, COST)
+        sim._admit_ready = lambda: None
+        sim.submit(
+            TraceRequest(
+                rid="stuck", arrive_at=0, n_particles=4, steps=4, plen=4, seed=1
+            )
+        )
+        with pytest.raises(AllReplicasSaturated) as sim_exc:
+            sim.run()
+        assert sim_exc.value.tick == 0 and sim_exc.value.rids == ("stuck",)
+        from repro.serving.sim import first_divergence
+
+        assert first_divergence(log.decisions, sim.decisions) is None
+
+    def test_simulate_router_helper(self, model):
+        """simulate_router drives a whole trace through a sim fleet and
+        reports placement latency percentiles in rounds."""
+        trace = staggered(6, 2, n_particles=4, steps=8, plen=6, seed=0)
+        router = simulate_router(
+            trace, make_cache_cfg(model, max_seqs=8), COST, n_replicas=2
+        )
+        assert set(router.results) == {r.rid for r in trace.requests}
+        lat = router.event_log.latency_rounds()
+        assert set(lat) == {
+            "queue_p50",
+            "queue_p99",
+            "completion_p50",
+            "completion_p99",
+        }
+        assert lat["queue_p50"] == 0.0  # two replicas absorb this trace
+        util = router.utilization()
+        assert sum(u["placed"] for u in util) == 6
+        assert sum(u["completed"] for u in util) == 6
+
+
+# -- preemption policies ------------------------------------------------------
+
+
+def fake_state(rid, *, arrive_at=0, deadline=None, steps=10, t_done=0):
+    req = types.SimpleNamespace(
+        rid=rid, arrive_at=arrive_at, deadline=deadline, steps=steps
+    )
+    return types.SimpleNamespace(req=req, t_done=t_done, n=4)
+
+
+class TestPreemptPolicies:
+    def test_newest_first_is_lifo(self):
+        a, b, c = (fake_state(r) for r in "abc")
+        assert NewestFirst().select([a, b, c], tick=5) is c
+
+    def test_sla_aware_evicts_loosest_slack(self):
+        """The victim is the request that can best afford it: no
+        deadline beats loose deadline beats tight deadline."""
+        tight = fake_state("tight", deadline=12, steps=10, t_done=6)
+        loose = fake_state("loose", deadline=100, steps=10, t_done=6)
+        none = fake_state("none", deadline=None, steps=10, t_done=6)
+        pol = SlaAware()
+        assert pol.select([tight, loose, none], tick=5) is none
+        assert pol.select([tight, loose], tick=5) is loose
+        assert pol.select([loose, tight], tick=5) is loose
+
+    def test_sla_aware_ties_break_newest(self):
+        a = fake_state("a", deadline=None)
+        b = fake_state("b", deadline=None)
+        assert SlaAware().select([a, b], tick=0) is b
+
+    def test_longest_wait_protects_oldest(self):
+        old = fake_state("old", arrive_at=0)
+        new = fake_state("new", arrive_at=9)
+        assert LongestWait().select([old, new], tick=10) is new
+
+    def test_resolve(self):
+        assert isinstance(resolve_preempt_policy("sla"), SlaAware)
+        assert isinstance(resolve_preempt_policy(None), NewestFirst)
+        pol = LongestWait()
+        assert resolve_preempt_policy(pol) is pol
+        with pytest.raises(ValueError, match="unknown preempt policy"):
+            resolve_preempt_policy("bogus")
+
+    def test_policy_differential_real_vs_sim(self, model):
+        """Pressure preemption under the SLA policy: the recorded real
+        run replays decision-exact through the simulator with the same
+        policy object semantics."""
+        from repro.serving.scheduler import SchedulerEventLog
+        from repro.serving.sim import first_divergence, simulate
+
+        cfg, lm, params = model
+        reqs = [
+            make_request(model, "a", 1, n=4, steps=16, plen=4, deadline=200),
+            make_request(model, "b", 2, n=4, steps=16, plen=4, deadline=25),
+        ]
+        import dataclasses
+
+        ccfg = dataclasses.replace(
+            make_cache_cfg(model, max_seqs=8), num_blocks=20
+        )
+        log = SchedulerEventLog()
+        sched = Scheduler(
+            ServeEngine(lm, params, ccfg),
+            grow=False,
+            preempt_policy="sla",
+            event_log=log,
+        )
+        for r in reqs:
+            sched.submit(r)
+        res = sched.run()
+        assert sched.stats.preemptions >= 1
+        # SLA-aware spares tight-deadline "b": the victim was "a"
+        assert any(
+            e[0] == "preempt" and e[1] == "a" for e in log.decisions
+        ), log.decisions
+        assert res["b"].status == "ok"
+        sim_res = simulate(
+            log.to_trace("recorded"), ccfg, COST, grow=False, preempt_policy="sla"
+        )
+        div = first_divergence(log.decisions, sim_res.decisions)
+        assert div is None, div

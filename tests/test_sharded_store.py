@@ -210,7 +210,9 @@ MULTI_SHARD_SCRIPT = textwrap.dedent(
         logzs[mode] = float(res.log_evidence)
         used[mode] = np.asarray(ss.used_blocks_per_shard(pf.sharded_cfg, res.store))
     # identical seeds => identical output regardless of configuration
-    assert logzs[CopyMode.EAGER] == logzs[CopyMode.LAZY] == logzs[CopyMode.LAZY_SR], logzs
+    assert (
+        logzs[CopyMode.EAGER] == logzs[CopyMode.LAZY] == logzs[CopyMode.LAZY_SR]
+    ), logzs
     # lazy per-shard occupancy well under eager's dense N*T/B per shard
     assert used[CopyMode.LAZY_SR].sum() < 0.6 * used[CopyMode.EAGER].sum(), used
     # statistical agreement with the single-device estimate

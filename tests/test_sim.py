@@ -216,9 +216,7 @@ class TestDecisionExact:
             make_request(model, "a", 1, n=4, steps=12, plen=4),
             make_request(model, "b", 2, n=4, steps=12, plen=4),
         ]
-        log, res, _ = record_and_replay(
-            model, reqs, dict(max_seqs=8, num_blocks=8)
-        )
+        log, res, _ = record_and_replay(model, reqs, dict(max_seqs=8, num_blocks=8))
         self.check(log, res)
         assert res.stats.preemptions == 0
         assert any(e[0] == "grow" for e in res.decisions)
@@ -276,9 +274,7 @@ class TestTimePrediction:
     def test_self_prediction(self, recordings):
         for label, (log, wall, ccfg, pre) in recordings.items():
             cost = CostModel.from_event_log(log)
-            res = simulate(
-                log.to_trace(label), ccfg, cost, initial_blocks=pre
-            )
+            res = simulate(log.to_trace(label), ccfg, cost, initial_blocks=pre)
             ratio = res.sim_time_s / wall
             assert 0.75 <= ratio <= 1.25, (label, ratio)
 

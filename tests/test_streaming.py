@@ -1,0 +1,217 @@
+"""Per-token streaming tests (DESIGN.md §12).
+
+The contract under test:
+
+  * **parity**: the tokens delivered through the streaming surface
+    (``Scheduler(on_token=...)`` / :meth:`Scheduler.stream`) reconstruct
+    — via :func:`stream_tokens`'s gather-then-append lineage rewrite —
+    **bit-identically** (content and count) to the batch
+    ``Scheduler.run()`` result, which is itself bit-exact with a
+    standalone decode;
+  * **commit semantics**: events flush only at the executor's trailing
+    chunk edge, so forced mid-stream preemption and rollback-retried
+    fault ticks can never emit a token twice or emit one that a retry
+    later discards;
+  * **termination**: every request's stream ends with exactly one final
+    marker carrying its typed terminal status.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models.model import LanguageModel
+from repro.serving.engine import ServeEngine
+from repro.serving.faults import FaultInjector, chaos_schedule
+from repro.serving.kv_cache import KVCacheConfig
+from repro.serving.scheduler import (
+    DecodeRequest,
+    Scheduler,
+    TokenEvent,
+    stream_tokens,
+)
+
+KEY = jax.random.PRNGKey(0)
+BS = 4
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = smoke_config("musicgen_large")
+    lm = LanguageModel(cfg)
+    params, _ = lm.init(KEY)
+    return cfg, lm, params
+
+
+def make_engine(model, max_seqs, num_blocks=0, max_blocks_per_seq=24):
+    cfg, lm, params = model
+    ccfg = KVCacheConfig(
+        n_layers=cfg.n_layers,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.hd,
+        block_size=BS,
+        max_seqs=max_seqs,
+        max_blocks_per_seq=max_blocks_per_seq,
+        num_blocks=num_blocks,
+        dtype=cfg.dtype,
+    )
+    return ServeEngine(lm, params, ccfg)
+
+
+def make_request(model, rid, seed, n, steps, plen, arrive_at=0):
+    cfg, _, _ = model
+    return DecodeRequest(
+        rid=rid,
+        prompt=jax.random.randint(
+            jax.random.PRNGKey(seed), (plen,), 0, cfg.vocab_size
+        ),
+        n_particles=n,
+        steps=steps,
+        key=jax.random.PRNGKey(100 + seed),
+        target_temp=0.5,
+        token_block_size=BS,
+        arrive_at=arrive_at,
+    )
+
+
+def by_rid(events):
+    out = {}
+    for ev in events:
+        out.setdefault(ev.rid, []).append(ev)
+    return out
+
+
+def assert_stream_matches(events, results, reqs):
+    """The parity oracle: reconstructed streams == batch results."""
+    grouped = by_rid(events)
+    assert set(grouped) == set(r.rid for r in reqs)
+    for r in reqs:
+        evs = grouped[r.rid]
+        finals = [ev for ev in evs if ev.final]
+        tokens = [ev for ev in evs if not ev.final]
+        assert len(finals) == 1 and evs[-1] is finals[0]
+        assert finals[0].status == results[r.rid].status
+        # Committed-once: one event per decoded token, in order.
+        assert [ev.t for ev in tokens] == list(range(len(tokens)))
+        rec = stream_tokens(evs, n=r.n_particles, steps=r.steps)
+        np.testing.assert_array_equal(rec, np.asarray(results[r.rid].tokens))
+
+
+class TestStreamingParity:
+    def test_stream_iterator_bit_exact_with_run(self, model):
+        """Two concurrent requests through Scheduler.stream(): every
+        token arrives exactly once and the reconstruction is bit-exact
+        with the batch result."""
+        reqs = [
+            make_request(model, "a", 1, n=6, steps=10, plen=6),
+            make_request(model, "b", 2, n=4, steps=13, plen=9),
+        ]
+        eng = make_engine(model, max_seqs=10)
+        sched = Scheduler(eng)
+        for r in reqs:
+            sched.submit(r)
+        events = list(sched.stream())
+        assert all(isinstance(ev, TokenEvent) for ev in events)
+        assert_stream_matches(events, sched.results, reqs)
+
+    def test_callback_sees_tokens_before_run_returns(self, model):
+        """on_token fires mid-run: early tokens are delivered while the
+        request's batch result does not exist yet.  (The tail of the
+        stream flushes at the trailing edge of the completing tick, so
+        only the last tick's tokens may coincide with the result.)"""
+        req = make_request(model, "a", 3, n=4, steps=8, plen=4)
+        eng = make_engine(model, max_seqs=4)
+        seen = []
+        sched = Scheduler(eng)
+        sched.on_token = lambda ev: seen.append((ev, len(sched.results)))
+        sched.submit(req)
+        res = sched.run()
+        early = [n_done for ev, n_done in seen if not ev.final and ev.t == 0]
+        assert early == [0]  # the first token arrived before any result
+        assert_stream_matches([ev for ev, _ in seen], res, [req])
+
+    def test_staggered_arrival_streams(self, model):
+        reqs = [
+            make_request(model, "a", 5, n=6, steps=12, plen=4),
+            make_request(model, "b", 6, n=4, steps=8, plen=6, arrive_at=5),
+        ]
+        eng = make_engine(model, max_seqs=10)
+        sched = Scheduler(eng)
+        for r in reqs:
+            sched.submit(r)
+        events = list(sched.stream())
+        assert_stream_matches(events, sched.results, reqs)
+
+
+class TestStreamingUnderDisruption:
+    def test_forced_mid_stream_preemption(self, model):
+        """Preempt at t=5 and resume: the replay must not re-emit the
+        five already-streamed tokens, and parity holds end to end."""
+        req = make_request(model, "a", 7, n=8, steps=12, plen=6)
+        fired = []
+
+        def force_once(sched):
+            active = list(sched._active)
+            if active and active[0].t_done == 5 and not fired:
+                fired.append(True)
+                sched.preempt("a")
+
+        eng = make_engine(model, max_seqs=8)
+        sched = Scheduler(eng, on_boundary=force_once)
+        sched.submit(req)
+        events = list(sched.stream())
+        assert sched.stats.preemptions == 1
+        assert sched.stats.replayed_tokens == 5
+        assert_stream_matches(events, sched.results, [req])
+
+    def test_pressure_preemption_streams_both(self, model):
+        """Pool pressure on a fixed pool: the victim's stream pauses
+        across eviction and resumes without duplication."""
+        reqs = [
+            make_request(model, "a", 1, n=4, steps=16, plen=4),
+            make_request(model, "b", 2, n=4, steps=16, plen=4),
+        ]
+        eng = make_engine(model, max_seqs=8, num_blocks=20)
+        sched = Scheduler(eng, grow=False)
+        for r in reqs:
+            sched.submit(r)
+        events = list(sched.stream())
+        assert sched.stats.preemptions >= 1
+        assert_stream_matches(events, sched.results, reqs)
+
+    def test_chaos_schedule_rollbacks_never_leak_tokens(self, model):
+        """A seeded fault schedule (transient failures + OOM retries):
+        rolled-back attempts flush nothing, so the stream still has
+        exactly one event per token and reconstructs bit-exactly."""
+        reqs = [
+            make_request(model, "a", 11, n=4, steps=10, plen=4),
+            make_request(model, "b", 12, n=4, steps=8, plen=6),
+        ]
+        schedule = chaos_schedule(7, 14, rate=0.4, max_repeats=2)
+        assert schedule  # seed 7 does inject failures
+        eng = make_engine(model, max_seqs=8)
+        sched = Scheduler(eng, faults=FaultInjector(schedule))
+        for r in reqs:
+            sched.submit(r)
+        events = list(sched.stream())
+        assert sched.stats.retries >= 1
+        assert_stream_matches(events, sched.results, reqs)
+
+    def test_fault_free_and_chaos_streams_identical(self, model):
+        """The streaming analogue of fault invisibility: the event
+        sequence for a request is identical (tick stamps aside) with
+        and without recoverable faults."""
+        req = make_request(model, "c", 13, n=4, steps=8, plen=4)
+        streams = []
+        for schedule in ((), chaos_schedule(9, 10, rate=0.5, max_repeats=2)):
+            eng = make_engine(model, max_seqs=4)
+            sched = Scheduler(eng, faults=FaultInjector(schedule))
+            sched.submit(req)
+            streams.append([ev for ev in sched.stream() if not ev.final])
+        assert len(streams[0]) == len(streams[1]) == req.steps
+        for ev_a, ev_b in zip(streams[0], streams[1], strict=True):
+            assert ev_a.t == ev_b.t
+            np.testing.assert_array_equal(ev_a.token, ev_b.token)

@@ -29,9 +29,7 @@ class TestGenerators:
         assert t.name == "stagger3"
         assert [r.arrive_at for r in t.requests] == [0, 3, 6, 9]
         assert [r.rid for r in t.requests] == ["r0", "r1", "r2", "r3"]
-        assert all(
-            (r.n_particles, r.steps, r.plen) == (5, 7, 6) for r in t.requests
-        )
+        assert all((r.n_particles, r.steps, r.plen) == (5, 7, 6) for r in t.requests)
         assert t.total_tokens == 4 * 5 * 7
         assert traces_lib.staggered(2, 0, **SIZES).name == "burst"
 

@@ -85,7 +85,9 @@ class TestPipeline:
         p2 = TokenPipeline(cfg)
         b1 = p1.batch(7)
         b2 = p2.batch(7)  # fresh pipeline, same step -> same data
-        np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+        np.testing.assert_array_equal(
+            np.asarray(b1["tokens"]), np.asarray(b2["tokens"])
+        )
 
     def test_elastic_resharding_of_stream(self):
         cfg = DataConfig(vocab_size=64, seq_len=16, global_batch=8)

@@ -199,9 +199,7 @@ class TestRooflineAcceptance:
     """The PR's perf acceptance, priced host-independently."""
 
     def test_append_bytes_and_passes(self):
-        cfg = StoreConfig(
-            mode=CopyMode.LAZY_SR, n=1024, block_size=4, max_blocks=16
-        )
+        cfg = StoreConfig(mode=CopyMode.LAZY_SR, n=1024, block_size=4, max_blocks=16)
         kw = dict(
             n=cfg.n,
             touched=cfg.n,
@@ -226,9 +224,7 @@ class TestRooflineAcceptance:
     def test_masked_write_scales_with_touched_rows(self):
         """The kernel only moves touched blocks; the jnp paths move all
         n — the satellite's dense-copy-waste fix, visible in the model."""
-        kw = dict(
-            n=1024, copies=0, num_blocks=4096, block_bytes=16, item_bytes=4
-        )
+        kw = dict(n=1024, copies=0, num_blocks=4096, block_bytes=16, item_bytes=4)
         sparse = append_cost("kernel", touched=32, **kw)
         dense = append_cost("kernel", touched=1024, **kw)
         assert sparse.bytes < dense.bytes
